@@ -1,0 +1,76 @@
+"""Shared benchmark helpers.
+
+Rows are (name, us_per_call, derived) — `us_per_call` is the wall-clock of
+the measured run (compile excluded where it matters is not attempted on
+CPU; it's a harness-time figure), `derived` the paper-relevant metric.
+
+Default sizes are CI-scale (1 CPU core); set BENCH_FULL=1 for paper-scale
+(128/1024 hosts, MiB messages) — same code, bigger constants.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import make_lb
+from repro.netsim import SimConfig, Simulator, summarize
+
+FULL = bool(int(os.environ.get("BENCH_FULL", "0")))
+
+
+def ci_cfg(**kw) -> SimConfig:
+    if FULL:
+        base = dict(
+            n_hosts=128, hosts_per_tor=16, uplinks_per_tor=16, evs_size=65536,
+            queue_capacity=85, init_cwnd_pkts=85, max_cwnd_pkts=170,
+            rto_ticks=854, max_msg_pkts=4096,
+        )
+    else:
+        base = dict(
+            n_hosts=64, hosts_per_tor=8, uplinks_per_tor=8, evs_size=256,
+            queue_capacity=64, init_cwnd_pkts=50, max_cwnd_pkts=100,
+            rto_ticks=500, max_msg_pkts=1024,
+        )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def msg(pkts_ci: int, pkts_full: int) -> int:
+    return pkts_full if FULL else pkts_ci
+
+
+def lb_for(cfg: SimConfig, name: str, **kw):
+    return make_lb(name, evs_size=kw.pop("evs_size", cfg.evs_size), **kw)
+
+
+def run_one(cfg, wl, lb, ticks, failures=None, watch=None, seed=0):
+    sim = Simulator(cfg, wl, lb, failures=failures, watch_queues=watch, seed=seed)
+    t0 = time.time()
+    st, tr = sim.run(ticks)
+    jax.block_until_ready(st.c_done)
+    wall = time.time() - t0
+    return sim, st, tr, summarize(sim, st), wall
+
+
+class Rows:
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str):
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+    def extend(self, other: "Rows"):
+        self.rows.extend(other.rows)
+
+
+def completion_row(rows: Rows, tag: str, s, wall: float):
+    rows.add(
+        tag,
+        wall * 1e6,
+        f"runtime_ticks={s.runtime_ticks};completed={s.completed}/{s.n_conns};"
+        f"drops={s.drops_cong}+{s.drops_fail};timeouts={s.timeouts}",
+    )

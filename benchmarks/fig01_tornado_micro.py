@@ -1,0 +1,35 @@
+"""Fig 1: tornado microscopics — uplink utilization and queue occupancy over
+time, OPS (noisy, queues above Kmin) vs REPS (converges below Kmin)."""
+import numpy as np
+
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import Topology, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    wl = workloads.tornado(cfg.n_hosts, msg(512, 4096))
+    topo = Topology.build(cfg)
+    watch = topo.t0_up_queues(0)
+    ticks = 2500 if not workloads and False else (6000 if msg(0,1) else 2500)
+    ticks = 2500
+    for lbn in ["ops", "reps"]:
+        sim, st, tr, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), ticks, watch=watch)
+        ql = np.asarray(tr.watch_qlen)  # (T, W)
+        served = np.asarray(tr.watch_served)
+        active = ql.sum(1) + served.sum(1) > 0
+        window = 200
+        util = served[: (len(served) // window) * window].reshape(-1, window, served.shape[1]).mean(1)
+        rows.add(
+            f"fig01/{lbn}",
+            wall * 1e6,
+            f"runtime={s.runtime_ticks};mean_q={ql[active].mean():.2f};"
+            f"max_q={ql.max()};kmin={cfg.kmin};util_std={util.std():.3f};"
+            f"ecn={s.ecn_marks}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fig 2: healthy symmetric network — synthetic benchmarks, DC traces and
+AI collectives across all load balancers."""
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import workloads
+
+LBS = ["ecmp", "ops", "reps", "plb", "flowlet", "mptcp", "mprdma", "bitmap",
+       "adaptive_roce"]
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    n = cfg.n_hosts
+    wls = {
+        "incast8": workloads.incast(n, 8, msg(128, 1024)),
+        "permutation": workloads.permutation(n, msg(256, 2048), seed=1),
+        "tornado": workloads.tornado(n, msg(256, 2048)),
+    }
+    for wname, wl in wls.items():
+        for lbn in LBS:
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 4000)
+            completion_row(rows, f"fig02/{wname}/{lbn}", s, wall)
+    # DC traces (websearch) at moderate load
+    wl = workloads.websearch_trace(n, load=0.6, duration_ticks=1500, seed=2, max_pkts=cfg.max_msg_pkts)
+    for lbn in ["ecmp", "ops", "reps", "plb", "bitmap"]:
+        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 4500)
+        rows.add(
+            f"fig02/websearch60/{lbn}", wall * 1e6,
+            f"completed={s.completed}/{s.n_conns};mean_fct={s.mean_fct_ticks:.0f};"
+            f"p99_fct={s.p99_fct_ticks:.0f}",
+        )
+    # AI collectives
+    for cname, wl in {
+        "ring_allreduce": workloads.ring_allreduce(16, msg(128, 1024)),
+        "butterfly_allreduce": workloads.butterfly_allreduce(16, msg(128, 1024)),
+        "alltoall_w4": workloads.alltoall(16, msg(16, 64), window=4),
+    }.items():
+        for lbn in ["ecmp", "ops", "reps", "adaptive_roce"]:
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 12000)
+            completion_row(rows, f"fig02/{cname}/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fig 3: asymmetric micro — one TOR uplink degraded to half rate; REPS
+skews selection away from the slow link, OPS stays uniform."""
+import numpy as np
+
+from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_one
+from repro.netsim import Topology, failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    topo = Topology.build(cfg)
+    slow = int(topo.t0_up_queues(0)[0])
+    fs = failures.link_degraded([slow], 0, 2**30)
+    wl = workloads.permutation(cfg.n_hosts, msg(256, 2048), seed=3)
+    watch = topo.t0_up_queues(0)
+    for lbn in ["ops", "reps"]:
+        sim, st, tr, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 4000, fs, watch)
+        served = np.asarray(st.q_served)[watch]
+        share = served[0] / max(served.sum(), 1)
+        rows.add(
+            f"fig03/{lbn}", wall * 1e6,
+            f"runtime={s.runtime_ticks};slow_link_share={share:.3f};"
+            f"uniform_share={1/len(watch):.3f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

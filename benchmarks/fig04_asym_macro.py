@@ -1,0 +1,27 @@
+"""Fig 4: asymmetric macro — ~2% of TOR uplinks degraded; synthetic + DC +
+collective workloads across load balancers."""
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    fs = failures.random_degraded_uplinks(cfg, 0.03, seed=4)
+    n = cfg.n_hosts
+    for wname, wl in {
+        "permutation": workloads.permutation(n, msg(256, 2048), seed=1),
+        "tornado": workloads.tornado(n, msg(256, 2048)),
+    }.items():
+        for lbn in ["ecmp", "ops", "reps", "plb", "bitmap", "adaptive_roce"]:
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 5000, fs)
+            completion_row(rows, f"fig04/{wname}/{lbn}", s, wall)
+    wl = workloads.ring_allreduce(16, msg(128, 1024))
+    for lbn in ["ops", "reps", "bitmap"]:
+        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 14000, fs)
+        completion_row(rows, f"fig04/ring_allreduce/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig 5: coexistence — REPS foreground with ECMP background traffic
+(incremental deployment)."""
+from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_one
+from repro.netsim import MixedLB, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    wl, bg = workloads.permutation_with_background(
+        cfg.n_hosts, msg(256, 2048), 0.1, seed=1
+    )
+    import numpy as np
+    for fg in ["ops", "reps"]:
+        lb = MixedLB(lb_for(cfg, fg), lb_for(cfg, "ecmp"), bg)
+        sim, st, tr, s, wall = run_one(cfg, wl, lb, 5000)
+        done_tick = np.asarray(st.c_done_tick)
+        fg_fct = done_tick[~bg & (done_tick > 0)].max() if (~bg).any() else -1
+        bg_fct = done_tick[bg & (done_tick > 0)].max() if bg.any() else -1
+        rows.add(
+            f"fig05/{fg}+ecmp_bg", wall * 1e6,
+            f"fg_runtime={fg_fct};bg_runtime={bg_fct};"
+            f"completed={s.completed}/{s.n_conns}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fig 6: two transient uplink failures (100us-ish and 200us-ish); REPS
+freezes within ~1 RTO and avoids the failed paths; OPS keeps spraying."""
+from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_one
+from repro.netsim import FailureSchedule, Topology, failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    topo = Topology.build(cfg)
+    ups = topo.t0_up_queues(0)
+    fs = FailureSchedule.concat(
+        failures.link_down([int(ups[0])], 150, 800),
+        failures.link_down([int(ups[1])], 1200, 2400),
+    )
+    wl = workloads.permutation(cfg.n_hosts, msg(768, 4096), seed=3)
+    for lbn in ["ops", "reps"]:
+        _, st, tr, s, wall = run_one(
+            cfg, wl, lb_for(cfg, lbn, **({"freezing_timeout": 800} if lbn == "reps" else {})),
+            8000, fs, topo.t0_up_queues(0),
+        )
+        rows.add(
+            f"fig06/{lbn}", wall * 1e6,
+            f"runtime={s.runtime_ticks};drops_fail={s.drops_fail};"
+            f"timeouts={s.timeouts};completed={s.completed}/{s.n_conns}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Fig 7: failure modes macro — persistent partial failures during
+permutation / DC traces / ring AllReduce."""
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    fs = failures.random_down_uplinks(cfg, 0.05, 150, 2**30, seed=7)
+    n = cfg.n_hosts
+    for wname, wl, ticks in [
+        ("permutation", workloads.permutation(n, msg(256, 2048), seed=1), 8000),
+        ("websearch100", workloads.websearch_trace(n, 0.9, 1200, seed=2, max_pkts=cfg.max_msg_pkts), 6000),
+        ("ring_allreduce", workloads.ring_allreduce(16, msg(96, 1024)), 16000),
+    ]:
+        for lbn in ["ops", "reps", "plb"]:
+            kw = {"freezing_timeout": 800} if lbn == "reps" else {}
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn, **kw), ticks, fs)
+            completion_row(rows, f"fig07/{wname}/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

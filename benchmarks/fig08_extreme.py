@@ -1,0 +1,21 @@
+"""Fig 8: extreme failures — up to 50% of uplinks down; REPS stays close to
+ideal while others degrade."""
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    wl = workloads.permutation(cfg.n_hosts, msg(192, 2048), seed=5)
+    for frac in [0.125, 0.25, 0.5]:
+        fs = failures.random_down_uplinks(cfg, frac, 150, 2**30, seed=11)
+        for lbn in ["ops", "reps", "plb"]:
+            kw = {"freezing_timeout": 800} if lbn == "reps" else {}
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn, **kw), 12000, fs)
+            completion_row(rows, f"fig08/fail{int(frac*100)}pct/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

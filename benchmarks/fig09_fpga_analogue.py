@@ -1,0 +1,38 @@
+"""Figs 9/10 (FPGA testbed) — simulated analogue at the same scale: 16
+endpoints / 2 TORs, per-flow goodput under asymmetry; packet drops under a
+mid-run link failure.  (No FPGA hardware here; experiment design is
+reproduced in the simulator — DESIGN.md §8.)"""
+import numpy as np
+
+from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_one
+from repro.netsim import Topology, failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg(n_hosts=16, hosts_per_tor=8, uplinks_per_tor=4)
+    topo = Topology.build(cfg)
+    # asymmetry: one of the uplinks at half rate (fig 9b)
+    fs = failures.link_degraded([int(topo.t0_up_queues(0)[0])], 0, 2**30)
+    wl = workloads.tornado(16, msg(256, 2048))
+    for lbn in ["ops", "reps"]:
+        _, st, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 6000, fs)
+        fct = np.asarray(st.c_done_tick)
+        goodput = wl.msg_pkts.sum() / max(s.runtime_ticks, 1)
+        rows.add(
+            f"fig09/asym/{lbn}", wall * 1e6,
+            f"agg_goodput_pkts_per_tick={goodput:.2f};runtime={s.runtime_ticks}",
+        )
+    # failure drops (fig 10b)
+    fs2 = failures.link_down([int(topo.t0_up_queues(0)[1])], 800, 2**30)
+    for lbn in ["ops", "reps"]:
+        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn, **({"freezing_timeout": 800} if lbn=="reps" else {})), 8000, fs2)
+        rows.add(
+            f"fig10/linkdown/{lbn}", wall * 1e6,
+            f"drops_fail={s.drops_fail};timeouts={s.timeouts};runtime={s.runtime_ticks}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

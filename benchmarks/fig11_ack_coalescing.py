@@ -1,0 +1,28 @@
+"""Fig 11: ACK coalescing ratios — REPS retains its advantage up to 8:1,
+and under asymmetry/failure even at 16:1."""
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import Topology, failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    wl_msg = msg(256, 2048)
+    for ratio in [1, 2, 4, 8, 16]:
+        cfg = ci_cfg(ack_coalesce=ratio)
+        wl = workloads.permutation(cfg.n_hosts, wl_msg, seed=3)
+        for lbn in ["ops", "reps"]:
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 5000)
+            completion_row(rows, f"fig11/sym/c{ratio}/{lbn}", s, wall)
+    # asymmetric variant at the extreme ratio
+    cfg = ci_cfg(ack_coalesce=16)
+    topo = Topology.build(cfg)
+    fs = failures.link_degraded(topo.t0_up_queues(0)[:1], 0, 2**30)
+    wl = workloads.permutation(cfg.n_hosts, wl_msg, seed=3)
+    for lbn in ["ops", "reps"]:
+        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 6000, fs)
+        completion_row(rows, f"fig11/asym/c16/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

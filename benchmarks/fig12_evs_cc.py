@@ -1,0 +1,26 @@
+"""Fig 12: EVS-size sensitivity (REPS works with 32 EVs; OPS needs many)
+and CC-algorithm sensitivity (DCTCP / EQDS-like / delay-based)."""
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    wl_msg = msg(256, 2048)
+    for evs in [32, 256, 65536]:
+        cfg = ci_cfg(evs_size=evs)
+        wl = workloads.permutation(cfg.n_hosts, wl_msg, seed=3)
+        for lbn in ["ops", "reps"]:
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn, evs_size=evs), 5000)
+            completion_row(rows, f"fig12/evs{evs}/{lbn}", s, wall)
+    for cc in ["dctcp", "eqds", "delay"]:
+        cfg = ci_cfg(cc=cc)
+        wl = workloads.permutation(cfg.n_hosts, wl_msg, seed=3)
+        for lbn in ["ops", "reps"]:
+            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 5000)
+            completion_row(rows, f"fig12/cc_{cc}/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

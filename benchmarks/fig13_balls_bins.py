@@ -1,0 +1,38 @@
+"""Figs 13/14 + Theorem 5.1: batched balls-into-bins (OPS — unbounded
+growth at high load, worse with more bins) vs recycled balls-into-bins
+(bounded by tau, converges)."""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import FULL, Rows
+from repro.core.balls_bins import simulate_ops_bins, simulate_recycled_bins
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    steps = 10000 if FULL else 4000
+    for n in [8, 32, 128]:
+        t0 = time.time()
+        ml = simulate_ops_bins(jax.random.PRNGKey(0), n, 0.99, steps)
+        ml = np.asarray(ml)
+        rows.add(
+            f"fig13/ops/n{n}", (time.time() - t0) * 1e6,
+            f"max_load_end={ml[-1]};peak={ml.max()};steps={steps}",
+        )
+    for n in [8, 32, 128]:
+        tau = int(4 * np.log(n))
+        b = int(np.ceil(2.4 * np.log(n)))
+        t0 = time.time()
+        tr = simulate_recycled_bins(jax.random.PRNGKey(0), n, b, tau, steps)
+        rows.add(
+            f"fig14/recycled/n{n}", (time.time() - t0) * 1e6,
+            f"max_load_end={int(tr.max_load[-1])};tau={tau};"
+            f"frac_remember={float(tr.frac_remember[-1]):.3f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig 15 (Appendix A): forcing freezing mode WITHOUT a failure costs ~1%
+— entering freezing conservatively is safe."""
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.core.load_balancers import RepsLB
+from repro.core import reps as reps_core
+from repro.netsim import workloads
+
+
+class ForcedFreezeReps(RepsLB):
+    name = "reps_forced_freeze"
+
+    def __init__(self, force_at: int, **kw):
+        super().__init__(**kw)
+        self.force_at = force_at
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        state = super().on_ack(state, mask, ev, ecn, now)
+        force = jnp.asarray(now == self.force_at)
+        all_conns = jnp.ones(state.head.shape, bool) & force
+        return reps_core.on_failure_detection(self.cfg, state, all_conns, now)
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    wl = workloads.tornado(cfg.n_hosts, msg(384, 4096))
+    base = lb_for(cfg, "reps")
+    forced = ForcedFreezeReps(force_at=900, evs_size=cfg.evs_size)
+    for tag, lb in [("normal", base), ("forced_freeze", forced)]:
+        _, _, _, s, wall = run_one(cfg, wl, lb, 6000)
+        completion_row(rows, f"fig15/{tag}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

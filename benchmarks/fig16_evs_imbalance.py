@@ -1,0 +1,31 @@
+"""Fig 16 (Appendix B): EV-space load imbalance at a 32-uplink switch for
+1 and 32 flows across EVS sizes (small EVS => >10% imbalance)."""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.core.balls_bins import evs_load_imbalance
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    for flows in [1, 32]:
+        for evs_bits in [4, 8, 12, 16]:
+            t0 = time.time()
+            lam = np.asarray(
+                evs_load_imbalance(
+                    jax.random.PRNGKey(0), 32, 2**evs_bits, flows, 64
+                )
+            )
+            rows.add(
+                f"fig16/flows{flows}/evs2^{evs_bits}",
+                (time.time() - t0) * 1e6,
+                f"mean_imbalance={lam.mean():.4f};p95={np.percentile(lam,95):.4f}",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig 17 (Appendix D.1): recycled balls-into-bins under n:1 recycling
+ratios — 2:1/4:1 barely exceed tau, 8:1 still beats OPS."""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.core.balls_bins import simulate_ops_bins, simulate_recycled_bins
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    n, steps = 32, 4000
+    tau = int(4 * np.log(n))
+    b = int(np.ceil(2.4 * np.log(n)))
+    for ratio in [1, 2, 4, 8]:
+        t0 = time.time()
+        tr = simulate_recycled_bins(
+            jax.random.PRNGKey(0), n, b, tau, steps, coalesce=ratio
+        )
+        rows.add(
+            f"fig17/recycled_c{ratio}", (time.time() - t0) * 1e6,
+            f"max_load_end={int(tr.max_load[-1])};tau={tau}",
+        )
+    t0 = time.time()
+    ml = simulate_ops_bins(jax.random.PRNGKey(0), n, 1.0, steps)
+    rows.add(
+        "fig17/ops_reference", (time.time() - t0) * 1e6,
+        f"max_load_end={int(np.asarray(ml)[-1])}",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

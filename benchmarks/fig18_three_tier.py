@@ -1,0 +1,29 @@
+"""Fig 18 (Appendix D.2): 3-tier fat tree — REPS performs comparably to the
+2-tier case (one EV steers two choice hops)."""
+from benchmarks.common import FULL, Rows, completion_row, lb_for, msg, run_one
+from repro.netsim import SimConfig, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    if FULL:
+        cfg = SimConfig(
+            n_hosts=128, hosts_per_tor=16, tiers=3, tors_per_pod=2,
+            aggs_per_pod=4, agg_uplinks=4,
+        )
+    else:
+        cfg = SimConfig(
+            n_hosts=64, hosts_per_tor=8, tiers=3, tors_per_pod=2,
+            aggs_per_pod=4, agg_uplinks=4, evs_size=256, queue_capacity=64,
+            init_cwnd_pkts=50, max_cwnd_pkts=100, rto_ticks=600,
+            max_msg_pkts=1024,
+        )
+    wl = workloads.permutation(cfg.n_hosts, msg(256, 2048), seed=3)
+    for lbn in ["ecmp", "ops", "reps"]:
+        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 6000)
+        completion_row(rows, f"fig18/3tier/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

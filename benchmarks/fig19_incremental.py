@@ -1,0 +1,23 @@
+"""Fig 19 (Appendix D.3): staggered permanent failures of all-but-one
+uplink of one TOR; REPS re-freezes after each probe, OPS collapses."""
+from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+from repro.netsim import failures, workloads
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    n_up = cfg.uplinks_per_tor
+    fs = failures.incremental_uplink_failures(
+        cfg, tor=0, n_fail=n_up - 1, first_start=200, interval=500
+    )
+    wl = workloads.permutation(cfg.n_hosts, msg(512, 4096), seed=5)
+    for lbn in ["ops", "reps"]:
+        kw = {"freezing_timeout": 800} if lbn == "reps" else {}
+        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn, **kw), 15000, fs)
+        completion_row(rows, f"fig19/{lbn}", s, wall)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

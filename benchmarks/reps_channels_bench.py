@@ -1,0 +1,43 @@
+"""Beyond-paper: REPS as the cross-pod gradient-channel scheduler
+(repro.ft.reps_channels) vs oblivious assignment, under channel failures,
+degradation and a straggler."""
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.ft import (
+    ChannelSim,
+    ChannelSimConfig,
+    OpsChannelScheduler,
+    RepsChannelScheduler,
+    run_cross_pod_reduce,
+)
+
+
+def scenario(name, setup, rows):
+    for sname, mk in [
+        ("ops", lambda: OpsChannelScheduler(16, seed=0)),
+        ("reps", lambda: RepsChannelScheduler(16, seed=0)),
+    ]:
+        sim = ChannelSim(ChannelSimConfig(n_channels=16), seed=0)
+        setup(sim)
+        t0 = time.time()
+        rep = run_cross_pod_reduce(mk(), sim, n_chunks_total=256, chunks_per_round=32)
+        rows.add(
+            f"reps_channels/{name}/{sname}", (time.time() - t0) * 1e6,
+            f"makespan_us={rep.total_latency_us:.0f};rounds={rep.rounds};"
+            f"timeouts={rep.timeouts};p99_us={rep.p99_chunk_latency_us:.0f}",
+        )
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    scenario("healthy", lambda sim: None, rows)
+    scenario("fail6of16", lambda sim: sim.set_failed(range(6)), rows)
+    scenario("degraded4", lambda sim: sim.set_degraded(range(4)), rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  BENCH_FULL=1 switches to
+paper-scale constants.  Select subsets with BENCH_ONLY=fig02,fig13.
+"""
+import os
+import sys
+import time
+
+MODULES = [
+    "table1_footprint",
+    "fig13_balls_bins",
+    "fig16_evs_imbalance",
+    "fig17_coalesced_bins",
+    "fig01_tornado_micro",
+    "fig03_asym_micro",
+    "fig05_background",
+    "fig06_failures_micro",
+    "fig09_fpga_analogue",
+    "fig15_forced_freezing",
+    "fig18_three_tier",
+    "fig11_ack_coalescing",
+    "fig12_evs_cc",
+    "fig04_asym_macro",
+    "fig07_failures_macro",
+    "fig08_extreme",
+    "fig19_incremental",
+    "fig02_symmetric",
+    "reps_channels_bench",
+]
+
+
+def main() -> None:
+    only = os.environ.get("BENCH_ONLY")
+    selected = MODULES
+    if only:
+        keys = [k.strip() for k in only.split(",")]
+        selected = [m for m in MODULES if any(m.startswith(k) for k in keys)]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failed = []
+    for mod_name in selected:
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failed.append((mod_name, repr(e)))
+            print(f"{mod_name},0,ERROR={e!r}", flush=True)
+    print(f"# total_wall_s={time.time()-t0:.0f} failed={len(failed)}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

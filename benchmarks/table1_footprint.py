@@ -1,0 +1,21 @@
+"""Table 1: per-connection memory footprint of REPS."""
+import time
+
+from benchmarks.common import Rows
+from repro.core.reps import REPSConfig, state_footprint_bits
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    for n in [1, 8]:
+        t0 = time.time()
+        fp = state_footprint_bits(REPSConfig(buffer_size=n))
+        rows.add(
+            f"table1/buffer{n}", (time.time() - t0) * 1e6,
+            f"total_bits={fp['total_bits']};bytes={fp['total_bytes_ceil']}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

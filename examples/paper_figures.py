@@ -1,0 +1,15 @@
+"""Reproduce a subset of the paper's figures quickly (fig 1/3/6 micro runs).
+
+  PYTHONPATH=src python examples/paper_figures.py
+Full benchmark suite: PYTHONPATH=src python -m benchmarks.run"""
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks import fig01_tornado_micro, fig03_asym_micro, fig06_failures_micro
+from benchmarks.common import Rows
+
+rows = Rows()
+print("name,us_per_call,derived")
+fig01_tornado_micro.main(rows)
+fig03_asym_micro.main(rows)
+fig06_failures_micro.main(rows)

@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + token-by-token decode with a KV cache
+(reduced gemma3 with its 5:1 local:global attention).
+
+  PYTHONPATH=src python examples/serve_batched.py"""
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "gemma3-4b", "--reduced", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16"]
+from repro.launch.serve import main  # noqa: E402
+
+main()

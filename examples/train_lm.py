@@ -1,0 +1,17 @@
+"""End-to-end driver: train a small LM for a few hundred steps on the
+deterministic Markov stream, with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_lm.py            # ~10M params, fast
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python -m repro.launch.train --arch mistral-nemo-12b \
+      --reduced --steps 200     # same thing via the launcher
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "mistral-nemo-12b", "--reduced",
+            "--steps", "200", "--batch", "8", "--seq", "128",
+            "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "50"] + sys.argv[1:]
+from repro.launch.train import main  # noqa: E402
+
+main()

@@ -1,0 +1,18 @@
+"""repro: REPS (Recycled Entropy Packet Spraying) reproduced as a
+production-grade JAX framework.
+
+Layers:
+  repro.core      - the paper's algorithm (REPS) + baseline load balancers
+                    + the recycled balls-into-bins theory models (Section 5)
+  repro.kernels   - Pallas TPU kernels for the datapath hot spots
+  repro.netsim    - packet-level fat-tree network simulator (htsim analogue)
+  repro.models    - the 10 assigned LM-family architectures
+  repro.configs   - architecture configs (--arch <id>) + paper sim configs
+  repro.train     - optimizer / train_step / serve (prefill+decode) steps
+  repro.data      - deterministic shard-aware data pipeline
+  repro.checkpoint- sharded checkpoint save/restore + elastic resharding
+  repro.ft        - fault tolerance; REPS-scheduled cross-pod channels
+  repro.launch    - mesh / dry-run / roofline / train / serve entry points
+"""
+
+__version__ = "1.0.0"

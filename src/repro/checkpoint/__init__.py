@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import is_committed, latest, restore, save, save_async
+
+__all__ = ["is_committed", "latest", "restore", "save", "save_async"]

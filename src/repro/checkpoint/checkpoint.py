@@ -1,0 +1,123 @@
+"""Sharded checkpointing with elastic restore.
+
+Format: one .npz per pytree (params / opt_state) + a JSON manifest holding
+the tree structure, shapes, dtypes and *logical axes*.  Restore re-shards
+onto whatever mesh/rules are active — the elastic-scaling path (restart on
+a different device count after failures) is therefore just `restore()`
+under the new mesh.
+
+Saves can run asynchronously (background thread over a host snapshot) so
+the train loop isn't blocked on I/O — the standard large-run pattern.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distrib.sharding import named_sharding
+
+_SEP = "/"
+
+
+def _flatten(tree, is_leaf=None) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def _flatten_axes(tree) -> dict[str, Any]:
+    return _flatten(tree, is_leaf=lambda x: isinstance(x, (tuple, list)) or x == ())
+
+
+def save(path: str, step: int, trees: dict[str, Any], axes: Optional[dict] = None):
+    """trees: {"params": ..., "opt_state": ...}; axes: matching logical-axis
+    trees (stored so restore can reshard)."""
+    os.makedirs(path, exist_ok=True)
+    manifest = {"step": int(step), "trees": {}}
+    for name, tree in trees.items():
+        flat = _flatten(jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree))
+        np.savez(os.path.join(path, f"{name}.npz"), **flat)
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest["trees"][name] = {
+            "treedef": str(treedef),
+            "keys": sorted(flat.keys()),
+        }
+    if axes is not None:
+        manifest["axes"] = jax.tree.map(
+            lambda t: list(t) if isinstance(t, tuple) else t,
+            axes,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, default=str)
+    # atomic completion marker
+    with open(os.path.join(path, "COMMITTED"), "w") as f:
+        f.write(str(step))
+
+
+def save_async(path: str, step: int, trees: dict, axes=None) -> threading.Thread:
+    snapshot = {
+        name: jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        for name, tree in trees.items()
+    }
+    t = threading.Thread(target=save, args=(path, step, snapshot, axes))
+    t.start()
+    return t
+
+
+def is_committed(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "COMMITTED"))
+
+
+def restore(path: str, like: dict[str, Any], axes: Optional[dict] = None):
+    """Restore trees shaped like `like` (a dict of example pytrees).  If a
+    mesh is active (repro.distrib.sharding.mesh_rules) and `axes` trees are
+    given, arrays are device_put with the resolved shardings — this is the
+    elastic re-shard path."""
+    assert is_committed(path), f"no committed checkpoint at {path}"
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = {}
+    for name, tree in like.items():
+        data = np.load(os.path.join(path, f"{name}.npz"))
+        flat_like = _flatten(tree)
+        flat_axes = _flatten_axes(axes[name]) if axes and name in axes else {}
+        restored = {}
+        for key, leaf in flat_like.items():
+            arr = data[key]
+            ax = flat_axes.get(key)
+            sh = named_sharding(*ax) if ax is not None else None
+            restored[key] = (
+                jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+            )
+        # rebuild tree
+        treedef = jax.tree_util.tree_structure(tree)
+        keys_in_order = [
+            _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+        ]
+        out[name] = jax.tree_util.tree_unflatten(
+            treedef, [restored[k] for k in keys_in_order]
+        )
+    return out, manifest["step"]
+
+
+def latest(base: str) -> Optional[str]:
+    if not os.path.isdir(base):
+        return None
+    steps = []
+    for d in os.listdir(base):
+        p = os.path.join(base, d)
+        if d.startswith("step_") and is_committed(p):
+            steps.append((int(d.split("_")[1]), p))
+    return max(steps)[1] if steps else None

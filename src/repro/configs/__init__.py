@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    all_configs,
+    applicable_shapes,
+    get_config,
+    reduced,
+    register,
+)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "ShapeConfig", "all_configs",
+    "applicable_shapes", "get_config", "reduced", "register",
+]

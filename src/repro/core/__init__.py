@@ -1,0 +1,15 @@
+from repro.core import balls_bins, load_balancers, reps
+from repro.core.load_balancers import REGISTRY, LoadBalancer, make_lb
+from repro.core.reps import REPSConfig, REPSOracle, REPSState
+
+__all__ = [
+    "balls_bins",
+    "load_balancers",
+    "reps",
+    "REGISTRY",
+    "LoadBalancer",
+    "make_lb",
+    "REPSConfig",
+    "REPSOracle",
+    "REPSState",
+]

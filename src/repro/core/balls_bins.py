@@ -1,0 +1,167 @@
+"""Section 5 theory models: batched balls-into-bins (OPS) and the paper's
+*recycled* balls-into-bins process (Theorem 5.1), plus the Appendix B EVS
+load-imbalance model (Fig. 16) and Appendix D.1 coalesced recycling
+(Fig. 17).
+
+All processes are implemented as jitted ``lax.scan`` loops so the
+benchmarks (fig13/fig14/fig16/fig17) and the Theorem 5.1 property tests run
+fast on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# OPS model: each step every non-empty bin removes one ball, then ~lam*n new
+# balls are thrown uniformly at random (paper §5.1, Fig. 13 top curves).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(1, 3))
+def simulate_ops_bins(
+    key: jax.Array, n_bins: int, lam: float, steps: int
+) -> jax.Array:
+    """Returns (steps,) max bin load over time."""
+
+    def step(carry, key_t):
+        loads = carry
+        loads = jnp.maximum(loads - 1, 0)  # each non-empty bin serves one
+        arrivals = jax.random.bernoulli(
+            jax.random.fold_in(key_t, 0), lam, (n_bins,)
+        )  # Binomial thinning: expected lam*n arrivals
+        targets = jax.random.randint(
+            jax.random.fold_in(key_t, 1), (n_bins,), 0, n_bins
+        )
+        add = jnp.zeros((n_bins,), jnp.int32).at[targets].add(
+            arrivals.astype(jnp.int32)
+        )
+        loads = loads + add
+        return loads, jnp.max(loads)
+
+    keys = jax.random.split(key, steps)
+    _, max_loads = jax.lax.scan(step, jnp.zeros((n_bins,), jnp.int32), keys)
+    return max_loads
+
+
+# ---------------------------------------------------------------------------
+# Recycled balls-into-bins (paper §5.1, Theorem 5.1; Fig. 13/14 bottom).
+#
+#   * b*n colors cycled round-robin in batches of n.
+#   * Each step every non-empty bin removes its FIFO-oldest ball.  If the
+#     bin's load (pre-removal) is <= tau the removed ball's color remembers
+#     the bin (unless it already remembers one); if > tau the color forgets.
+#   * Each color of the current batch throws one ball into its remembered
+#     bin, or uniformly at random if it has no memory.
+#
+# Coalesced recycling (Appendix D.1): with ratio r only every r-th removal
+# feeds back into color memory; skipped removals lose their memory (their
+# "ACK" never returns), modelling n:1 ACK coalescing.
+# ---------------------------------------------------------------------------
+class RecycledTrace(NamedTuple):
+    max_load: jax.Array  # (steps,) int32
+    frac_remember: jax.Array  # (steps,) float32 fraction of colors w/ memory
+    loads_final: jax.Array  # (n_bins,) int32
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6))
+def simulate_recycled_bins(
+    key: jax.Array,
+    n_bins: int,
+    b: int,
+    tau: int,
+    steps: int,
+    queue_cap: int = 0,
+    coalesce: int = 1,
+) -> RecycledTrace:
+    n = n_bins
+    n_colors = b * n
+    cap = queue_cap if queue_cap > 0 else max(8 * tau, 64)
+
+    # Per-bin FIFO of color ids (circular).
+    queue = jnp.zeros((n, cap), jnp.int32)
+    q_head = jnp.zeros((n,), jnp.int32)
+    q_len = jnp.zeros((n,), jnp.int32)
+    color_bin = jnp.full((n_colors,), -1, jnp.int32)  # -1 = no memory
+    removal_seq = jnp.zeros((), jnp.int32)  # global removal counter
+
+    def step(carry, inp):
+        queue, q_head, q_len, color_bin, removal_seq = carry
+        t, key_t = inp
+
+        # --- removal phase -------------------------------------------------
+        nonempty = q_len > 0
+        removed_color = jnp.take_along_axis(
+            queue, (q_head % cap)[:, None], axis=1
+        )[:, 0]
+        load_pre = q_len
+        q_head = jnp.where(nonempty, q_head + 1, q_head)
+        q_len = jnp.where(nonempty, q_len - 1, q_len)
+
+        # Coalescing: only every `coalesce`-th removal (per global sequence)
+        # feeds memory; others forget.
+        seq_ids = removal_seq + jnp.cumsum(nonempty.astype(jnp.int32)) - 1
+        feeds = nonempty & (seq_ids % coalesce == 0)
+        removal_seq = removal_seq + jnp.sum(nonempty.astype(jnp.int32))
+
+        remembers = jnp.take(color_bin, removed_color)  # (n,)
+        bin_ids = jnp.arange(n, dtype=jnp.int32)
+        new_mem = jnp.where(
+            load_pre > tau,
+            -1,  # overloaded bin: forget
+            jnp.where(remembers < 0, bin_ids, remembers),  # remember if free
+        )
+        # Scatter memory updates for removed colors.  At most one removal per
+        # bin per step, and a color currently in only one bin's head slot, so
+        # collisions are benign (last-write-wins matches the model).
+        color_bin = color_bin.at[removed_color].set(
+            jnp.where(nonempty & feeds, new_mem, jnp.take(color_bin, removed_color)),
+            mode="drop",
+        )
+
+        # --- arrival phase: batch of n colors, round-robin -----------------
+        batch_colors = (t * n + jnp.arange(n, dtype=jnp.int32)) % n_colors
+        mem = jnp.take(color_bin, batch_colors)
+        rand_bins = jax.random.randint(key_t, (n,), 0, n)
+        targets = jnp.where(mem >= 0, mem, rand_bins)
+
+        # Multi-enqueue with intra-step FIFO ranking (one-hot cumsum).
+        onehot = (targets[:, None] == jnp.arange(n)[None, :]).astype(jnp.int32)
+        rank = jnp.cumsum(onehot, axis=0) - 1  # rank within target bin
+        rank_of_ball = jnp.take_along_axis(rank, targets[:, None], axis=1)[:, 0]
+        slot = (jnp.take(q_head + q_len, targets) + rank_of_ball) % cap
+        queue = queue.at[targets, slot].set(batch_colors)
+        q_len = q_len + jnp.sum(onehot, axis=0)
+
+        stats = (jnp.max(q_len), jnp.mean((color_bin >= 0).astype(jnp.float32)))
+        return (queue, q_head, q_len, color_bin, removal_seq), stats
+
+    keys = jax.random.split(key, steps)
+    ts = jnp.arange(steps, dtype=jnp.int32)
+    carry, (max_load, frac_remember) = jax.lax.scan(
+        step, (queue, q_head, q_len, color_bin, removal_seq), (ts, keys)
+    )
+    return RecycledTrace(
+        max_load=max_load, frac_remember=frac_remember, loads_final=carry[2]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Appendix B (Fig. 16): EVS load imbalance under uniform hashing.
+# m = flows * evs_size distinct (flow, EV) pairs hashed onto n uplinks.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def evs_load_imbalance(
+    key: jax.Array, n_ports: int, evs_size: int, n_flows: int, n_trials: int
+) -> jax.Array:
+    """Returns (n_trials,) load imbalance lambda = max_load/(m/n) - 1."""
+
+    def trial(key_i):
+        m = evs_size * n_flows
+        ports = jax.random.randint(key_i, (m,), 0, n_ports)
+        loads = jnp.zeros((n_ports,), jnp.int32).at[ports].add(1)
+        return jnp.max(loads).astype(jnp.float32) / (m / n_ports) - 1.0
+
+    return jax.vmap(trial)(jax.random.split(key, n_trials))

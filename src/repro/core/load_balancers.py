@@ -1,0 +1,383 @@
+"""Load-balancer zoo behind one interface (paper §4.1 baselines + REPS).
+
+Every load balancer is a *static* object holding configuration; its mutable
+per-connection state is a pytree threaded through the netsim engine's jitted
+tick.  Interface:
+
+    init_state(n_conns, key)                        -> state pytree
+    choose_ev(state, mask, key, now)                -> (evs (N,), state)
+    on_ack(state, mask, ev, ecn, now)               -> state
+    on_timeout(state, mask, now)                    -> state
+
+``mask`` selects the connections that send / got an ACK / timed out this
+tick (the netsim guarantees at most one such event per connection per tick,
+see DESIGN.md §5).  ``switch_adaptive`` marks in-network approaches
+(adaptive RoCE): the sender still stamps an EV but switches override the
+port choice with a local least-queue decision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reps as reps_core
+from repro.utils import pytree_dataclass, static_field
+
+
+def _rand_evs(key, n, evs_size):
+    return jax.random.randint(key, (n,), 0, evs_size, jnp.int32)
+
+
+class LoadBalancer:
+    name: str = "abstract"
+    switch_adaptive: bool = False
+
+    def __init__(self, evs_size: int = 65536):
+        self.evs_size = evs_size
+
+    def init_state(self, n_conns: int, key: jax.Array):
+        raise NotImplementedError
+
+    def choose_ev(self, state, mask, key, now):
+        raise NotImplementedError
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        return state
+
+    def on_timeout(self, state, mask, now):
+        return state
+
+
+# ---------------------------------------------------------------------------
+# ECMP: one static EV per connection (per-flow hashing).  §2.2
+# ---------------------------------------------------------------------------
+class EcmpLB(LoadBalancer):
+    name = "ecmp"
+
+    def init_state(self, n_conns, key):
+        return _rand_evs(key, n_conns, self.evs_size)
+
+    def choose_ev(self, state, mask, key, now):
+        return state, state
+
+
+# ---------------------------------------------------------------------------
+# OPS: uniform random EV per packet.  §2.2
+# ---------------------------------------------------------------------------
+class OpsLB(LoadBalancer):
+    name = "ops"
+
+    def init_state(self, n_conns, key):
+        return jnp.zeros((n_conns,), jnp.int32)  # dummy (keeps pytree nonempty)
+
+    def choose_ev(self, state, mask, key, now):
+        return _rand_evs(key, state.shape[0], self.evs_size), state
+
+
+# ---------------------------------------------------------------------------
+# REPS (the paper).  §3
+# ---------------------------------------------------------------------------
+class RepsLB(LoadBalancer):
+    name = "reps"
+
+    def __init__(
+        self,
+        evs_size: int = 65536,
+        buffer_size: int = 8,
+        num_pkts_bdp: int = 32,
+        freezing_timeout: int = 1024,
+        enable_freezing: bool = True,
+    ):
+        super().__init__(evs_size)
+        self.cfg = reps_core.REPSConfig(
+            buffer_size=buffer_size,
+            evs_size=evs_size,
+            num_pkts_bdp=num_pkts_bdp,
+            freezing_timeout=freezing_timeout,
+        )
+        self.enable_freezing = enable_freezing
+
+    def init_state(self, n_conns, key):
+        return reps_core.init_state(self.cfg, n_conns)
+
+    def choose_ev(self, state, mask, key, now):
+        return reps_core.choose_ev(self.cfg, state, mask, key)
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        return reps_core.on_ack(self.cfg, state, mask, ev, ecn, now)
+
+    def on_timeout(self, state, mask, now):
+        if not self.enable_freezing:
+            return state
+        return reps_core.on_failure_detection(self.cfg, state, mask, now)
+
+
+# ---------------------------------------------------------------------------
+# PLB / FlowBender-style: per-connection EV, re-path when an epoch sees a
+# high ECN fraction or on RTO.  Configured aggressively per the paper §4.1.
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class PlbState:
+    ev: jax.Array  # (N,) int32 current EV
+    acks: jax.Array  # (N,) int32 ACKs this epoch
+    marked: jax.Array  # (N,) int32 ECN-marked ACKs this epoch
+    epoch_end: jax.Array  # (N,) int32 tick
+    bad_epochs: jax.Array  # (N,) int32 consecutive congested epochs
+
+
+class PlbLB(LoadBalancer):
+    name = "plb"
+
+    def __init__(
+        self,
+        evs_size: int = 65536,
+        epoch_ticks: int = 64,
+        ecn_frac_threshold: float = 0.5,
+        repath_after_epochs: int = 1,  # aggressive (FlowBender-like)
+    ):
+        super().__init__(evs_size)
+        self.epoch_ticks = epoch_ticks
+        self.ecn_frac_threshold = ecn_frac_threshold
+        self.repath_after_epochs = repath_after_epochs
+
+    def init_state(self, n_conns, key):
+        return PlbState(
+            ev=_rand_evs(key, n_conns, self.evs_size),
+            acks=jnp.zeros((n_conns,), jnp.int32),
+            marked=jnp.zeros((n_conns,), jnp.int32),
+            epoch_end=jnp.full((n_conns,), self.epoch_ticks, jnp.int32),
+            bad_epochs=jnp.zeros((n_conns,), jnp.int32),
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        return state.ev, state
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        acks = jnp.where(mask, state.acks + 1, state.acks)
+        marked = jnp.where(mask & ecn, state.marked + 1, state.marked)
+        epoch_over = now >= state.epoch_end
+        frac_bad = marked > (
+            jnp.ceil(acks.astype(jnp.float32) * self.ecn_frac_threshold)
+        ).astype(jnp.int32)
+        bad_epochs = jnp.where(
+            epoch_over,
+            jnp.where(frac_bad & (acks > 0), state.bad_epochs + 1, 0),
+            state.bad_epochs,
+        )
+        repath = bad_epochs >= self.repath_after_epochs
+        new_ev = jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(0), now),
+            state.ev.shape,
+            0,
+            self.evs_size,
+            jnp.int32,
+        )
+        ev_out = jnp.where(repath, new_ev, state.ev)
+        bad_epochs = jnp.where(repath, 0, bad_epochs)
+        return PlbState(
+            ev=ev_out,
+            acks=jnp.where(epoch_over, 0, acks),
+            marked=jnp.where(epoch_over, 0, marked),
+            epoch_end=jnp.where(
+                epoch_over, now + self.epoch_ticks, state.epoch_end
+            ),
+            bad_epochs=bad_epochs,
+        )
+
+    def on_timeout(self, state, mask, now):
+        new_ev = jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(1), now),
+            state.ev.shape,
+            0,
+            self.evs_size,
+            jnp.int32,
+        )
+        return state.replace(ev=jnp.where(mask, new_ev, state.ev))
+
+
+# ---------------------------------------------------------------------------
+# Flowlet switching: new random EV whenever the inter-send gap exceeds the
+# flowlet timeout (paper sets it aggressively to RTT/2).  §4.1
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class FlowletState:
+    ev: jax.Array  # (N,) int32
+    last_send: jax.Array  # (N,) int32 tick of previous send
+
+
+class FlowletLB(LoadBalancer):
+    name = "flowlet"
+
+    def __init__(self, evs_size: int = 65536, gap_ticks: int = 32):
+        super().__init__(evs_size)
+        self.gap_ticks = gap_ticks
+
+    def init_state(self, n_conns, key):
+        return FlowletState(
+            ev=_rand_evs(key, n_conns, self.evs_size),
+            last_send=jnp.full((n_conns,), -(10**6), jnp.int32),
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        n = state.ev.shape[0]
+        new_flowlet = mask & ((now - state.last_send) > self.gap_ticks)
+        ev = jnp.where(new_flowlet, _rand_evs(key, n, self.evs_size), state.ev)
+        return ev, FlowletState(
+            ev=ev, last_send=jnp.where(mask, now, state.last_send)
+        )
+
+
+# ---------------------------------------------------------------------------
+# MPTCP-like: K static subflow EVs per connection, packets round-robin over
+# subflows; a timeout re-hashes one subflow.  Coarse model of running K QPs
+# (paper §4.1 uses K=8).  CC remains shared (documented simplification).
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class MptcpState:
+    sub_evs: jax.Array  # (N, K) int32
+    rr: jax.Array  # (N,) int32 round-robin cursor
+
+
+class MptcpLB(LoadBalancer):
+    name = "mptcp"
+
+    def __init__(self, evs_size: int = 65536, n_subflows: int = 8):
+        super().__init__(evs_size)
+        self.n_subflows = n_subflows
+
+    def init_state(self, n_conns, key):
+        return MptcpState(
+            sub_evs=jax.random.randint(
+                key, (n_conns, self.n_subflows), 0, self.evs_size, jnp.int32
+            ),
+            rr=jnp.zeros((n_conns,), jnp.int32),
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        idx = state.rr % self.n_subflows
+        ev = jnp.take_along_axis(state.sub_evs, idx[:, None], axis=1)[:, 0]
+        rr = jnp.where(mask, state.rr + 1, state.rr)
+        return ev, state.replace(rr=rr)
+
+    def on_timeout(self, state, mask, now):
+        # Re-hash the subflow at the cursor for timed-out connections.
+        idx = state.rr % self.n_subflows
+        onehot = jax.nn.one_hot(idx, self.n_subflows, dtype=jnp.bool_)
+        new_evs = jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(2), now),
+            state.sub_evs.shape,
+            0,
+            self.evs_size,
+            jnp.int32,
+        )
+        sub_evs = jnp.where(mask[:, None] & onehot, new_evs, state.sub_evs)
+        return state.replace(sub_evs=sub_evs)
+
+
+# ---------------------------------------------------------------------------
+# MPRDMA-like: per-packet spraying that avoids recently ECN-marked EVs via a
+# small ring of "bad" EVs (no caching of good paths — the paper's contrast).
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class MprdmaState:
+    bad_evs: jax.Array  # (N, L) int32 recently marked EVs
+    bad_ptr: jax.Array  # (N,) int32
+
+
+class MprdmaLB(LoadBalancer):
+    name = "mprdma"
+
+    def __init__(self, evs_size: int = 65536, blacklist: int = 16):
+        super().__init__(evs_size)
+        self.blacklist = blacklist
+
+    def init_state(self, n_conns, key):
+        return MprdmaState(
+            bad_evs=jnp.full((n_conns, self.blacklist), -1, jnp.int32),
+            bad_ptr=jnp.zeros((n_conns,), jnp.int32),
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        n = state.bad_evs.shape[0]
+        k1, k2 = jax.random.split(key)
+        cand1 = _rand_evs(k1, n, self.evs_size)
+        cand2 = _rand_evs(k2, n, self.evs_size)
+        bad1 = jnp.any(state.bad_evs == cand1[:, None], axis=1)
+        ev = jnp.where(bad1, cand2, cand1)  # one resample on blacklist hit
+        return ev, state
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        add = mask & ecn
+        L = self.blacklist
+        onehot = jax.nn.one_hot(state.bad_ptr % L, L, dtype=jnp.bool_)
+        bad_evs = jnp.where(add[:, None] & onehot, ev[:, None], state.bad_evs)
+        return MprdmaState(
+            bad_evs=bad_evs,
+            bad_ptr=jnp.where(add, state.bad_ptr + 1, state.bad_ptr),
+        )
+
+
+# ---------------------------------------------------------------------------
+# BitMap (STrack-like): 1 bit of congestion state per EV in the whole EVS —
+# the memory-expensive strawman of paper §3.3.  Marked EVs are avoided by
+# resampling up to R candidates.
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class BitmapState:
+    bad: jax.Array  # (N, EVS) bool
+
+
+class BitmapLB(LoadBalancer):
+    name = "bitmap"
+
+    def __init__(self, evs_size: int = 256, resamples: int = 4):
+        super().__init__(evs_size)
+        self.resamples = resamples
+
+    def init_state(self, n_conns, key):
+        return BitmapState(bad=jnp.zeros((n_conns, self.evs_size), jnp.bool_))
+
+    def choose_ev(self, state, mask, key, now):
+        n = state.bad.shape[0]
+        keys = jax.random.split(key, self.resamples)
+        ev = _rand_evs(keys[0], n, self.evs_size)
+        for i in range(1, self.resamples):
+            is_bad = jnp.take_along_axis(state.bad, ev[:, None], axis=1)[:, 0]
+            cand = _rand_evs(keys[i], n, self.evs_size)
+            ev = jnp.where(is_bad, cand, ev)
+        return ev, state
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        onehot = jax.nn.one_hot(ev, self.evs_size, dtype=jnp.bool_)
+        bad = jnp.where(mask[:, None] & onehot, ecn[:, None], state.bad)
+        return BitmapState(bad=bad)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive RoCE (NVIDIA Spectrum-X style): in-network per-packet adaptive
+# routing — switches pick the least-loaded valid uplink.  The sender sprays
+# (EV is ignored by adaptive switches).
+# ---------------------------------------------------------------------------
+class AdaptiveRoceLB(OpsLB):
+    name = "adaptive_roce"
+    switch_adaptive = True
+
+
+REGISTRY = {
+    cls.name: cls
+    for cls in [
+        EcmpLB,
+        OpsLB,
+        RepsLB,
+        PlbLB,
+        FlowletLB,
+        MptcpLB,
+        MprdmaLB,
+        BitmapLB,
+        AdaptiveRoceLB,
+    ]
+}
+
+
+def make_lb(name: str, **kwargs) -> LoadBalancer:
+    return REGISTRY[name](**kwargs)

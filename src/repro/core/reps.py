@@ -1,0 +1,265 @@
+"""REPS — Recycled Entropy Packet Spraying (the paper's core algorithm).
+
+Faithful, vectorized implementation of the paper's Algorithms 1 and 2
+("ARCANE" in the supplied text = REPS; see DESIGN.md §0).
+
+Per-connection state (paper Table 1, ~25 bytes with an 8-deep buffer):
+
+  * circular buffer of ``buffer_size`` cached entropy values (EVs), each
+    with a validity bit,
+  * ``head`` pointer, ``num_valid`` counter,
+  * ``explore_counter`` (initialized to one BDP worth of packets),
+  * freezing-mode flag and exit-freezing deadline.
+
+All procedures are branch-free (``jnp.where``) updates over an arbitrary
+batch of connections so they vectorize on TPU/CPU, can be driven by the
+netsim engine one tick at a time, and are bit-identical to the scalar
+pseudocode (tests assert this against a pure-Python oracle).
+
+Semantics notes, tied to the paper's pseudocode:
+  * ``on_ack`` (Alg. 1): ECN-marked ACKs are discarded entirely.  A clean
+    ACK's EV is written at ``head`` (overwriting), validity set, head
+    advanced.  Freezing mode is exited when ``now > exit_freezing`` and, on
+    exit, ``explore_counter`` is re-armed to one BDP so the sender re-probes
+    the network.
+  * ``on_failure_detection`` (Alg. 1): enter freezing mode only when not
+    already freezing and not in the warm-up explore phase.
+  * ``choose_ev`` (Alg. 2 onSend + getNextEV): explore a uniform EV when the
+    buffer has never been written, when there are no valid EVs and we are
+    not freezing, or while ``explore_counter > 0``; otherwise pop the
+    *oldest valid* EV (offset ``head - num_valid``) and invalidate it — or,
+    in freezing mode with no valid EVs, recycle entries at ``head`` even if
+    invalid, advancing ``head``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+
+DEFAULT_BUFFER_SIZE = 8  # paper §3.1: chosen from Theorem 5.1 bounds
+
+
+@pytree_dataclass
+class REPSConfig:
+    buffer_size: int = static_field(default=DEFAULT_BUFFER_SIZE)
+    evs_size: int = static_field(default=65536)  # 16-bit EV space (§2.2)
+    num_pkts_bdp: int = static_field(default=32)  # warm-up explore budget
+    freezing_timeout: int = static_field(default=1024)  # ticks (§3.2)
+
+
+@pytree_dataclass
+class REPSState:
+    """Structure-of-arrays over N connections."""
+
+    buf_ev: jax.Array  # (N, B) int32 cached EVs
+    buf_valid: jax.Array  # (N, B) bool validity bits
+    head: jax.Array  # (N,) int32
+    num_valid: jax.Array  # (N,) int32
+    explore_counter: jax.Array  # (N,) int32
+    is_freezing: jax.Array  # (N,) bool
+    exit_freezing: jax.Array  # (N,) int32 tick deadline
+    n_cached: jax.Array  # (N,) int32 total EVs ever cached (isEmpty check)
+
+
+def init_state(cfg: REPSConfig, n_conns: int) -> REPSState:
+    B = cfg.buffer_size
+    return REPSState(
+        buf_ev=jnp.zeros((n_conns, B), jnp.int32),
+        buf_valid=jnp.zeros((n_conns, B), jnp.bool_),
+        head=jnp.zeros((n_conns,), jnp.int32),
+        num_valid=jnp.zeros((n_conns,), jnp.int32),
+        explore_counter=jnp.full((n_conns,), cfg.num_pkts_bdp, jnp.int32),
+        is_freezing=jnp.zeros((n_conns,), jnp.bool_),
+        exit_freezing=jnp.zeros((n_conns,), jnp.int32),
+        n_cached=jnp.zeros((n_conns,), jnp.int32),
+    )
+
+
+def on_ack(
+    cfg: REPSConfig,
+    state: REPSState,
+    mask: jax.Array,  # (N,) bool: connection received an ACK this tick
+    ev: jax.Array,  # (N,) int32: EV echoed in the ACK
+    ecn: jax.Array,  # (N,) bool: ACK is ECN-marked
+    now: jax.Array,  # scalar int32 tick
+) -> REPSState:
+    """Paper Algorithm 1, onAck — vectorized over connections."""
+    B = cfg.buffer_size
+    cache = mask & ~ecn  # ECN-marked ACKs are discarded (Alg.1 l.6-8)
+
+    head_onehot = jax.nn.one_hot(state.head, B, dtype=jnp.bool_)  # (N,B)
+    slot_was_valid = jnp.take_along_axis(
+        state.buf_valid, state.head[:, None], axis=1
+    )[:, 0]
+    num_valid = jnp.where(
+        cache & ~slot_was_valid, state.num_valid + 1, state.num_valid
+    )
+    write = cache[:, None] & head_onehot
+    buf_ev = jnp.where(write, ev[:, None], state.buf_ev)
+    buf_valid = jnp.where(write, True, state.buf_valid)
+    head = jnp.where(cache, (state.head + 1) % B, state.head)
+    n_cached = jnp.where(cache, state.n_cached + 1, state.n_cached)
+
+    # Freezing-mode exit check (Alg.1 l.15-18). The pseudocode reaches this
+    # only on a clean cached ACK; we keep that gating.
+    exit_now = cache & state.is_freezing & (now > state.exit_freezing)
+    is_freezing = jnp.where(exit_now, False, state.is_freezing)
+    explore_counter = jnp.where(
+        exit_now, jnp.int32(cfg.num_pkts_bdp), state.explore_counter
+    )
+    return REPSState(
+        buf_ev=buf_ev,
+        buf_valid=buf_valid,
+        head=head,
+        num_valid=num_valid,
+        explore_counter=explore_counter,
+        is_freezing=is_freezing,
+        exit_freezing=state.exit_freezing,
+        n_cached=n_cached,
+    )
+
+
+def on_failure_detection(
+    cfg: REPSConfig,
+    state: REPSState,
+    mask: jax.Array,  # (N,) bool: failure (timeout) detected this tick
+    now: jax.Array,
+) -> REPSState:
+    """Paper Algorithm 1, onFailureDetection — enter freezing mode."""
+    enter = mask & ~state.is_freezing & (state.explore_counter == 0)
+    return state.replace(
+        is_freezing=jnp.where(enter, True, state.is_freezing),
+        exit_freezing=jnp.where(
+            enter, now + jnp.int32(cfg.freezing_timeout), state.exit_freezing
+        ),
+    )
+
+
+def choose_ev(
+    cfg: REPSConfig,
+    state: REPSState,
+    mask: jax.Array,  # (N,) bool: connection sends a data packet this tick
+    key: jax.Array,
+) -> tuple[jax.Array, REPSState]:
+    """Paper Algorithm 2 (onSend + getNextEV) — vectorized.
+
+    Returns (evs, new_state); ``evs[i]`` is only meaningful where
+    ``mask[i]``.
+    """
+    N, B = state.buf_ev.shape
+    rand_ev = jax.random.randint(key, (N,), 0, cfg.evs_size, jnp.int32)
+
+    is_empty = state.n_cached == 0
+    explore = mask & (
+        is_empty
+        | ((state.num_valid == 0) & ~state.is_freezing)
+        | (state.explore_counter > 0)
+    )
+    recycle = mask & ~explore  # take from the buffer
+
+    # getNextEV branch 1: pop oldest valid entry.
+    pop_valid = recycle & (state.num_valid > 0)
+    offset_valid = jnp.mod(state.head - state.num_valid, B)
+    # getNextEV branch 2 (freezing, nothing valid): reuse entry at head,
+    # advance head.
+    reuse = recycle & (state.num_valid == 0)
+    offset = jnp.where(pop_valid, offset_valid, state.head)
+
+    picked_ev = jnp.take_along_axis(state.buf_ev, offset[:, None], axis=1)[:, 0]
+    evs = jnp.where(recycle, picked_ev, rand_ev)
+
+    offset_onehot = jax.nn.one_hot(offset, B, dtype=jnp.bool_)
+    buf_valid = jnp.where(
+        pop_valid[:, None] & offset_onehot, False, state.buf_valid
+    )
+    num_valid = jnp.where(pop_valid, state.num_valid - 1, state.num_valid)
+    head = jnp.where(reuse, (state.head + 1) % B, state.head)
+    explore_counter = jnp.where(
+        explore, jnp.maximum(state.explore_counter - 1, 0), state.explore_counter
+    )
+    new_state = state.replace(
+        buf_valid=buf_valid,
+        num_valid=num_valid,
+        head=head,
+        explore_counter=explore_counter,
+    )
+    return evs, new_state
+
+
+def state_footprint_bits(cfg: REPSConfig) -> dict[str, int]:
+    """Paper Table 1: per-connection memory footprint in bits."""
+    per_element = 16 + 1  # cachedEV + isValid
+    globals_bits = {
+        "head": 8,
+        "numberOfValidEVs": 8,
+        "exitFreezingMode": 32,
+        "isFreezingMode": 1,
+        "exploreCounter": 8,
+    }
+    total = per_element * cfg.buffer_size + sum(globals_bits.values())
+    return {
+        "per_buffer_element_bits": per_element,
+        "buffer_elements": cfg.buffer_size,
+        **{f"global_{k}_bits": v for k, v in globals_bits.items()},
+        "total_bits": total,
+        "total_bytes_ceil": (total + 7) // 8,
+    }
+
+
+class REPSOracle:
+    """Scalar pure-Python oracle transcribing the paper's pseudocode
+    literally (used by tests to pin the vectorized version's semantics)."""
+
+    def __init__(self, cfg: REPSConfig):
+        self.cfg = cfg
+        B = cfg.buffer_size
+        self.buf_ev = [0] * B
+        self.buf_valid = [False] * B
+        self.head = 0
+        self.num_valid = 0
+        self.explore_counter = cfg.num_pkts_bdp
+        self.is_freezing = False
+        self.exit_freezing = 0
+        self.n_cached = 0
+
+    def on_ack(self, ev: int, ecn: bool, now: int) -> None:
+        if ecn:
+            return
+        if not self.buf_valid[self.head]:
+            self.num_valid += 1
+        self.buf_ev[self.head] = ev
+        self.buf_valid[self.head] = True
+        self.head = (self.head + 1) % self.cfg.buffer_size
+        self.n_cached += 1
+        if self.is_freezing and now > self.exit_freezing:
+            self.is_freezing = False
+            self.explore_counter = self.cfg.num_pkts_bdp
+
+    def on_failure_detection(self, now: int) -> None:
+        if not self.is_freezing and self.explore_counter == 0:
+            self.is_freezing = True
+            self.exit_freezing = now + self.cfg.freezing_timeout
+
+    def _get_next_ev(self) -> int:
+        B = self.cfg.buffer_size
+        if self.num_valid > 0:
+            offset = (self.head - self.num_valid) % B
+            self.buf_valid[offset] = False
+            self.num_valid -= 1
+        else:  # must be in freezing mode
+            offset = self.head
+            self.head = (self.head + 1) % B
+        return self.buf_ev[offset]
+
+    def on_send(self, rand_ev: int) -> int:
+        is_empty = self.n_cached == 0
+        if (
+            is_empty
+            or (self.num_valid == 0 and not self.is_freezing)
+            or self.explore_counter > 0
+        ):
+            self.explore_counter = max(self.explore_counter - 1, 0)
+            return rand_ev
+        return self._get_next_ev()

@@ -1,0 +1,4 @@
+from repro.distrib import sharding
+from repro.distrib.sharding import mesh_rules, resolve_spec, shard
+
+__all__ = ["sharding", "mesh_rules", "resolve_spec", "shard"]

@@ -1,0 +1,123 @@
+"""Logical-axis sharding rules (the control surface for distribution).
+
+Models annotate activations/params with *logical* axes ("batch", "seq",
+"heads", "embed", "mlp", "experts", "vocab", "kv_seq", "stage", ...).  A
+rule table maps logical axes to mesh axes; `shard()` applies
+`with_sharding_constraint` when a mesh is active, and is a no-op otherwise
+(single-device smoke tests / examples run the same code).
+
+The rule table is deliberately swappable — §Perf hillclimbing iterates on
+it without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Baseline rule set (paper-faithful starting point: pure DP over pod+data,
+# TP/EP over model — the standard megatron-style mapping).
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_model": "model",  # sequence-parallel attention (low-head archs)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": "model",  # flash-decode: KV cache sharded along sequence
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "vocab": "model",
+    "head_dim": None,  # fsdp: ("data",)
+    "moe_fsdp": None,  # fsdp: ("data",)
+    "qkv": None,
+    "state": "model",  # SSM/RWKV channel-parallel state
+    "layers": None,
+}
+
+_local = threading.local()
+
+
+def _ctx():
+    if not hasattr(_local, "mesh"):
+        _local.mesh = None
+        _local.rules = dict(DEFAULT_RULES)
+    return _local
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + rule table for `shard()` calls in this thread."""
+    c = _ctx()
+    prev = (c.mesh, c.rules)
+    c.mesh = mesh
+    c.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        yield
+    finally:
+        c.mesh, c.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ctx().mesh
+
+
+def resolve_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules,
+    dropping mesh axes that don't exist in the active mesh.  When `shape`
+    is given, mesh axes that don't divide the dimension are dropped (e.g.
+    8 KV heads can't shard 16-ways; batch=1 long-context cells can't
+    data-parallel)."""
+    c = _ctx()
+    mesh = c.mesh
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    out = []
+    used: set[str] = set()  # a mesh axis may shard at most one dim
+    for i, ax in enumerate(logical_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        rule = c.rules.get(ax, None)
+        if rule is None:
+            kept: tuple[str, ...] = ()
+        elif isinstance(rule, str):
+            kept = (rule,) if rule in mesh_axes else ()
+        else:
+            kept = tuple(r for r in rule if r in mesh_axes)
+        kept = tuple(r for r in kept if r not in used)
+        if shape is not None and kept:
+            dim = shape[i]
+            while kept:
+                total = 1
+                for r in kept:
+                    total *= mesh.shape[r]
+                if dim % total == 0:
+                    break
+                kept = kept[:-1]  # drop minor-most mesh axis until divisible
+        used.update(kept)
+        out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain `x` to the sharding implied by its logical axes."""
+    c = _ctx()
+    if c.mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = resolve_spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(c.mesh, spec))
+
+
+def named_sharding(*logical_axes: Optional[str], shape=None) -> Optional[NamedSharding]:
+    c = _ctx()
+    if c.mesh is None:
+        return None
+    return NamedSharding(c.mesh, resolve_spec(logical_axes, shape))

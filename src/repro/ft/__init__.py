@@ -1,0 +1,15 @@
+from repro.ft import reps_channels, straggler
+from repro.ft.reps_channels import (
+    ChannelSim,
+    ChannelSimConfig,
+    OpsChannelScheduler,
+    RepsChannelScheduler,
+    run_cross_pod_reduce,
+)
+from repro.ft.straggler import LatencyECN, StepWatchdog
+
+__all__ = [
+    "reps_channels", "straggler", "ChannelSim", "ChannelSimConfig",
+    "OpsChannelScheduler", "RepsChannelScheduler", "run_cross_pod_reduce",
+    "LatencyECN", "StepWatchdog",
+]

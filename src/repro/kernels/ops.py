@@ -1,0 +1,33 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True`` — the
+kernel body runs in Python on the CPU backend, which is what the tests
+validate against the pure-jnp oracles in ``repro.kernels.ref``.  On a real
+TPU backend the same ``pallas_call`` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ecmp_hash as _eh
+from repro.kernels import queue_tick as _qt
+from repro.kernels import reps_update as _ru
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ecmp_hash(flow, ev, salt, nports):
+    """(R,128) int32 tiles -> ECMP port choice per element."""
+    return _eh.ecmp_hash_pallas(flow, ev, salt, nports, interpret=_interpret())
+
+
+def reps_tick(*args, **kwargs):
+    """Fused REPS per-tick update; see repro.kernels.reps_update."""
+    return _ru.reps_tick_pallas(*args, interpret=_interpret(), **kwargs)
+
+
+def queue_tick(*args, **kwargs):
+    """One switch tick: serve + enqueue + RED; see repro.kernels.queue_tick."""
+    return _qt.queue_tick_pallas(*args, interpret=_interpret(), **kwargs)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: one switch tick (serve + multi-enqueue + RED/ECN).
+
+The recycled balls-into-bins inner loop (§5.1) and the netsim's
+service/arrival steps fused for a single switch: every non-empty served
+queue drains one packet, then a batch of K arrivals is enqueued with FIFO
+ranking, tail-drop and RED marking.
+
+TPU mapping (DESIGN.md §3.2): the per-arrival "which queue" histogram is a
+one-hot (K_TILE x Q) comparison reduced with cumulative sums — lane-parallel
+over Q (queues on the 128-lane axis), sequential-grid-accumulated over K
+tiles so arbitrarily large arrival batches stream through VMEM while the
+running queue-occupancy block stays resident.
+
+Outputs: new queue lengths, per-arrival accept flag, RED mark flag, and the
+insert position (used by callers to place payload slots).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_TILE = 128
+
+
+def _queue_tick_kernel(
+    target_ref,  # (K_TILE, 1) int32 arrival target queue (or >= Q: no-op)
+    u_ref,  # (K_TILE, 1) float32 uniform for RED
+    qlen_ref,  # (1, Q) int32 lengths at tick start
+    serve_ref,  # (1, Q) int32 0/1 service mask
+    params_ref,  # (4,): [capacity, kmin, kmax, Q]
+    o_qlen_ref,  # (1, Q) int32 running lengths (accumulated over K tiles)
+    o_accept_ref,  # (K_TILE, 1) int32
+    o_mark_ref,  # (K_TILE, 1) int32
+    o_pos_ref,  # (K_TILE, 1) int32
+):
+    cap = params_ref[0]
+    kmin = params_ref[1]
+    kmax = params_ref[2]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        q0 = qlen_ref[...]
+        served = jnp.where((q0 > 0) & (serve_ref[...] == 1), 1, 0)
+        o_qlen_ref[...] = q0 - served
+
+    qlen = o_qlen_ref[...]  # (1, Q) running occupancy
+    Q = qlen.shape[1]
+    target = target_ref[...]  # (T, 1)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (target.shape[0], Q), 1)
+        == target
+    ).astype(jnp.int32)  # (T, Q)
+    rank = jnp.cumsum(onehot, axis=0) - onehot  # arrivals before me, same q
+    base = jnp.sum(qlen * onehot, axis=1, keepdims=True)  # qlen[target]
+    my_rank = jnp.sum(rank * onehot, axis=1, keepdims=True)
+    pos = base + my_rank
+    is_real = jnp.sum(onehot, axis=1, keepdims=True) > 0  # target < Q
+    accept = is_real & (pos < cap)
+    ramp = (pos - kmin).astype(jnp.float32) / jnp.maximum(
+        (kmax - kmin).astype(jnp.float32), 1.0
+    )
+    mark = accept & (u_ref[...] < jnp.clip(ramp, 0.0, 1.0))
+
+    counts = jnp.sum(jnp.where(accept, onehot, 0), axis=0, keepdims=True)
+    o_qlen_ref[...] = qlen + counts
+    o_accept_ref[...] = accept.astype(jnp.int32)
+    o_mark_ref[...] = mark.astype(jnp.int32)
+    o_pos_ref[...] = pos
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def queue_tick_pallas(
+    target: jax.Array,  # (K,) int32; entries >= Q are padding no-ops
+    u: jax.Array,  # (K,) float32
+    qlen: jax.Array,  # (Q,) int32
+    serve: jax.Array,  # (Q,) int32/bool
+    capacity,
+    kmin,
+    kmax,
+    *,
+    interpret: bool = True,
+):
+    K = target.shape[0]
+    Q = qlen.shape[0]
+    params = jnp.stack(
+        [
+            jnp.asarray(capacity, jnp.int32),
+            jnp.asarray(kmin, jnp.int32),
+            jnp.asarray(kmax, jnp.int32),
+            jnp.asarray(Q, jnp.int32),
+        ]
+    )
+    grid = (pl.cdiv(K, K_TILE),)
+    kcol = pl.BlockSpec((K_TILE, 1), lambda i: (i, 0))
+    qrow = pl.BlockSpec((1, Q), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _queue_tick_kernel,
+        grid=grid,
+        in_specs=[kcol, kcol, qrow, qrow, pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=(qrow, kcol, kcol, kcol),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, Q), jnp.int32),
+            jax.ShapeDtypeStruct((K, 1), jnp.int32),
+            jax.ShapeDtypeStruct((K, 1), jnp.int32),
+            jax.ShapeDtypeStruct((K, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(
+        target.reshape(K, 1).astype(jnp.int32),
+        u.reshape(K, 1).astype(jnp.float32),
+        qlen.reshape(1, Q).astype(jnp.int32),
+        serve.reshape(1, Q).astype(jnp.int32),
+        params,
+    )
+    new_qlen, accept, mark, pos = out
+    return (
+        new_qlen.reshape(Q),
+        accept.reshape(K).astype(jnp.bool_),
+        mark.reshape(K).astype(jnp.bool_),
+        pos.reshape(K),
+    )

@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each `<name>_ref` computes exactly what `repro.kernels.<name>` must produce;
+tests sweep shapes/dtypes and assert allclose/array_equal between the two.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reps as reps_core
+from repro.netsim.topology import ecmp_hash as _ecmp_hash_jnp
+
+
+# ---------------------------------------------------------------------------
+def ecmp_hash_ref(flow, ev, salt, nports):
+    return _ecmp_hash_jnp(flow, ev, salt, nports)
+
+
+# ---------------------------------------------------------------------------
+def reps_tick_ref(
+    buf_ev, buf_valid, head, num_valid, explore, freezing, exit_freeze,
+    n_cached, ack_mask, ack_ev, ack_ecn, timeout_mask, send_mask, rand_ev,
+    now, num_pkts_bdp, freezing_timeout,
+):
+    """Fused tick = on_ack -> on_failure_detection -> choose_ev, delegating
+    to repro.core.reps (itself pinned to the paper's pseudocode)."""
+    cfg = reps_core.REPSConfig(
+        buffer_size=buf_ev.shape[1],
+        evs_size=2**31 - 1,  # rand_ev supplied externally here
+        num_pkts_bdp=int(num_pkts_bdp),
+        freezing_timeout=int(freezing_timeout),
+    )
+    state = reps_core.REPSState(
+        buf_ev=jnp.asarray(buf_ev, jnp.int32),
+        buf_valid=jnp.asarray(buf_valid).astype(jnp.bool_),
+        head=jnp.asarray(head, jnp.int32),
+        num_valid=jnp.asarray(num_valid, jnp.int32),
+        explore_counter=jnp.asarray(explore, jnp.int32),
+        is_freezing=jnp.asarray(freezing).astype(jnp.bool_),
+        exit_freezing=jnp.asarray(exit_freeze, jnp.int32),
+        n_cached=jnp.asarray(n_cached, jnp.int32),
+    )
+    now = jnp.asarray(now, jnp.int32)
+    state = reps_core.on_ack(
+        cfg,
+        state,
+        jnp.asarray(ack_mask).astype(jnp.bool_),
+        jnp.asarray(ack_ev, jnp.int32),
+        jnp.asarray(ack_ecn).astype(jnp.bool_),
+        now,
+    )
+    state = reps_core.on_failure_detection(
+        cfg, state, jnp.asarray(timeout_mask).astype(jnp.bool_), now
+    )
+    # choose_ev with externally-supplied uniform EVs: replicate its logic
+    # but substitute rand_ev for the drawn randomness.
+    send = jnp.asarray(send_mask).astype(jnp.bool_)
+    B = cfg.buffer_size
+    is_empty = state.n_cached == 0
+    explore_m = send & (
+        is_empty
+        | ((state.num_valid == 0) & ~state.is_freezing)
+        | (state.explore_counter > 0)
+    )
+    recycle = send & ~explore_m
+    pop_valid = recycle & (state.num_valid > 0)
+    reuse = recycle & (state.num_valid == 0)
+    offset = jnp.where(
+        pop_valid, jnp.mod(state.head - state.num_valid, B), state.head
+    )
+    picked = jnp.take_along_axis(state.buf_ev, offset[:, None], axis=1)[:, 0]
+    ev = jnp.where(recycle, picked, jnp.asarray(rand_ev, jnp.int32))
+    oh = jax.nn.one_hot(offset, B, dtype=jnp.bool_)
+    buf_valid2 = jnp.where(pop_valid[:, None] & oh, False, state.buf_valid)
+    num_valid2 = jnp.where(pop_valid, state.num_valid - 1, state.num_valid)
+    head2 = jnp.where(reuse, (state.head + 1) % B, state.head)
+    explore2 = jnp.where(
+        explore_m,
+        jnp.maximum(state.explore_counter - 1, 0),
+        state.explore_counter,
+    )
+    return (
+        state.buf_ev,
+        buf_valid2.astype(jnp.int32),
+        head2,
+        num_valid2,
+        explore2,
+        state.is_freezing.astype(jnp.int32),
+        state.exit_freezing,
+        state.n_cached,
+        ev,
+    )
+
+
+# ---------------------------------------------------------------------------
+def queue_tick_ref(target, u, qlen, serve, capacity, kmin, kmax, tile=128):
+    """Serve-then-enqueue with FIFO ranking, tail drop and RED marking.
+
+    Mirrors the kernel's tile-streaming semantics: arrivals are processed in
+    `tile`-sized chunks; each chunk's insert positions are computed against
+    the running occupancy (initial lengths minus service plus previously
+    accepted arrivals)."""
+    Q = qlen.shape[0]
+    K = target.shape[0]
+    served = jnp.where((jnp.asarray(qlen) > 0) & (jnp.asarray(serve) == 1), 1, 0)
+    run = jnp.asarray(qlen, jnp.int32) - served
+    accepts, marks, poss = [], [], []
+    for s in range(0, K, tile):
+        t = jnp.asarray(target[s : s + tile], jnp.int32)
+        uu = jnp.asarray(u[s : s + tile], jnp.float32)
+        onehot = (t[:, None] == jnp.arange(Q)[None, :]).astype(jnp.int32)
+        rank = jnp.cumsum(onehot, axis=0) - onehot
+        base = (run[None, :] * onehot).sum(axis=1)
+        my_rank = (rank * onehot).sum(axis=1)
+        pos = base + my_rank
+        is_real = onehot.sum(axis=1) > 0
+        accept = is_real & (pos < capacity)
+        ramp = jnp.clip(
+            (pos - kmin).astype(jnp.float32)
+            / jnp.maximum(jnp.float32(kmax - kmin), 1.0),
+            0.0,
+            1.0,
+        )
+        mark = accept & (uu < ramp)
+        run = run + jnp.where(accept[:, None], onehot, 0).sum(axis=0)
+        accepts.append(accept)
+        marks.append(mark)
+        poss.append(pos)
+    return (
+        run,
+        jnp.concatenate(accepts),
+        jnp.concatenate(marks),
+        jnp.concatenate(poss),
+    )

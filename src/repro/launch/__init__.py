@@ -1,0 +1,5 @@
+# NOTE: repro.launch.dryrun must be imported/run FIRST in a process when the
+# 512-device dry-run is wanted (it sets XLA_FLAGS before jax init).
+from repro.launch import mesh, roofline
+
+__all__ = ["mesh", "roofline"]

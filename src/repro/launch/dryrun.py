@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell on placeholder devices; record memory_analysis / cost_analysis /
+roofline terms.  (The two lines above MUST run before any other import —
+jax locks the device count at first init.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-nemo-12b \
+        --shape train_4k [--multi-pod] [--rules baseline]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results append to results/dryrun/<arch>__<shape>__<mesh>[__<rules>].json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_configs, applicable_shapes, get_config
+from repro.distrib import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.train import TrainConfig, make_train_step
+from repro.train.optimizer import opt_state_axes
+
+RESULTS_DIR = "results/dryrun"
+
+# Per-arch defaults used by --all: (rules, train microbatches).  Chosen so
+# every baseline cell fits 16 GB/chip (see EXPERIMENTS.md §Dry-run).
+ARCH_DEFAULTS = {
+    "mistral-nemo-12b": ("fsdp", 8),
+    "gemma-7b": ("fsdp", 8),
+    "qwen1.5-4b": ("fsdp", 4),
+    "gemma3-4b": ("fsdp", 4),
+    "qwen3-moe-235b-a22b": ("fsdp", 16),
+    "phi3.5-moe-42b-a6.6b": ("fsdp", 8),
+    "musicgen-large": ("fsdp", 4),
+    "rwkv6-1.6b": ("fsdp", 4),
+    "zamba2-7b": ("fsdp", 8),
+    "llava-next-mistral-7b": ("fsdp", 8),
+}
+
+# Named rule-table variants (hillclimb levers; EXPERIMENTS.md §Perf).
+RULE_SETS: dict[str, dict] = {
+    "baseline": {},
+    # fsdp: secondary sharding of params/optimizer over the data axis
+    # (ZeRO-3 style) — GSPMD all-gathers weights at use; the MoE layer
+    # gathers its expert store explicitly inside shard_map.
+    "fsdp": {
+        "embed": ("data",),
+        "head_dim": ("data",),
+        "moe_fsdp": ("data",),
+    },
+    # seq-activations: also shard long activations along sequence between
+    # attention blocks (reduces HBM term for long-context cells).
+    "seq_act": {"seq": ("model",)},
+}
+
+
+def axes_to_shardings(mesh, axes_tree, like_tree=None, rules=None):
+    """Resolve a logical-axis tree to NamedShardings; with `like_tree`
+    (matching ShapeDtypeStructs) indivisible mesh axes are dropped."""
+    is_ax = lambda x: isinstance(x, tuple)
+    with shd.mesh_rules(mesh, rules):
+        if like_tree is None:
+            return jax.tree.map(
+                lambda ax: jax.sharding.NamedSharding(mesh, shd.resolve_spec(ax)),
+                axes_tree,
+                is_leaf=is_ax,
+            )
+        flat_ax = jax.tree.leaves(axes_tree, is_leaf=is_ax)
+        flat_like, treedef = jax.tree.flatten(like_tree)
+        assert len(flat_ax) == len(flat_like), "axes/like tree mismatch"
+        shards = [
+            jax.sharding.NamedSharding(mesh, shd.resolve_spec(ax, l.shape))
+            for ax, l in zip(flat_ax, flat_like)
+        ]
+        return jax.tree.unflatten(treedef, shards)
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    rules_name: str = "baseline",
+    microbatches: int = 1,
+    remat_policy=None,
+    save: bool = True,
+    verbose: bool = True,
+):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rules = RULE_SETS[rules_name]
+    t0 = time.time()
+
+    # training keeps fp32 master weights; serving stores bf16 weights
+    p_dtype = jnp.float32 if shape.kind == "train" else jnp.bfloat16
+    with shd.mesh_rules(mesh, rules):
+        p_axes = model.param_axes()
+        params_shape = jax.eval_shape(
+            lambda k: model.init_params(k, p_dtype), jax.random.PRNGKey(0)
+        )
+        p_shard = axes_to_shardings(mesh, p_axes, params_shape, rules)
+        if shape.kind == "train":
+            from repro.train.optimizer import init_opt_state
+
+            opt_shape = jax.eval_shape(init_opt_state, params_shape)
+            o_shard = axes_to_shardings(mesh, opt_state_axes(p_axes), opt_shape, rules)
+            batch = model.input_specs(shape)
+            b_shard = axes_to_shardings(mesh, model.batch_axes(shape), batch, rules)
+            # per-microbatch batch must stay divisible by the batch shards
+            batch_shards = 1
+            with shd.mesh_rules(mesh, rules):
+                for ax in shd.resolve_spec(("batch",)):
+                    if ax is None:
+                        continue
+                    for a in (ax if isinstance(ax, tuple) else (ax,)):
+                        batch_shards *= mesh.shape[a]
+            mb_cap = max(1, shape.global_batch // batch_shards)
+            microbatches = min(microbatches, mb_cap)
+            tcfg = TrainConfig(microbatches=microbatches, remat_policy=remat_policy)
+            step = make_train_step(model, tcfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            assert model.prefill_fn is not None, f"{arch} has no prefill path"
+            batch = model.input_specs(shape)
+            b_shard = axes_to_shardings(mesh, model.batch_axes(shape), batch, rules)
+
+            def prefill(params, b):
+                from repro.models.common import cast_tree
+
+                return model.prefill_fn(
+                    cast_tree(params, jnp.bfloat16), b, shape.seq_len
+                )
+
+            jitted = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_shape, batch)
+        else:  # decode
+            state_spec = model.decode_state_spec(shape)
+            s_shard = axes_to_shardings(mesh, model.decode_state_axes(), state_spec, rules)
+            B = shape.global_batch
+            tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            t_shard = axes_to_shardings(mesh, ("batch", None), tokens, rules)
+            clen = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def decode(params, state, tok, cache_len):
+                from repro.models.common import cast_tree
+
+                return model.decode_fn(
+                    cast_tree(params, jnp.bfloat16), state, tok, cache_len
+                )
+
+            jitted = jax.jit(
+                decode,
+                in_shardings=(
+                    p_shard,
+                    s_shard,
+                    t_shard,
+                    jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                ),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_shape, state_spec, tokens, clen)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        roof = rl.analyze(compiled, n_dev, rl.model_flops_for(cfg, shape))
+        if os.environ.get("DRYRUN_DUMP_HLO"):
+            os.makedirs("results/hlo", exist_ok=True)
+            mesh_tag = "mp" if multi_pod else "sp"
+            with open(
+                f"results/hlo/{arch}__{shape_name}__{mesh_tag}.hlo.txt", "w"
+            ) as f:
+                f.write(compiled.as_text())
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "rules": rules_name,
+        "microbatches": microbatches,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+            "peak_live_gb": (
+                mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes
+            )
+            / 1e9,
+        },
+        "flops_per_device": roof.flops,
+        "hbm_bytes_per_device": roof.hbm_bytes,
+        "collective_bytes_per_device": roof.coll_bytes,
+        "collective_breakdown": {
+            k: v for k, v in roof.coll_breakdown.items() if v
+        },
+        "model_flops_global": roof.model_flops,
+        **roof.row(),
+    }
+    if verbose:
+        print(
+            f"[{arch} x {shape_name} x {mesh_name} x {rules_name}] "
+            f"compile={t_compile:.0f}s peak={rec['memory']['peak_live_gb']:.2f}GB "
+            f"t_comp={roof.t_compute*1e3:.1f}ms t_mem={roof.t_memory*1e3:.1f}ms "
+            f"t_coll={roof.t_collective*1e3:.1f}ms bottleneck={roof.bottleneck} "
+            f"roofline_frac={roof.roofline_fraction:.3f}"
+        )
+        print(compiled.memory_analysis())
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = ""
+        fn = f"{RESULTS_DIR}/{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="baseline", choices=sorted(RULE_SETS))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat-policy", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch, cfg in sorted(all_configs().items()):
+            rules_name, mb = ARCH_DEFAULTS.get(arch, ("baseline", 1))
+            for shape_name in applicable_shapes(cfg):
+                try:
+                    dryrun_cell(
+                        arch, shape_name, multi_pod=args.multi_pod,
+                        rules_name=rules_name,
+                        microbatches=mb if SHAPES[shape_name].kind == "train" else 1,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, str(e)[:200]))
+        print(f"\n{'=' * 60}\nfailures: {len(failures)}")
+        for f in failures:
+            print("  FAIL:", f)
+        raise SystemExit(1 if failures else 0)
+
+    dryrun_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        rules_name=args.rules, microbatches=args.microbatches,
+        remat_policy=args.remat_policy,
+    )
+
+
+if __name__ == "__main__":
+    main()

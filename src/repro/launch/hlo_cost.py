@@ -1,0 +1,374 @@
+"""Trip-count-aware cost analysis over post-optimization HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts every computation ONCE,
+so anything under a ``while`` (every ``lax.scan`` — our layer stacks, flash-
+attention KV chunks, SSM chunk scans, microbatch accumulation) is
+undercounted by its trip count (verified experimentally: a scan of 8
+matmuls reports 1/8 of the unrolled FLOPs).  XLA *does* annotate
+``known_trip_count`` on while ops, so we walk the module call graph —
+ENTRY plus (transitively) while bodies/conditions, multiplying trip
+counts — and accumulate per-op costs:
+
+  * FLOPs: ``dot`` ops (2 x prod(result dims) x prod(contracted lhs dims));
+    convolutions likewise.  Elementwise FLOPs are ignored (matmul-dominated
+    models; documented).
+  * HBM bytes: operand + result bytes of every op except free ops
+    (parameter/constant/tuple/get-tuple-element/bitcast) — mirroring XLA's
+    own per-op accounting.  Fusion bodies and reducer computations are NOT
+    traversed (their internals live in registers); the fusion op's own
+    operands/results are the HBM traffic.
+  * Collective bytes: per-kind ring-model factors (see roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COLL_FACTORS = {
+    "all-reduce": ("operand", 2.0),
+    "all-gather": ("result", 1.0),
+    "reduce-scatter": ("operand", 1.0),
+    "all-to-all": ("operand", 1.0),
+    "collective-permute": ("operand", 1.0),
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPKIND_RE = re.compile(r"^((?:\([^)]*\))|(?:[\w\[\],{}]+))\s+([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*\))?\s*->[^{]*\{|^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\{")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLS_RE = re.compile(r"(?:body|condition)=%?([\w\.\-]+)")
+
+
+def _shape_info(text: str) -> tuple[int, list[list[int]]]:
+    """Total bytes and list of dim-lists for every shape literal in text."""
+    total = 0
+    dims_all = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",")] if dims else []
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        dims_all.append(ds)
+    return total, dims_all
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0  # operands + results (prescribed; CPU-fusion UB)
+    bytes_min: float = 0.0  # 2 x result bytes (perfect-fusion floor)
+    coll_bytes: float = 0.0
+    coll_breakdown: dict = dataclasses.field(default_factory=dict)
+    warnings: list = dataclasses.field(default_factory=list)
+
+
+class _Op:
+    __slots__ = ("name", "kind", "result_text", "rest", "line")
+
+    def __init__(self, name, kind, result_text, rest, line):
+        self.name = name
+        self.kind = kind
+        self.result_text = result_text
+        self.rest = rest
+        self.line = line
+
+
+def _parse_computations(txt: str) -> dict[str, list[_Op]]:
+    comps: dict[str, list[_Op]] = {}
+    cur: list[_Op] | None = None
+    name = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY") or stripped.startswith("%")):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+                if m:
+                    name = m.group(1)
+                    cur = []
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            comps[name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        opname, rhs = m.group(1), m.group(2)
+        km = _OPKIND_RE.match(rhs)
+        if not km:
+            continue
+        cur.append(_Op(opname, km.group(2), km.group(1), km.group(3), stripped))
+    return comps
+
+
+_CALLS_ATTR_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+
+def _dus_inplace_bytes(op: _Op, table: dict, comps: dict) -> float | None:
+    """In-place update traffic for dynamic-update-slice (and fusions whose
+    root is a DUS): XLA aliases the target buffer, so real HBM traffic is
+    ~2x the *update slice*, not the whole target.  Returns corrected bytes
+    or None when the pattern doesn't apply.
+
+    Without this, every lax.scan's per-iteration ys-stacking write counts
+    the full (L, ...) stacked array each iteration — an L-fold overcount
+    (measured: 155 TB -> ~10 TB on qwen3-moe train)."""
+    roots: list[_Op] = []
+    if op.kind == "dynamic-update-slice":
+        roots = [op]
+        inner_table = table
+    elif op.kind == "fusion":
+        m = _CALLS_ATTR_RE.search(op.line)
+        if not m or m.group(1) not in comps:
+            return None
+        body = comps[m.group(1)]
+        if not body:
+            return None
+        root = body[-1]
+        inner_table = {o.name: o.result_text for o in body}
+        if root.kind == "dynamic-update-slice":
+            roots = [root]
+        elif root.kind == "tuple":
+            names = _OPERAND_RE.findall(root.rest)
+            cand = [o for o in body if o.name in names]
+            if cand and all(o.kind == "dynamic-update-slice" for o in cand):
+                roots = cand
+        if not roots:
+            return None
+    else:
+        return None
+
+    total = 0.0
+    for r in roots:
+        ops_ = _OPERAND_RE.findall(r.rest)
+        if len(ops_) < 2:
+            return None
+        upd = ops_[1]  # (target, update, indices...)
+        ub = _shape_info(inner_table.get(upd, ""))[0]
+        if ub == 0:
+            return None
+        total += 2.0 * ub
+    return total
+
+
+def _fusion_operand_bytes(op: _Op, table: dict, comps: dict) -> float | None:
+    """Operand traffic of a fusion, correcting for internal dynamic-slice:
+    a fusion that takes the full stacked (L, ...) array but only reads one
+    layer's slice (every lax.scan body does this for its xs) touches the
+    slice, not the array.  Returns corrected operand bytes or None."""
+    m = _CALLS_ATTR_RE.search(op.line)
+    if not m or m.group(1) not in comps:
+        return None
+    body = comps[m.group(1)]
+    if not body:
+        return None
+    inner = {o.name: o for o in body}
+    # map parameter index -> param op name
+    params = {}
+    for o in body:
+        if o.kind == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", o.line)
+            if pm:
+                params[int(pm.group(1))] = o.name
+    # consumers of each param
+    consumers: dict[str, list[_Op]] = {}
+    for o in body:
+        if o.kind == "parameter":
+            continue
+        for ref in _OPERAND_RE.findall(o.rest):
+            if ref in inner and inner[ref].kind == "parameter":
+                consumers.setdefault(ref, []).append(o)
+    operands = _OPERAND_RE.findall(op.rest)
+    total = 0.0
+    for i, name in enumerate(operands):
+        full = _shape_info(table.get(name, ""))[0]
+        pname = params.get(i)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(c.kind == "dynamic-slice" for c in cons):
+            total += sum(_shape_info(c.result_text)[0] for c in cons)
+        else:
+            total += full
+    return total
+
+
+def _dot_flops(op: _Op, shapes: dict[str, str]) -> float:
+    result_bytes, result_dims = _shape_info(op.result_text)
+    n_out = 1
+    for ds in result_dims:
+        for d in ds:
+            n_out *= d
+    # contracted dims from lhs shape + lhs_contracting_dims
+    operands = _OPERAND_RE.findall(op.rest.split("),")[0] + ")")
+    lhs_shape_text = shapes.get(operands[0], "") if operands else ""
+    _, lhs_dims = _shape_info(lhs_shape_text)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contracted = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx != "" and int(idx) < len(lhs_dims[0]):
+                contracted *= lhs_dims[0][int(idx)]
+    return 2.0 * n_out * contracted
+
+
+def analyze_hlo(txt: str) -> HloCost:
+    comps = _parse_computations(txt)
+    # result-shape symbol table per computation
+    shape_of: dict[str, dict[str, str]] = {
+        cname: {op.name: op.result_text for op in ops}
+        for cname, ops in comps.items()
+    }
+
+    cost = HloCost(coll_breakdown=defaultdict(float))
+    entry = None
+    for cname in comps:
+        if cname.startswith("main") or cname == "main":
+            entry = cname
+    if entry is None:  # fall back: computation named ENTRY parse missed
+        entry = max(comps, key=lambda c: len(comps[c]))
+        cost.warnings.append(f"entry guess: {entry}")
+
+    seen_stack = set()
+
+    def walk(cname: str, scale: float):
+        if cname not in comps or cname in seen_stack:
+            return
+        seen_stack.add(cname)
+        table = shape_of[cname]
+        for op in comps[cname]:
+            kind = op.kind
+            if kind == "while":
+                m = _TRIP_RE.search(op.line)
+                trips = float(m.group(1)) if m else 1.0
+                if not m:
+                    cost.warnings.append(f"no trip_count: {op.name}")
+                for sub in _CALLS_RE.findall(op.line):
+                    walk(sub, scale * trips)
+                continue
+            if kind in _FREE_OPS:
+                continue
+            if kind.startswith("conditional"):
+                for sub in re.findall(r"%([\w\.\-]+)", op.line.split("branch_computations")[-1]):
+                    if sub in comps:
+                        walk(sub, scale)
+            # bytes: result + operands (looked up); corrected for in-place
+            # DUS writes and fusion-internal dynamic-slice reads
+            inplace = _dus_inplace_bytes(op, table, comps)
+            rb, _ = _shape_info(op.result_text)
+            if inplace is not None:
+                cost.bytes_accessed += scale * inplace
+                cost.bytes_min += scale * inplace
+            else:
+                ob_corr = None
+                if op.kind == "fusion":
+                    ob_corr = _fusion_operand_bytes(op, table, comps)
+                elif op.kind == "dynamic-slice":
+                    ob_corr = float(rb)  # reads only the slice
+                if ob_corr is None:
+                    ob_corr = 0.0
+                    for operand in _OPERAND_RE.findall(op.rest):
+                        if operand in table:
+                            ob_corr += _shape_info(table[operand])[0]
+                cost.bytes_accessed += scale * (rb + ob_corr)
+                cost.bytes_min += scale * 2.0 * rb
+            # flops
+            if kind == "dot":
+                cost.flops += scale * _dot_flops(op, table)
+            elif kind == "convolution":
+                rb, rd = _shape_info(op.result_text)
+                cost.flops += scale * 2.0 * (rb / max(_DTYPE_BYTES.get("f32", 4), 1))
+            # collectives
+            base_kind = kind.replace("-start", "").replace("-done", "")
+            if base_kind in _COLL_FACTORS and not kind.endswith("-done"):
+                side, factor = _COLL_FACTORS[base_kind]
+                if side == "result":
+                    cb, _ = _shape_info(op.result_text)
+                else:
+                    cb = 0
+                    for operand in _OPERAND_RE.findall(op.rest):
+                        if operand in table:
+                            ob, _ = _shape_info(table[operand])
+                            cb += ob
+                    if cb == 0:
+                        cb, _ = _shape_info(op.result_text)
+                moved = scale * cb * factor
+                cost.coll_bytes += moved
+                cost.coll_breakdown[base_kind] += moved
+        seen_stack.discard(cname)
+
+    walk(entry, 1.0)
+    cost.coll_breakdown = dict(cost.coll_breakdown)
+    return cost
+
+
+def breakdown(txt: str) -> list[tuple[str, float, float, float]]:
+    """Per-(computation, op-kind) cost rows scaled by trip count:
+    [(comp/op_kind, trips, flops, bytes)] sorted by bytes desc — the
+    §Perf profiling view."""
+    comps = _parse_computations(txt)
+    shape_of = {
+        c: {op.name: op.result_text for op in ops} for c, ops in comps.items()
+    }
+    entry = None
+    for cname in comps:
+        if cname.startswith("main"):
+            entry = cname
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c]))
+    rows: dict[tuple[str, str], list[float]] = {}
+
+    def walk(cname, scale, stack=()):
+        if cname not in comps or cname in stack:
+            return
+        table = shape_of[cname]
+        for op in comps[cname]:
+            if op.kind == "while":
+                m = _TRIP_RE.search(op.line)
+                trips = float(m.group(1)) if m else 1.0
+                for sub in _CALLS_RE.findall(op.line):
+                    walk(sub, scale * trips, stack + (cname,))
+                continue
+            if op.kind in _FREE_OPS:
+                continue
+            inplace = _dus_inplace_bytes(op, table, comps)
+            rb, _ = _shape_info(op.result_text)
+            if inplace is not None:
+                b = inplace
+            else:
+                ob_corr = None
+                if op.kind == "fusion":
+                    ob_corr = _fusion_operand_bytes(op, table, comps)
+                elif op.kind == "dynamic-slice":
+                    ob_corr = float(rb)
+                if ob_corr is None:
+                    ob_corr = 0.0
+                    for operand in _OPERAND_RE.findall(op.rest):
+                        if operand in table:
+                            ob_corr += _shape_info(table[operand])[0]
+                b = rb + ob_corr
+            fl = _dot_flops(op, table) if op.kind == "dot" else 0.0
+            key = (cname, op.kind)
+            cur = rows.setdefault(key, [scale, 0.0, 0.0])
+            cur[1] += scale * fl
+            cur[2] += scale * b
+
+    walk(entry, 1.0)
+    out = [(f"{c}/{k}", v[0], v[1], v[2]) for (c, k), v in rows.items()]
+    return sorted(out, key=lambda r: -r[3])

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  The single-pod production mesh is 16x16 = 256
+chips (one v5e pod); multi-pod prepends a "pod" axis (2 x 256 = 512 chips)
+— the pod axis crosses the DCN, which is where repro.ft.reps_channels
+applies the paper's technique.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,248 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per the brief (EXPERIMENTS.md §Roofline):
+
+    compute    = device_FLOPs / PEAK_FLOPS
+    memory     = device_bytes / HBM_BW
+    collective = device_collective_bytes_moved / LINK_BW
+
+``compiled.cost_analysis()`` reports per-device (post-SPMD) FLOPs and bytes.
+Collective bytes are NOT in cost_analysis; we parse the post-optimization
+HLO and sum shape bytes of every collective op, with per-op ring-algorithm
+byte-movement factors:
+
+    all-reduce        2 x operand bytes        (reduce-scatter + all-gather)
+    all-gather        1 x result bytes         ((n-1)/n ~ 1)
+    reduce-scatter    1 x operand bytes
+    all-to-all        1 x operand bytes
+    collective-permute 1 x operand bytes
+
+Hardware constants (TPU v5e, per the brief): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.  The pod axis actually rides DCN (slower); the
+uniform 50 GB/s figure therefore *understates* the multi-pod collective
+term — flagged in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = {
+    "all-reduce": ("operand", 2.0),
+    "all-gather": ("result", 1.0),
+    "reduce-scatter": ("operand", 1.0),
+    "all-to-all": ("operand", 1.0),
+    "collective-permute": ("operand", 1.0),
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum byte-movement per collective kind from post-optimization HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        for kind, (side, factor) in _COLLECTIVES.items():
+            # match "= <shape> kind(" — op use, not metadata mentions
+            m = re.search(rf"=\s+(.*?)\s+{kind}(?:-start|-done)?\(", ls)
+            if not m:
+                continue
+            if kind == "all-reduce" and re.search(r"all-reduce-done\(", ls):
+                continue  # bytes counted at -start
+            result_part = m.group(1)
+            operand_part = ls[m.end():]
+            text = result_part if side == "result" else operand_part
+            b = _shape_bytes(text)
+            if side == "operand" and b == 0:  # operand may be a %ref; fall back
+                b = _shape_bytes(result_part)
+            out[kind] += b * factor
+            out["count"] += 1
+            break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device HLO bytes accessed
+    coll_bytes: float  # per-device collective bytes moved (factored)
+    coll_breakdown: dict
+    n_devices: int
+    model_flops: float  # 6*N*D (global, dense/active)
+    hbm_bytes_min: float = 0.0  # perfect-fusion floor (2 x result bytes)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops (remat/redundancy waste)."""
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful compute time / achievable step time (max of terms)."""
+        t_useful = self.model_flops / self.n_devices / PEAK_FLOPS
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_step if t_step else 0.0
+
+    @property
+    def t_memory_min(self) -> float:
+        return self.hbm_bytes_min / HBM_BW
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_memory_min_s": self.t_memory_min,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, n_devices: int, model_flops: float) -> Roofline:
+    """Trip-count-aware analysis of the compiled HLO (repro.launch.hlo_cost).
+
+    ``compiled.cost_analysis()`` counts while bodies once, undercounting
+    every lax.scan by its trip count; our analyzer walks ENTRY + while
+    bodies with ``known_trip_count`` scaling (validated against unrolled
+    references in tests/test_roofline.py)."""
+    from repro.launch.hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(compiled.as_text())
+    return Roofline(
+        flops=hc.flops,
+        hbm_bytes=hc.bytes_accessed,
+        coll_bytes=hc.coll_bytes,
+        coll_breakdown=hc.coll_breakdown,
+        n_devices=n_devices,
+        model_flops=model_flops,
+        hbm_bytes_min=hc.bytes_min,
+    )
+
+
+_COUNT_CACHE: dict = {}
+
+
+def exact_param_counts(cfg) -> tuple[float, float, float]:
+    """(matmul-active params, expert params total, shared-block params),
+    counted from the real init via eval_shape (no allocation).
+
+    "matmul-active" excludes the embedding table gather but includes the
+    LM head (tied embeddings still pay the logits matmul)."""
+    if cfg.name in _COUNT_CACHE:
+        return _COUNT_CACHE[cfg.name]
+    import numpy as np
+
+    from repro.models.model_zoo import build_model
+
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init_params(k), jax.random.PRNGKey(0))
+    total = expert = shared = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = float(np.prod(leaf.shape))
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if keys == "embed":
+            if cfg.tie_embeddings:
+                total += n  # logits matmul reuses the table
+            continue
+        total += n
+        if "/moe/w" in keys or keys.endswith(("moe/w1", "moe/w3", "moe/w2")):
+            expert += n
+        if keys.startswith("shared/"):
+            shared += n
+    _COUNT_CACHE[cfg.name] = (total, expert, shared)
+    return total, expert, shared
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Useful model FLOPs for the cell: 2*N_active*D per forward pass
+    (+ attention score/value FLOPs, which 6ND omits and which dominate at
+    32k context), x3 for training (bwd ~ 2x fwd).
+
+    MoE: only top_k/n_experts of the expert store is active per token.
+    Zamba: the shared block's params are *applied* n_groups times."""
+    total, expert, shared = exact_param_counts(cfg)
+    n_active = total - expert * (1.0 - cfg.top_k / max(cfg.n_experts, 1)) if cfg.n_experts else total
+    if cfg.shared_attn_period:
+        groups = cfg.n_layers // cfg.shared_attn_period
+        n_active += shared * (groups - 1)
+
+    B, S = shape.global_batch, shape.seq_len
+    mult = 3.0 if shape.kind == "train" else 1.0
+    tokens = B * S if shape.kind in ("train", "prefill") else B
+
+    # attention score+value flops (causal ~ S/2 average context)
+    attn = 0.0
+    if cfg.n_kv_heads or cfg.shared_attn_period:
+        H, hd = cfg.n_heads, cfg.head_dim
+        if cfg.shared_attn_period:
+            n_attn_layers = cfg.n_layers // cfg.shared_attn_period
+        else:
+            n_attn_layers = cfg.n_layers
+        if shape.kind in ("train", "prefill"):
+            if cfg.window_pattern:
+                w, period = cfg.window_pattern
+                ctx_local = min(w, S)
+                n_glob = cfg.n_layers // period
+                n_loc = cfg.n_layers - n_glob
+                attn = 4.0 * B * H * hd * S * (
+                    n_glob * (S / 2) + n_loc * ctx_local
+                )
+            else:
+                ctx = min(S, getattr(cfg, "shared_attn_window", S)) if cfg.shared_attn_period else S
+                attn = 4.0 * B * H * hd * S * (ctx / 2) * n_attn_layers
+        else:  # decode: one token attends over the cache
+            ctx = min(S, cfg.shared_attn_window) if cfg.shared_attn_period else S
+            attn = 4.0 * B * H * hd * ctx * n_attn_layers
+
+    return mult * (2.0 * n_active * tokens + attn)

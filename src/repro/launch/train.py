@@ -1,0 +1,92 @@
+"""Training launcher: real training on local devices (CPU here), with
+checkpoint/restart, straggler watchdog, and optional REPS channel
+scheduling telemetry for the cross-pod axis.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mistral-nemo-12b \
+        --reduced --steps 50 --batch 8 --seq 128 [--ckpt-dir ckpts] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.data import SyntheticLM
+from repro.ft import StepWatchdog
+from repro.models import build_model
+from repro.train import (
+    AdamWConfig,
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+)
+from repro.train.optimizer import opt_state_axes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b")
+    ap.add_argument("--reduced", action="store_true", help="tiny same-family config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = build_model(cfg)
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=5, decay_steps=max(args.steps, 10)),
+        microbatches=args.microbatches,
+    )
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    params, opt = init_train_state(model, jax.random.PRNGKey(0))
+    start = 0
+    if args.resume and args.ckpt_dir:
+        path = ckpt.latest(args.ckpt_dir)
+        if path:
+            restored, start = ckpt.restore(path, {"params": params, "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+            print(f"resumed from {path} at step {start}")
+
+    data = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=17)
+    watchdog = StepWatchdog()
+    pending = None
+    for i in range(start, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in data.shard_batch(i).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.time() - t0
+        if watchdog.observe(dt):
+            print(f"step {i}: WATCHDOG straggling steps detected")
+        if i % 5 == 0 or i == args.steps - 1:
+            print(
+                f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} "
+                f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+            )
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            if pending:
+                pending.join()
+            pending = ckpt.save_async(
+                f"{args.ckpt_dir}/step_{i+1}", i + 1,
+                {"params": params, "opt": opt},
+            )
+    if pending:
+        pending.join()
+    print(f"done; loss floor (markov entropy) = {data.entropy_floor():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models import attention, common, mlp, model_zoo, recurrent, ssm, transformer
+from repro.models.model_zoo import Model, build_model, cross_entropy
+
+__all__ = [
+    "attention", "common", "mlp", "model_zoo", "recurrent", "ssm",
+    "transformer", "Model", "build_model", "cross_entropy",
+]

@@ -1,0 +1,234 @@
+"""GQA attention: flash-style (KV-chunked online softmax) for train/prefill,
+sequence-sharded-cache attention for decode.
+
+Sharding strategies (DESIGN.md §5):
+  * "heads":    q/k/v heads sharded over the model axis (Megatron-style);
+                KV heads with fewer heads than shards rely on GSPMD padding.
+  * "sequence": for architectures whose head count does not divide the
+                model axis (qwen1.5: 20H, gemma3: 8H) — queries are sharded
+                along the sequence, K/V stay replicated; attention FLOPs
+                still split 16-way and no head padding is wasted.
+
+Decode: the KV cache is sharded along the *sequence* axis ("kv_seq" rule);
+softmax reductions over the sharded axis are partitioned by GSPMD into
+per-shard partials + all-reduce — the flash-decode pattern without manual
+collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distrib.sharding import shard
+from repro.models.common import apply_rope, dense_init, split_keys
+
+NEG_INF = -1e30
+
+
+def init_attn_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, Hk, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, Hk, hd), d, dtype),
+        "wo": dense_init(ks[3], (H, hd, d), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hk, hd), dtype)
+        p["bv"] = jnp.zeros((Hk, hd), dtype)
+    return p
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, n_heads: int):
+    """GQA: repeat KV heads to the full head count.  Under a head-sharded
+    constraint each device materializes only its own repeated heads, so this
+    costs no replicated memory — and it keeps every attention einsum purely
+    head-parallel (no grouped-dim reshape for GSPMD to trip on)."""
+    Hk = k.shape[-2]
+    if Hk == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // Hk, axis=-2)
+
+
+def flash_attention(
+    q,  # (B, Sq, H, hd)
+    k,  # (B, Skv, Hk, hd)
+    v,  # (B, Skv, Hk, hd)
+    q_pos,  # (Sq,) absolute positions of queries
+    kv_pos,  # (Skv,)
+    window: Optional[int] = None,  # sliding window (None = full causal)
+    chunk: int = 1024,
+):
+    """KV-chunked online-softmax attention (keeps peak memory at
+    (B, H, Sq, chunk) instead of (B, H, Sq, Skv))."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = q.astype(jnp.float32) * scale
+
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kv_posp = jnp.pad(kv_pos, (0, pad), constant_values=-(10**9))
+    kc = kp.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_posp.reshape(n_chunks, chunk)
+
+    m0 = jnp.full((B, Sq, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    o0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+
+    def body(carry, blk):
+        m, l, o = carry
+        kb, vb, pb = blk  # (B, c, H, hd), (B, c, H, hd), (c,)
+        s = jnp.einsum("bqhd,bchd->bqhc", qf, kb.astype(jnp.float32))
+        ok = q_pos[None, :, None, None] >= pb[None, None, None, :]
+        if window is not None:
+            ok = ok & (
+                q_pos[None, :, None, None] - pb[None, None, None, :] < window
+            )
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, o_new), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (kc, vc, pc))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def attention_train(x, p, cfg: ModelConfig, positions, window=None):
+    """Full-sequence attention (training / prefill forward)."""
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    if cfg.attn_strategy == "sequence":
+        q = shard(q, "batch", "seq_model", None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+    else:
+        # expand KV to full heads pre-constraint so the whole attention is
+        # head-parallel even when n_kv_heads < the model axis (GQA).
+        k = _expand_kv(k, cfg.n_heads)
+        v = _expand_kv(v, cfg.n_heads)
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "seq", "heads", None)
+        v = shard(v, "batch", "seq", "heads", None)
+    out = flash_attention(q, k, v, positions, positions, window=window)
+    if cfg.attn_strategy == "sequence":
+        out = shard(out, "batch", "seq_model", None, None)
+    else:
+        out = shard(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", "seq", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    n_layers: int
+    batch: int
+    max_len: int
+    n_kv_heads: int
+    head_dim: int
+
+    def init(self, dtype=jnp.bfloat16):
+        shape = (
+            self.n_layers,
+            self.batch,
+            self.max_len,
+            self.n_kv_heads,
+            self.head_dim,
+        )
+        z = jnp.zeros(shape, dtype)
+        return {"k": z, "v": z}
+
+
+def shard_cache(cache):
+    return {
+        "k": shard(cache["k"], None, "batch", "kv_seq", None, None),
+        "v": shard(cache["v"], None, "batch", "kv_seq", None, None),
+    }
+
+
+def attention_decode(x, p, cfg: ModelConfig, layer_k, layer_v, cache_len, window=None):
+    """One-token decode against a sequence-sharded KV cache.
+
+    x: (B, 1, d); layer_k/v: (B, S, Hk, hd) (already containing this step's
+    K/V at position cache_len); cache_len: scalar int32.
+    """
+    B = x.shape[0]
+    pos = jnp.full((1,), cache_len, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.rope_theta:
+        q = apply_rope(q, pos, cfg.rope_theta)
+    H, hd = cfg.n_heads, cfg.head_dim
+    S = layer_k.shape[1]
+    kf = _expand_kv(layer_k, H).astype(jnp.float32)
+    vf = _expand_kv(layer_v, H).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = (q.astype(jnp.float32) * scale).reshape(B, H, hd)
+    kv_pos = jnp.arange(S)
+    s = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    # flash-decode: pin the score tensor to the cache's sequence sharding so
+    # each shard computes attention over its own KV chunk and only the
+    # softmax reductions cross shards — without this constraint GSPMD
+    # gathers the whole cache per layer (EXPERIMENTS.md §Perf iter 4).
+    s = shard(s, "batch", None, "kv_seq")
+    ok = kv_pos[None, None, :] <= cache_len
+    if window is not None:
+        ok = ok & (cache_len - kv_pos[None, None, :] < window)
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)  # GSPMD partitions the sharded-S reduce
+    w = shard(w, "batch", None, "kv_seq")
+    out = jnp.einsum("bhs,bshd->bhd", w, vf)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y
+
+
+def decode_kv_update(p, cfg: ModelConfig, x, cache_k, cache_v, cache_len):
+    """Project this token's K/V and write them at cache_len."""
+    pos = jnp.full((1,), cache_len, jnp.int32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    if cfg.rope_theta:
+        k = apply_rope(k, pos, cfg.rope_theta)
+    # Masked select rather than dynamic_update_slice: a DUS with a dynamic
+    # index into the sequence-sharded cache forces GSPMD into "involuntary
+    # full rematerialization" (replicate + repartition the whole cache per
+    # layer); the elementwise select partitions cleanly along the sharded
+    # sequence (verified in the dry-run HLO — EXPERIMENTS.md §Perf).
+    S = cache_k.shape[1]
+    sel = (jnp.arange(S) == cache_len)[None, :, None, None]
+    ck = jnp.where(sel, k.astype(cache_k.dtype), cache_k)
+    cv = jnp.where(sel, v.astype(cache_v.dtype), cache_v)
+    return ck, cv

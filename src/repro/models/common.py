@@ -1,0 +1,56 @@
+"""Shared model components: norms, RoPE, initializers, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, w, *, eps: float = 1e-6, plus_one: bool = False):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    while ang.ndim < x.ndim - 1:  # align S with x's seq axis (-3), broadcast heads
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def act_fn(name: str):
+    if name in ("swiglu", "rwkv_ffn"):
+        return jax.nn.silu
+    if name == "geglu":
+        return jax.nn.gelu
+    raise ValueError(name)

@@ -1,0 +1,231 @@
+"""Unified model interface over the four families (--arch <id> dispatch).
+
+A `Model` bundles init / loss / prefill / decode plus the shape-aware
+`input_specs` used by the multi-pod dry-run (ShapeDtypeStruct stand-ins, no
+allocation) and the logical-axis trees the launcher resolves to shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import recurrent, transformer
+
+Params = Any
+
+
+def cross_entropy(logits, labels):
+    """Mean next-token NLL over a (possibly vocab-sharded) logits tensor.
+
+    The correct-class logit is extracted with a one-hot contraction rather
+    than take_along_axis: a gather across the sharded vocab axis makes
+    GSPMD all-gather the full logits (tens of GB at 256k vocab), while the
+    one-hot einsum stays sharded and reduces with a small psum."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    ll = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    return jnp.mean(logz - ll)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable  # (key, dtype) -> params
+    param_axes: Callable  # () -> logical-axis tree
+    loss_fn: Callable  # (params, batch, remat) -> (loss, metrics)
+    prefill_fn: Optional[Callable]  # (params, batch, max_len) -> (logits, cache, len)
+    decode_fn: Callable  # (params, state, tokens, cache_len) -> (logits, state)
+    decode_state_spec: Callable  # (shape) -> pytree of ShapeDtypeStruct
+    decode_state_axes: Callable  # () -> logical-axis tree for the state
+    input_specs: Callable  # (shape) -> batch of ShapeDtypeStruct
+    batch_axes: Callable  # (shape) -> logical-axis tree for the batch
+
+    def init_decode_state(self, shape: ShapeConfig):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.decode_state_spec(shape)
+        )
+
+
+AUX_COEF = 0.01
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _train_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend in ("audio_stub", "vision_stub"):
+        batch = {
+            "embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        axes = {"embeds": ("batch", "seq", None), "labels": ("batch", "seq")}
+    else:
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    return batch, axes
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":
+        return _build_rwkv(cfg)
+    if cfg.family == "hybrid":
+        return _build_zamba(cfg)
+    return _build_transformer(cfg)
+
+
+# ---------------------------------------------------------------------------
+def _build_transformer(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, remat=True, remat_policy=None):
+        logits, aux = transformer.forward(
+            params, cfg, batch, remat=remat, remat_policy=remat_policy
+        )
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + AUX_COEF * aux, {"xent": loss, "aux": aux}
+
+    def prefill_fn(params, batch, max_len):
+        return transformer.prefill(params, cfg, batch, max_len)
+
+    def decode_fn(params, cache, tokens, cache_len):
+        return transformer.decode_step(params, cfg, cache, tokens, cache_len)
+
+    def decode_state_spec(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        sh = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": _sds(sh, jnp.bfloat16), "v": _sds(sh, jnp.bfloat16)}
+
+    def decode_state_axes():
+        ax = (None, "batch", "kv_seq", "kv_heads", None)
+        return {"k": ax, "v": ax}
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.float32: transformer.init_params(
+            cfg, key, dtype
+        ),
+        param_axes=lambda: transformer.param_axes(cfg),
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        decode_state_spec=decode_state_spec,
+        decode_state_axes=decode_state_axes,
+        input_specs=lambda shape: _train_batch_specs(cfg, shape)[0],
+        batch_axes=lambda shape: _train_batch_specs(cfg, shape)[1],
+    )
+
+
+# ---------------------------------------------------------------------------
+def _build_rwkv(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, remat=True, remat_policy=None):
+        logits, aux, _ = recurrent.rwkv_forward(
+            params, cfg, batch, state=None, remat=remat
+        )
+        loss = cross_entropy(logits, batch["labels"])
+        return loss, {"xent": loss, "aux": aux}
+
+    def prefill_fn(params, batch, max_len):
+        logits, _, state = recurrent.rwkv_forward(params, cfg, batch)
+        return logits[:, -1:, :], state, jnp.int32(batch["tokens"].shape[1])
+
+    def decode_fn(params, state, tokens, cache_len):
+        logits, _, new_state = recurrent.rwkv_forward(
+            params, cfg, {"tokens": tokens}, state=state
+        )
+        return logits, new_state
+
+    def decode_state_spec(shape: ShapeConfig):
+        B = shape.global_batch
+        H, K = cfg.n_heads, cfg.head_dim
+        return {
+            "wkv": _sds((cfg.n_layers, B, H, K, K), jnp.float32),
+            "tshift1": _sds((cfg.n_layers, B, 1, cfg.d_model), jnp.float32),
+            "tshift2": _sds((cfg.n_layers, B, 1, cfg.d_model), jnp.float32),
+        }
+
+    def decode_state_axes():
+        return {
+            "wkv": (None, "batch", "heads", None, None),
+            "tshift1": (None, "batch", None, None),
+            "tshift2": (None, "batch", None, None),
+        }
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.float32: recurrent.rwkv_init_params(
+            cfg, key, dtype
+        ),
+        param_axes=lambda: recurrent.rwkv_param_axes(cfg),
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        decode_state_spec=decode_state_spec,
+        decode_state_axes=decode_state_axes,
+        input_specs=lambda shape: _train_batch_specs(cfg, shape)[0],
+        batch_axes=lambda shape: _train_batch_specs(cfg, shape)[1],
+    )
+
+
+# ---------------------------------------------------------------------------
+def _build_zamba(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, remat=True, remat_policy=None):
+        logits, aux = recurrent.zamba_forward(params, cfg, batch, remat=remat)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss, {"xent": loss, "aux": aux}
+
+    def decode_fn(params, state, tokens, cache_len):
+        window = state["k"].shape[2]
+        return recurrent.zamba_decode_step(
+            params, cfg, state, tokens, cache_len, window
+        )
+
+    def decode_state_spec(shape: ShapeConfig):
+        B = shape.global_batch
+        window = min(cfg.shared_attn_window, shape.seq_len)
+        H, P, N = cfg.n_heads, cfg.head_dim, cfg.ssm_state
+        G = cfg.n_layers // cfg.shared_attn_period
+        from repro.models import ssm as ssm_mod
+
+        return {
+            "ssm": _sds((cfg.n_layers, B, H, N, P), jnp.float32),
+            "conv": _sds(
+                (cfg.n_layers, B, ssm_mod.CONV_W - 1, H * P + 2 * N), jnp.float32
+            ),
+            "k": _sds((G, B, window, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+            "v": _sds((G, B, window, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        }
+
+    def decode_state_axes():
+        return {
+            "ssm": (None, "batch", "heads", None, None),
+            "conv": (None, "batch", None, "state"),
+            "k": (None, "batch", "kv_seq", "kv_heads", None),
+            "v": (None, "batch", "kv_seq", "kv_heads", None),
+        }
+
+    def prefill_fn(params, batch, max_len):
+        window = min(cfg.shared_attn_window, max_len)
+        return recurrent.zamba_prefill(params, cfg, batch, window)
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.float32: recurrent.zamba_init_params(
+            cfg, key, dtype
+        ),
+        param_axes=lambda: recurrent.zamba_param_axes(cfg),
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        decode_state_spec=decode_state_spec,
+        decode_state_axes=decode_state_axes,
+        input_specs=lambda shape: _train_batch_specs(cfg, shape)[0],
+        batch_axes=lambda shape: _train_batch_specs(cfg, shape)[1],
+    )

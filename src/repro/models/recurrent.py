@@ -1,0 +1,403 @@
+"""Recurrent-family models: RWKV6 (attention-free) and Zamba2 (Mamba2
+backbone + one shared attention block applied periodically).
+
+Both are state-based at decode: the "KV cache" is a fixed-size recurrent
+state, which is why these two architectures run the long_500k cell
+(DESIGN.md §4).  Zamba2's shared attention block keeps a bounded sliding
+KV window (ring buffer) so its cache is O(window), not O(context).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distrib.sharding import shard
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm
+from repro.models.common import apply_rope, dense_init, rms_norm, split_keys
+
+Params = dict[str, Any]
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+def rwkv_init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    ks = split_keys(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append(
+            {
+                "norm1": jnp.ones((cfg.d_model,), dtype),
+                "norm2": jnp.ones((cfg.d_model,), dtype),
+                "tmix": ssm.init_rwkv_tmix_params(k1, cfg, dtype),
+                "cmix": ssm.init_rwkv_cmix_params(k2, cfg, dtype),
+            }
+        )
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed": dense_init(ks[-3], (cfg.vocab, cfg.d_model), cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[-2], (cfg.d_model, cfg.vocab), cfg.d_model, dtype),
+    }
+
+
+def rwkv_param_axes(cfg: ModelConfig):
+    layer = {
+        "norm1": (None,),
+        "norm2": (None,),
+        "tmix": {
+            "mu": (None, "embed"),
+            "wr": ("embed", "state"),
+            "wk": ("embed", "state"),
+            "wv": ("embed", "state"),
+            "wg": ("embed", "state"),
+            "wo": ("state", "embed"),
+            "w0": ("state",),
+            "wa": (None, None),
+            "wb": (None, "state"),
+            "u": ("heads", None),
+            "ln_w": ("state",),
+        },
+        "cmix": {
+            "mu": (None, "embed"),
+            "wk": ("embed", "mlp"),
+            "wv": ("mlp", "embed"),
+            "wr": ("embed", None),
+        },
+    }
+    stacked = jax.tree.map(
+        lambda ax: (None, *ax), layer, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": stacked,
+        "final_norm": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, K = cfg.n_heads, cfg.head_dim
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, H, K, K), dtype),
+        "tshift1": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+        "tshift2": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+    }
+
+
+def rwkv_forward(params: Params, cfg: ModelConfig, batch: dict, state=None,
+                 remat: bool = False):
+    """Returns (logits, aux=0, new_state). state=None -> zeros."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = shard(x, "batch", "seq", None)
+    B = x.shape[0]
+    if state is None:
+        state = rwkv_state_init(cfg, B, jnp.float32)
+
+    def layer_fn(x, inp):
+        p, wkv0, ts1, ts2 = inp
+        h = rms_norm(x, p["norm1"])
+        a, (last1, wkv1) = ssm.rwkv_tmix(h, ts1, p["tmix"], cfg, wkv0)
+        x = x + a
+        h = rms_norm(x, p["norm2"])
+        m, last2 = ssm.rwkv_cmix(h, ts2, p["cmix"])
+        x = x + m
+        return x, (wkv1, last1, last2)
+
+    if remat:
+        layer_fn = jax.checkpoint(layer_fn)
+    x, (wkv, ts1, ts2) = jax.lax.scan(
+        layer_fn, x, (params["layers"], state["wkv"], state["tshift1"], state["tshift2"])
+    )
+    h = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = shard(logits, "batch", "seq", "vocab")
+    new_state = {"wkv": wkv, "tshift1": ts1, "tshift2": ts2}
+    return logits, jnp.float32(0.0), new_state
+
+
+# ===========================================================================
+# Zamba2: mamba2 backbone + shared attention block every `period` layers
+# ===========================================================================
+def zamba_init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    ks = split_keys(key, cfg.n_layers + 5)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(
+            {
+                "norm": jnp.ones((cfg.d_model,), dtype),
+                "mamba": ssm.init_mamba_params(ks[i], cfg, dtype),
+            }
+        )
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    k1, k2 = jax.random.split(ks[-4])
+    shared = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attn_params(k1, cfg, dtype),
+        "mlp": mlp_mod.init_mlp_params(k2, cfg, dtype),
+    }
+    return {
+        "embed": dense_init(ks[-3], (cfg.vocab, cfg.d_model), cfg.d_model, dtype),
+        "layers": stacked,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def zamba_param_axes(cfg: ModelConfig):
+    layer = {
+        "norm": (None,),
+        "mamba": {
+            "in_x": ("embed", "state"),
+            "in_z": ("embed", "state"),
+            "in_bc": ("embed", None),
+            "in_dt": ("embed", "heads"),
+            "dt_bias": ("heads",),
+            "a_log": ("heads",),
+            "d_skip": ("heads",),
+            "conv_w": (None, "state"),
+            "out": ("state", "embed"),
+        },
+    }
+    stacked = jax.tree.map(
+        lambda ax: (None, *ax), layer, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": stacked,
+        "shared": {
+            "norm1": ("embed",),
+            "norm2": ("embed",),
+            "attn": {
+                "wq": ("embed", "heads", "head_dim"),
+                "wk": ("embed", "kv_heads", "head_dim"),
+                "wv": ("embed", "kv_heads", "head_dim"),
+                "wo": ("heads", "head_dim", "embed"),
+            },
+            "mlp": {
+                "w1": ("embed", "mlp"),
+                "w3": ("embed", "mlp"),
+                "w2": ("mlp", "embed"),
+            },
+        },
+        "final_norm": ("embed",),
+    }
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_period
+
+
+def zamba_state_init(cfg: ModelConfig, batch: int, window: int,
+                     dtype=jnp.float32):
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.ssm_state
+    d_in = H * P
+    G = _n_groups(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, N, P), dtype),
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, ssm.CONV_W - 1, d_in + 2 * N), dtype
+        ),
+        "k": jnp.zeros((G, batch, window, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jnp.zeros((G, batch, window, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+    }
+
+
+def _shared_block_train(x, p, cfg: ModelConfig, positions):
+    h = rms_norm(x, p["norm1"])
+    a = attn.attention_train(h, p["attn"], cfg, positions,
+                             window=cfg.shared_attn_window)
+    x = x + a
+    h = rms_norm(x, p["norm2"])
+    return x + mlp_mod.mlp(h, p["mlp"], cfg)
+
+
+def zamba_forward(params: Params, cfg: ModelConfig, batch: dict,
+                  remat: bool = False):
+    """Training forward (states start at zero). Returns (logits, aux)."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = shard(x, "batch", "seq", None)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    period = cfg.shared_attn_period
+    G = _n_groups(cfg)
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.ssm_state
+
+    def mamba_layer(x, p):
+        h = rms_norm(x, p["norm"])
+        conv0 = jnp.zeros((B, ssm.CONV_W - 1, H * P + 2 * N), x.dtype)
+        s0 = jnp.zeros((B, H, N, P), jnp.float32)
+        y, _ = ssm.mamba_mixer(h, p["mamba"], cfg, conv0, s0)
+        return x + y, None
+
+    shared_block = _shared_block_train
+    if remat:
+        mamba_layer = jax.checkpoint(mamba_layer)
+        shared_block = jax.checkpoint(
+            _shared_block_train, static_argnums=(2,)
+        )
+
+    take = lambda tree, lo, hi: jax.tree.map(lambda a: a[lo:hi], tree)
+    for g in range(G):
+        grp = take(params["layers"], g * period, (g + 1) * period)
+        x, _ = jax.lax.scan(mamba_layer, x, grp)
+        x = shared_block(x, params["shared"], cfg, positions)
+    rem = cfg.n_layers - G * period
+    if rem:
+        grp = take(params["layers"], G * period, cfg.n_layers)
+        x, _ = jax.lax.scan(mamba_layer, x, grp)
+
+    h = rms_norm(x, params["final_norm"])
+    head = params["embed"].T.astype(h.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return shard(logits, "batch", "seq", "vocab"), jnp.float32(0.0)
+
+
+def zamba_prefill(params: Params, cfg: ModelConfig, batch: dict, window: int):
+    """Forward over the prompt collecting final SSM/conv states and the
+    shared-attention ring caches (last `window` positions). Returns
+    (last_logits, state, cache_len)."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = shard(x, "batch", "seq", None)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    period = cfg.shared_attn_period
+    G = _n_groups(cfg)
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.ssm_state
+    W = min(window, S) if S < window else window
+
+    def mamba_layer(x, p):
+        h = rms_norm(x, p["norm"])
+        conv0 = jnp.zeros((B, ssm.CONV_W - 1, H * P + 2 * N), x.dtype)
+        s0 = jnp.zeros((B, H, N, P), jnp.float32)
+        y, (conv1, s1) = ssm.mamba_mixer(h, p["mamba"], cfg, conv0, s0)
+        return x + y, (conv1, s1)
+
+    take = lambda tree, lo, hi: jax.tree.map(lambda a: a[lo:hi], tree)
+    convs, ssms, ks, vs = [], [], [], []
+    n_groups_total = G + (1 if cfg.n_layers > G * period else 0)
+    for g in range(n_groups_total):
+        lo, hi = g * period, min((g + 1) * period, cfg.n_layers)
+        grp = take(params["layers"], lo, hi)
+        x, (conv1, s1) = jax.lax.scan(mamba_layer, x, grp)
+        convs.append(conv1)
+        ssms.append(s1)
+        if g < G:
+            p = params["shared"]
+            h = rms_norm(x, p["norm1"])
+            q, k, v = attn._project_qkv(h, p["attn"], cfg, positions)
+            q = shard(q, "batch", "seq", "heads", None)
+            o = attn.flash_attention(
+                q, k, v, positions, positions, window=cfg.shared_attn_window
+            )
+            a = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+            x = x + shard(a, "batch", "seq", None)
+            h2 = rms_norm(x, p["norm2"])
+            x = x + mlp_mod.mlp(h2, p["mlp"], cfg)
+            # ring cache: keep the last `window` (rotated by position % W)
+            tail_k = k[:, -W:].astype(jnp.bfloat16)
+            tail_v = v[:, -W:].astype(jnp.bfloat16)
+            tail_pos = positions[-W:] % window
+            ck = jnp.zeros(
+                (B, window, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16
+            ).at[:, tail_pos].set(tail_k)
+            cv = jnp.zeros_like(ck).at[:, tail_pos].set(tail_v)
+            ks.append(shard(ck, "batch", "kv_seq", "kv_heads", None))
+            vs.append(shard(cv, "batch", "kv_seq", "kv_heads", None))
+
+    h = rms_norm(x, params["final_norm"])
+    head = params["embed"].T.astype(h.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h[:, -1:, :], head)
+    state = {
+        "ssm": jnp.concatenate(ssms, axis=0),
+        "conv": jnp.concatenate(convs, axis=0),
+        "k": jnp.stack(ks),
+        "v": jnp.stack(vs),
+    }
+    return shard(logits, "batch", None, "vocab"), state, jnp.int32(S)
+
+
+def zamba_decode_step(params: Params, cfg: ModelConfig, state, tokens,
+                      cache_len, window: int):
+    """One token through the hybrid stack with O(1)+O(window) state."""
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B,1,d)
+    x = shard(x, "batch", None, None)
+    B = x.shape[0]
+    period = cfg.shared_attn_period
+    G = _n_groups(cfg)
+
+    def mamba_layer(x, inp):
+        p, conv0, s0 = inp
+        h = rms_norm(x, p["norm"])
+        y, (conv1, s1) = ssm.mamba_mixer(h, p["mamba"], cfg, conv0, s0)
+        return x + y, (conv1, s1)
+
+    take = lambda tree, lo, hi: jax.tree.map(lambda a: a[lo:hi], tree)
+    convs, ssms, ks, vs = [], [], [], []
+    for g in range(G + (1 if cfg.n_layers > G * period else 0)):
+        lo, hi = g * period, min((g + 1) * period, cfg.n_layers)
+        grp = take(params["layers"], lo, hi)
+        x, (conv1, s1) = jax.lax.scan(
+            mamba_layer, x, (grp, state["conv"][lo:hi], state["ssm"][lo:hi])
+        )
+        convs.append(conv1)
+        ssms.append(s1)
+        if g < G:
+            p = params["shared"]
+            ck, cv = state["k"][g], state["v"][g]
+            ck = shard(ck, "batch", "kv_seq", "kv_heads", None)
+            cv = shard(cv, "batch", "kv_seq", "kv_heads", None)
+            h = rms_norm(x, p["norm1"])
+            # ring-buffer write at cache_len % window; RoPE uses the absolute
+            # position so overwriting old slots is consistent.
+            slot = cache_len % window
+            pos = jnp.full((1,), cache_len, jnp.int32)
+            k1 = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+            v1 = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+            if cfg.rope_theta:
+                k1 = apply_rope(k1, pos, cfg.rope_theta)
+            # masked select (not DUS): partitions cleanly along the sharded
+            # sequence dim (see attention.decode_kv_update)
+            sel = (jnp.arange(window) == slot)[None, :, None, None]
+            ck = jnp.where(sel, k1.astype(ck.dtype), ck)
+            cv = jnp.where(sel, v1.astype(cv.dtype), cv)
+            # attend over valid ring slots (all, once wrapped)
+            q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+            if cfg.rope_theta:
+                q = apply_rope(q, pos, cfg.rope_theta)
+            Hq, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            Gq = Hq // Hk
+            qf = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))).reshape(
+                B, Hk, Gq, hd
+            )
+            s = jnp.einsum("bkgh,bskh->bkgs", qf, ck.astype(jnp.float32))
+            valid = (jnp.arange(window) <= cache_len)[None, None, None, :]
+            s = jnp.where(valid | (cache_len >= window), s, attn.NEG_INF)
+            w = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgs,bskh->bkgh", w, cv.astype(jnp.float32))
+            o = o.reshape(B, 1, Hq, hd).astype(x.dtype)
+            a = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+            x = x + a
+            h2 = rms_norm(x, p["norm2"])
+            x = x + mlp_mod.mlp(h2, p["mlp"], cfg)
+            ks.append(ck)
+            vs.append(cv)
+
+    h = rms_norm(x, params["final_norm"])
+    head = params["embed"].T.astype(h.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    new_state = {
+        "ssm": jnp.concatenate(ssms, axis=0),
+        "conv": jnp.concatenate(convs, axis=0),
+        "k": jnp.stack(ks),
+        "v": jnp.stack(vs),
+    }
+    return shard(logits, "batch", None, "vocab"), new_state

@@ -1,0 +1,283 @@
+"""Attention-free mixers: RWKV6 ("Finch", data-dependent per-channel decay)
+and Mamba2-style SSD (scalar-per-head decay) — both in chunked linear-
+attention form for training, with O(1) recurrent state for decode.
+
+Chunked form (chunk c, within-chunk cumulative log-decay logP_t):
+
+    S_t = exp(logP_t) ⊙ S_0 + Σ_{s<=t} exp(logP_t - logP_s) ⊙ k_s^T v_s
+
+All exponents are differences with t >= s, hence <= 0: no overflow, and
+underflow maps to exactly the vanishing contribution it represents — the
+standard stable formulation (cf. flash-linear-attention).
+
+RWKV6 reads the state *before* the update plus a bonus term
+(y_t = r_t·(S_{t-1} + diag(u) k_t^T v_t)); SSD reads after (y_t = C_t·h_t).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distrib.sharding import shard
+from repro.models.common import dense_init, split_keys
+
+LOG_DECAY_FLOOR = -8.0  # per-step clamp; exp(-8) ~ 3e-4 per step
+
+
+# ---------------------------------------------------------------------------
+# generic chunked scans
+# ---------------------------------------------------------------------------
+def chunked_rwkv(r, k, v, logw, u, state0, chunk: int = 16):
+    """RWKV6 WKV. r,k,logw: (B,S,H,K); v: (B,S,H,V); u: (H,K);
+    state0: (B,H,K,V). Returns (y (B,S,H,V), state (B,H,K,V))."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n = S // c
+    f32 = jnp.float32
+    # NOTE (§Perf iter 6, refuted): staging these views in bf16 and
+    # upcasting inside the body was tried and measured WORSE (5.78s ->
+    # 6.80s t_mem): the per-chunk f32 conversion materializes 256x/layer
+    # instead of once.  f32 staging outside the scan stays.
+    rr = r.astype(f32).reshape(B, n, c, H, K).transpose(1, 0, 2, 3, 4)
+    kk = k.astype(f32).reshape(B, n, c, H, K).transpose(1, 0, 2, 3, 4)
+    vv = v.astype(f32).reshape(B, n, c, H, V).transpose(1, 0, 2, 3, 4)
+    lw = jnp.clip(logw.astype(f32), LOG_DECAY_FLOOR, 0.0)
+    lw = lw.reshape(B, n, c, H, K).transpose(1, 0, 2, 3, 4)
+
+    def body(S0, blk):
+        rb, kb, vb, lwb = blk  # (B,c,H,K/V)
+        logP = jnp.cumsum(lwb, axis=1)  # inclusive (B,c,H,K)
+        # inter-chunk: y_t += (r_t * P_{t-1}) S0 ; P_{t-1} = P_t / w_t
+        rP = rb * jnp.exp(logP - lwb)
+        y = jnp.einsum("bthk,bhkv->bthv", rP, S0)
+        # intra-chunk, strictly causal (s < t)
+        D = jnp.exp(
+            (logP - lwb)[:, :, None, :, :] - logP[:, None, :, :, :]
+        )  # (B,t,s,H,K): P_{t-1}/P_s
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[
+            None, :, :, None, None
+        ]
+        A = jnp.einsum("bthk,bshk,btshk->bths", rb, kb, jnp.where(mask, D, 0.0))
+        y = y + jnp.einsum("bths,bshv->bthv", A, vb)
+        # bonus (s == t)
+        y = y + jnp.einsum("bthk,bthk,bthv->bthv", rb, u[None, None] * kb, vb)
+        # state to end of chunk
+        decay_to_end = jnp.exp(logP[:, -1:, :, :] - logP)  # (B,c,H,K)
+        S1 = jnp.exp(logP[:, -1])[..., None] * S0 + jnp.einsum(
+            "bshk,bshv->bhkv", kb * decay_to_end, vb
+        )
+        return S1, y
+
+    state, ys = jax.lax.scan(body, state0.astype(f32), (rr, kk, vv, lw))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, V)
+    return y.astype(r.dtype), state
+
+
+def rwkv_step(r, k, v, logw, u, state):
+    """Single-token recurrence. r,k,logw: (B,H,K); v: (B,H,V);
+    state: (B,H,K,V)."""
+    f32 = jnp.float32
+    r, k, v = r.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(jnp.clip(logw.astype(f32), LOG_DECAY_FLOOR, 0.0))
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,K,V)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, ..., None] * kv)
+    new_state = w[..., None] * state + kv
+    return y, new_state
+
+
+def chunked_ssd(r, k, v, loga, state0, chunk: int = 32):
+    """Mamba2 SSD. r(C),k(B): (B,S,H,N); v(x): (B,S,H,P); loga: (B,S,H);
+    state0: (B,H,N,P). y_t = C_t h_t (read AFTER update)."""
+    B, S, H, N = r.shape
+    P = v.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    n = S // c
+    f32 = jnp.float32
+    rr = r.astype(f32).reshape(B, n, c, H, N).transpose(1, 0, 2, 3, 4)
+    kk = k.astype(f32).reshape(B, n, c, H, N).transpose(1, 0, 2, 3, 4)
+    vv = v.astype(f32).reshape(B, n, c, H, P).transpose(1, 0, 2, 3, 4)
+    la = jnp.clip(loga.astype(f32), LOG_DECAY_FLOOR, 0.0)
+    la = la.reshape(B, n, c, H).transpose(1, 0, 2, 3)
+
+    def body(S0, blk):
+        rb, kb, vb, lab = blk
+        logP = jnp.cumsum(lab, axis=1)  # (B,c,H)
+        y = jnp.einsum("bthn,bhnp->bthp", rb * jnp.exp(logP)[..., None], S0)
+        # D[b,t,h,s] = exp(logP_t - logP_s)
+        D = jnp.exp(logP[:, :, :, None] - logP.transpose(0, 2, 1)[:, None, :, :])
+        mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[
+            None, :, None, :
+        ]
+        A = jnp.einsum("bthn,bshn->bths", rb, kb) * jnp.where(mask, D, 0.0)
+        y = y + jnp.einsum("bths,bshp->bthp", A, vb)
+        decay_to_end = jnp.exp(logP[:, -1:, :] - logP)  # (B,c,H)
+        S1 = jnp.exp(logP[:, -1])[..., None, None] * S0 + jnp.einsum(
+            "bshn,bshp->bhnp", kb * decay_to_end[..., None], vb
+        )
+        return S1, y
+
+    state, ys = jax.lax.scan(body, state0.astype(f32), (rr, kk, vv, la))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y.astype(r.dtype), state
+
+
+def ssd_step(r, k, v, loga, state):
+    """r,k: (B,H,N); v: (B,H,P); loga: (B,H); state: (B,H,N,P)."""
+    f32 = jnp.float32
+    a = jnp.exp(jnp.clip(loga.astype(f32), LOG_DECAY_FLOOR, 0.0))
+    new_state = a[..., None, None] * state + k.astype(f32)[..., :, None] * v.astype(
+        f32
+    )[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", r.astype(f32), new_state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 blocks
+# ---------------------------------------------------------------------------
+def init_rwkv_tmix_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H, K = cfg.n_heads, cfg.head_dim
+    ks = split_keys(key, 8)
+    lora = 64
+    return {
+        "mu": jnp.full((5, d), 0.5, dtype),  # lerp coeffs for r,k,v,g,w
+        "wr": dense_init(ks[0], (d, d), d, dtype),
+        "wk": dense_init(ks[1], (d, d), d, dtype),
+        "wv": dense_init(ks[2], (d, d), d, dtype),
+        "wg": dense_init(ks[3], (d, d), d, dtype),
+        "wo": dense_init(ks[4], (d, d), d, dtype),
+        "w0": jnp.full((d,), -2.0, dtype),  # base log-log decay
+        "wa": dense_init(ks[5], (d, 64), d, dtype),
+        "wb": dense_init(ks[6], (lora, d), lora, dtype) * 0.1,
+        "u": dense_init(ks[7], (H, K), K, dtype),
+        "ln_w": jnp.ones((d,), dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B,1,d) last token of the previous segment (zeros at start)."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def rwkv_tmix(x, prev_tok, p, cfg: ModelConfig, state0):
+    """x: (B,S,d). Returns (y, (last_token, state))."""
+    B, S, d = x.shape
+    H, K = cfg.n_heads, cfg.head_dim
+    xs = _token_shift(x, prev_tok)
+    lerp = lambda i: x + (xs - x) * p["mu"][i]
+    r = jnp.einsum("bsd,de->bse", lerp(0), p["wr"]).reshape(B, S, H, K)
+    k = jnp.einsum("bsd,de->bse", lerp(1), p["wk"]).reshape(B, S, H, K)
+    v = jnp.einsum("bsd,de->bse", lerp(2), p["wv"]).reshape(B, S, H, K)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", lerp(3), p["wg"]))
+    # data-dependent decay (the Finch hallmark): low-rank dynamic log-decay
+    ww = p["w0"] + jnp.einsum(
+        "bsd,dl,le->bse", jnp.tanh(lerp(4)), p["wa"], p["wb"]
+    )
+    logw = -jnp.exp(jnp.clip(ww.astype(jnp.float32), -10.0, 2.0))  # < 0
+    logw = logw.reshape(B, S, H, K)
+    r, k, v = (shard(t, "batch", "seq", "heads", None) for t in (r, k, v))
+    y, state = chunked_rwkv(r, k, v, logw, p["u"], state0)
+    y = y.reshape(B, S, d)
+    # per-head group norm (approximated with RMS over head dims)
+    yh = y.reshape(B, S, H, K).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, S, d) * p["ln_w"]).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y * g, p["wo"])
+    return shard(y, "batch", "seq", None), (x[:, -1:], state)
+
+
+def init_rwkv_cmix_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "mu": jnp.full((2, d), 0.5, dtype),
+        "wk": dense_init(ks[0], (d, f), d, dtype),
+        "wv": dense_init(ks[1], (f, d), f, dtype),
+        "wr": dense_init(ks[2], (d, d), d, dtype),
+    }
+
+
+def rwkv_cmix(x, prev_tok, p):
+    xs = _token_shift(x, prev_tok)
+    xk = x + (xs - x) * p["mu"][0]
+    xr = x + (xs - x) * p["mu"][1]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    k = shard(k, "batch", "seq", "mlp")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return shard(r * kv, "batch", "seq", None), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2-style mixer (zamba2 backbone)
+# ---------------------------------------------------------------------------
+CONV_W = 4
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H, P = cfg.n_heads, cfg.head_dim
+    N = cfg.ssm_state
+    d_in = H * P
+    ks = split_keys(key, 6)
+    return {
+        "in_x": dense_init(ks[0], (d, d_in), d, dtype),
+        "in_z": dense_init(ks[1], (d, d_in), d, dtype),
+        "in_bc": dense_init(ks[2], (d, 2 * N), d, dtype),
+        "in_dt": dense_init(ks[3], (d, H), d, dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "a_log": jnp.zeros((H,), dtype),  # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), dtype),
+        "conv_w": dense_init(ks[4], (CONV_W, d_in + 2 * N), CONV_W, dtype),
+        "out": dense_init(ks[5], (d_in, d), d_in, dtype),
+    }
+
+
+def _causal_conv(u, w, prev):
+    """Depthwise causal conv, width CONV_W. u: (B,S,C); w: (CONV_W,C);
+    prev: (B, CONV_W-1, C) left context."""
+    x = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = sum(
+        x[:, i : i + u.shape[1]] * w[i][None, None, :] for i in range(CONV_W)
+    )
+    return jax.nn.silu(out), x[:, -(CONV_W - 1) :]
+
+
+def mamba_mixer(x, p, cfg: ModelConfig, conv_prev, state0):
+    """x: (B,S,d). Returns (y, (conv_state, ssm_state))."""
+    B, S, d = x.shape
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.ssm_state
+    d_in = H * P
+    xz = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xi = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    bc = jnp.einsum("bsd,dn->bsn", x, p["in_bc"])
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["in_dt"]) + p["dt_bias"])
+    conv_in = jnp.concatenate([xi, bc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], conv_prev)
+    xi = conv_out[..., :d_in].reshape(B, S, H, P)
+    Bm = jnp.broadcast_to(
+        conv_out[..., d_in : d_in + N][:, :, None, :], (B, S, H, N)
+    )
+    Cm = jnp.broadcast_to(
+        conv_out[..., d_in + N :][:, :, None, :], (B, S, H, N)
+    )
+    loga = -jnp.exp(p["a_log"])[None, None, :] * dt  # (B,S,H)
+    v = xi * dt[..., None]  # fold dt into the input (standard SSD form)
+    Cm = shard(Cm, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+    y, state = chunked_ssd(Cm, Bm, v, loga, state0)
+    y = y + xi * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_in) * jax.nn.silu(xz)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    return shard(out, "batch", "seq", None), (conv_state, state)
+
+
+def mamba_mixer_step(x, p, cfg: ModelConfig, conv_prev, state):
+    """Single token. x: (B,1,d)."""
+    y, (conv_state, new_state) = mamba_mixer(x, p, cfg, conv_prev, state)
+    return y, (conv_state, new_state)

@@ -1,0 +1,236 @@
+"""Decoder-only transformer assembly (dense, MoE, audio/vlm-stub variants).
+
+Layers are scanned (stacked parameter pytrees) to keep HLO size and compile
+time bounded at 512-device dry-runs; the gemma3 5:1 local:global pattern is
+a per-layer window array threaded through the scan (data, not control flow).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distrib.sharding import shard
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import dense_init, rms_norm, split_keys
+
+Params = dict[str, Any]
+
+
+def _layer_init(key, cfg: ModelConfig, dtype):
+    ks = split_keys(key, 2)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attn_params(ks[0], cfg, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = mlp_mod.init_moe_params(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_mod.init_mlp_params(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    ks = split_keys(key, cfg.n_layers + 3)
+    layers = [_layer_init(ks[i], cfg, dtype) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    p: Params = {
+        "embed": dense_init(ks[-3], (cfg.vocab, cfg.d_model), cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(
+            ks[-2], (cfg.d_model, cfg.vocab), cfg.d_model, dtype
+        )
+    return p
+
+
+def _layer_axes(cfg: ModelConfig):
+    a = {
+        "norm1": ("embed",),
+        "norm2": ("embed",),
+        "attn": {
+            "wq": ("embed", "heads", "head_dim"),
+            "wk": ("embed", "kv_heads", "head_dim"),
+            "wv": ("embed", "kv_heads", "head_dim"),
+            "wo": ("heads", "head_dim", "embed"),
+        },
+    }
+    if cfg.qkv_bias:
+        a["attn"]["bq"] = ("heads", "head_dim")
+        a["attn"]["bk"] = ("kv_heads", "head_dim")
+        a["attn"]["bv"] = ("kv_heads", "head_dim")
+    if cfg.n_experts:
+        a["moe"] = {
+            "router": ("embed", None),
+            "w1": ("experts", None, "moe_fsdp"),
+            "w3": ("experts", None, "moe_fsdp"),
+            "w2": ("experts", "moe_fsdp", None),
+        }
+    else:
+        a["mlp"] = {"w1": ("embed", "mlp"), "w3": ("embed", "mlp"), "w2": ("mlp", "embed")}
+    return a
+
+
+def param_axes(cfg: ModelConfig):
+    """Logical-axis tree matching init_params' structure (layers get a
+    leading None for the stacked L dim)."""
+    layer = _layer_axes(cfg)
+    stacked = jax.tree.map(
+        lambda ax: (None, *ax), layer, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    axes = {
+        "embed": ("vocab", "embed"),
+        "layers": stacked,
+        "final_norm": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+def window_schedule(cfg: ModelConfig, seq_len: int) -> jnp.ndarray:
+    """Per-layer attention window (seq_len => effectively global)."""
+    if cfg.window_pattern is None:
+        return jnp.full((cfg.n_layers,), seq_len + 1, jnp.int32)
+    w, period = cfg.window_pattern
+    sched = [
+        seq_len + 1 if (i + 1) % period == 0 else w for i in range(cfg.n_layers)
+    ]
+    return jnp.asarray(sched, jnp.int32)
+
+
+def _embed_in(params, cfg: ModelConfig, batch):
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return shard(x, "batch", "seq", None)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    h = rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    head = (
+        params["lm_head"]
+        if "lm_head" in params
+        else params["embed"].T.astype(h.dtype)
+    )
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    remat: bool = False,
+    remat_policy: Optional[str] = None,
+):
+    """Training/eval forward. Returns (logits, aux_loss)."""
+    x = _embed_in(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = window_schedule(cfg, S)
+
+    def layer_fn(x, inp):
+        p, window = inp
+        h = rms_norm(x, p["norm1"], plus_one=cfg.norm_plus_one)
+        a = attn.attention_train(h, p["attn"], cfg, positions, window=window)
+        x = x + a
+        h = rms_norm(x, p["norm2"], plus_one=cfg.norm_plus_one)
+        if cfg.n_experts:
+            m, aux = mlp_mod.moe(h, p["moe"], cfg)
+        else:
+            m, aux = mlp_mod.mlp(h, p["mlp"], cfg), jnp.float32(0.0)
+        return x + m, aux
+
+    if remat:
+        policy = None
+        if remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        layer_fn = jax.checkpoint(layer_fn, policy=policy)
+
+    x, auxs = jax.lax.scan(layer_fn, x, (params["layers"], windows))
+    return _logits(params, cfg, x), jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with a sequence-sharded KV cache
+# ---------------------------------------------------------------------------
+def prefill(params: Params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Forward over the prompt, returning (last_logits, cache, cache_len).
+
+    The cache is (L, B, max_len, Hk, hd) for k and v, sharded along the
+    sequence ("kv_seq")."""
+    x = _embed_in(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = window_schedule(cfg, S)
+
+    def layer_fn(x, inp):
+        p, window = inp
+        h = rms_norm(x, p["norm1"], plus_one=cfg.norm_plus_one)
+        q, k, v = attn._project_qkv(h, p["attn"], cfg, positions)
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "kv_seq", "kv_heads", None)
+        v = shard(v, "batch", "kv_seq", "kv_heads", None)
+        o = attn.flash_attention(q, k, v, positions, positions, window=window)
+        a = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        x = x + shard(a, "batch", "seq", None)
+        h = rms_norm(x, p["norm2"], plus_one=cfg.norm_plus_one)
+        if cfg.n_experts:
+            m, _ = mlp_mod.moe(h, p["moe"], cfg)
+        else:
+            m = mlp_mod.mlp(h, p["mlp"], cfg)
+        pad = max_len - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        kc = shard(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = shard(vc, "batch", "kv_seq", "kv_heads", None)
+        return x + m, {"k": kc, "v": vc}
+
+    x, cache = jax.lax.scan(layer_fn, x, (params["layers"], windows))
+    logits = _logits(params, cfg, x[:, -1:, :])
+    return logits, cache, jnp.int32(S)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, tokens, cache_len):
+    """One decode step. tokens: (B, 1) int32 (or embeds (B,1,d));
+    cache: {"k","v"}: (L, B, S, Hk, hd). Returns (logits, cache)."""
+    if tokens.ndim == 3:
+        x = tokens
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    x = shard(x, "batch", None, None)
+    S = cache["k"].shape[2]
+    windows = window_schedule(cfg, S)
+
+    def layer_fn(x, inp):
+        p, window, ck, cv = inp
+        ck = shard(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = shard(cv, "batch", "kv_seq", "kv_heads", None)
+        h = rms_norm(x, p["norm1"], plus_one=cfg.norm_plus_one)
+        ck, cv = attn.decode_kv_update(p["attn"], cfg, h, ck, cv, cache_len)
+        a = attn.attention_decode(h, p["attn"], cfg, ck, cv, cache_len, window=window)
+        x = x + shard(a, "batch", None, None)
+        h = rms_norm(x, p["norm2"], plus_one=cfg.norm_plus_one)
+        if cfg.n_experts:
+            m, _ = mlp_mod.moe(h, p["moe"], cfg)
+        else:
+            m = mlp_mod.mlp(h, p["mlp"], cfg)
+        return x + m, {"k": ck, "v": cv}
+
+    x, new_cache = jax.lax.scan(
+        layer_fn, x, (params["layers"], windows, cache["k"], cache["v"])
+    )
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,101 @@
+"""Simulator configuration.
+
+Time is discretized at Δt = one MTU serialization time on the reference
+link (4 KiB @ 400 Gb/s ≈ 82 ns — DESIGN.md §3).  All latencies/timeouts are
+expressed in ticks; helpers convert from the paper's physical constants.
+
+The paper's defaults (§4.1): 4 KiB MTU, 400 Gb/s links, 500 ns switch
+traversal + 500 ns link latency (≈ 1 µs ≈ 12 ticks per hop), RTO = 70 µs
+(≈ 854 ticks), queue size = 1 BDP with RED thresholds Kmin = 20 % and
+Kmax = 80 % of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+TICK_NS = 81.92  # 4 KiB at 400 Gb/s
+
+
+def ns_to_ticks(ns: float) -> int:
+    return max(1, int(round(ns / TICK_NS)))
+
+
+def us_to_ticks(us: float) -> int:
+    return ns_to_ticks(us * 1000.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    # --- topology ---------------------------------------------------------
+    n_hosts: int = 128
+    hosts_per_tor: int = 16
+    tiers: int = 2  # 2 or 3
+    uplinks_per_tor: int = 16  # 2-tier: == number of spines
+    # 3-tier only:
+    tors_per_pod: int = 4
+    aggs_per_pod: int = 4
+    agg_uplinks: int = 4  # cores per agg
+
+    # --- timing -----------------------------------------------------------
+    hop_latency_ticks: int = 12  # 500 ns link + 500 ns switch
+    ack_delay_ticks: int = 24  # ACK return latency (unqueued, 64 B)
+    rto_ticks: int = 854  # 70 us
+    nack_delay_ticks: int = 24  # trimmed-header return latency
+
+    # --- queues / ECN (RED) -------------------------------------------------
+    queue_capacity: int = 85  # ~1 BDP in packets
+    kmin_frac: float = 0.2
+    kmax_frac: float = 0.8
+    pmax: float = 1.0  # RED marking prob at kmax
+
+    # --- transport ----------------------------------------------------------
+    max_msg_pkts: int = 4096  # bitmap width (max message size in packets)
+    ack_coalesce: int = 1  # n:1 ACK coalescing (paper §4.5.1)
+    trimming: bool = False  # paper's main runs use RTO only (App. A)
+    max_cwnd_pkts: int = 170  # 2 BDP
+    init_cwnd_pkts: int = 85  # 1 BDP
+
+    # --- congestion control --------------------------------------------------
+    cc: str = "dctcp"  # dctcp | eqds | delay
+    dctcp_g: float = 1.0 / 16.0
+    delay_target_ticks: int = 64
+    delay_beta: float = 0.5
+
+    # --- load balancing -------------------------------------------------------
+    evs_size: int = 65536
+
+    # --- engine sizing ---------------------------------------------------------
+    pkt_slots: int = 0  # 0 = auto (n_conns * max_cwnd + slack)
+    feedback_rounds: int = 2  # exact per-conn events applied per tick
+    n_watch_queues: int = 16  # queues traced per tick for micro figures
+
+    # Derived topology ---------------------------------------------------------
+    @property
+    def n_tors(self) -> int:
+        return self.n_hosts // self.hosts_per_tor
+
+    @property
+    def n_pods(self) -> int:
+        assert self.tiers == 3
+        return self.n_tors // self.tors_per_pod
+
+    @property
+    def n_spines(self) -> int:
+        assert self.tiers == 2
+        return self.uplinks_per_tor
+
+    @property
+    def n_cores(self) -> int:
+        assert self.tiers == 3
+        return self.aggs_per_pod * self.agg_uplinks
+
+    @property
+    def kmin(self) -> int:
+        return max(1, int(self.queue_capacity * self.kmin_frac))
+
+    @property
+    def kmax(self) -> int:
+        return max(2, int(self.queue_capacity * self.kmax_frac))
+
+    def replace(self, **kw) -> "SimConfig":
+        return dataclasses.replace(self, **kw)

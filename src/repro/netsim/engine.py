@@ -1,0 +1,665 @@
+"""Discrete-time packet-level fat-tree simulator (the htsim analogue).
+
+One jitted ``tick`` stepped under ``lax.scan``.  Within a tick (order is
+part of the model, DESIGN.md §3):
+
+  1. feedback  — ACK/NACK events due now update transport (inflight, rtx),
+                 CC and the load balancer;
+  2. RTO       — sender-side per-packet timeouts → retransmit marks,
+                 timeout events (REPS freezing), window reduction;
+  3. service   — every queue dequeues ≤1 packet (degraded links serve every
+                 other tick; failed links blackhole); final-hop dequeues
+                 deliver to the receiver, which dedupes via a SACK bitmap,
+                 coalesces ACKs, and schedules the ACK return;
+  4. arrivals  — in-flight packets due now are enqueued at their next hop
+                 (ECMP hash or adaptive least-queue choice), with RED/ECN
+                 marking and tail-drop (→ trim NACK or silent loss);
+  5. injection — each host injects ≤1 packet (round-robin over its eligible
+                 connections, window-limited); the load balancer stamps the
+                 EV (REPS Algorithm 2 lives here).
+
+Invariants the engine maintains (tested):
+  * a connection sees at most one delivery per tick (host downlink serves
+    1 pkt/tick), so per-connection LB/CC updates are exact with
+    ``feedback_rounds=2``;
+  * packet slots are conserved (ring free-list; alloc failures counted);
+  * ``inflight`` accounting is exact (ACK count / NACK / RTO each decrement
+    exactly once; orphans never double-decrement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.load_balancers import LoadBalancer
+from repro.netsim.config import SimConfig
+from repro.netsim.topology import Topology
+
+# packet states
+FREE, FLYING, QUEUED, IN_ACK, IN_NACK, LOST_WAIT = 0, 1, 2, 3, 4, 5
+
+BIG = 2**30  # python int: usable both as jnp operand and as static fill_value
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Static connection table (built by repro.netsim.workloads)."""
+
+    src: np.ndarray  # (NC,) int32 source host
+    dst: np.ndarray  # (NC,) int32 destination host
+    msg_pkts: np.ndarray  # (NC,) int32 message size in packets
+    start: np.ndarray  # (NC,) int32 start tick
+    dep: np.ndarray  # (NC,) int32 index of prerequisite conn or -1
+    name: str = "custom"
+
+    @property
+    def n_conns(self) -> int:
+        return len(self.src)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSchedule:
+    """Link events: kind 0 = down (blackhole), 1 = degraded to half rate."""
+
+    queue: np.ndarray  # (F,) int32 queue id
+    start: np.ndarray  # (F,) int32 tick
+    end: np.ndarray  # (F,) int32 tick
+    kind: np.ndarray  # (F,) int32
+
+    @staticmethod
+    def none() -> "FailureSchedule":
+        z = np.zeros((0,), np.int32)
+        return FailureSchedule(z, z, z, z)
+
+    @staticmethod
+    def concat(*scheds: "FailureSchedule") -> "FailureSchedule":
+        return FailureSchedule(
+            np.concatenate([s.queue for s in scheds]).astype(np.int32),
+            np.concatenate([s.start for s in scheds]).astype(np.int32),
+            np.concatenate([s.end for s in scheds]).astype(np.int32),
+            np.concatenate([s.kind for s in scheds]).astype(np.int32),
+        )
+
+
+class SimState(NamedTuple):
+    # packet table (NP,)
+    p_state: jax.Array
+    p_conn: jax.Array
+    p_ev: jax.Array
+    p_seq: jax.Array
+    p_hop: jax.Array
+    p_cur_queue: jax.Array
+    p_send_tick: jax.Array
+    p_event_tick: jax.Array
+    p_ecn: jax.Array
+    p_orphan: jax.Array
+    p_ack_count: jax.Array
+    # queues
+    qbuf: jax.Array  # (NQ, QCAP)
+    q_head: jax.Array
+    q_len: jax.Array
+    q_served: jax.Array  # cumulative serve count per queue
+    # connections
+    c_inflight: jax.Array
+    c_next_new: jax.Array
+    c_delivered: jax.Array
+    c_rx_pending: jax.Array
+    c_done: jax.Array
+    c_done_tick: jax.Array
+    c_rtx_count: jax.Array
+    c_rtx: jax.Array  # (NC, MSG) bool
+    c_rcv: jax.Array  # (NC, MSG) bool
+    c_cwnd: jax.Array  # float32
+    c_alpha: jax.Array  # float32
+    # hosts
+    h_rr: jax.Array
+    # LB state
+    lb_state: Any
+    # free list
+    fl: jax.Array
+    fl_head: jax.Array
+    fl_count: jax.Array
+    # cumulative stats
+    s_drops_cong: jax.Array
+    s_drops_fail: jax.Array
+    s_timeouts: jax.Array
+    s_delivered: jax.Array
+    s_ecn_marks: jax.Array
+    s_injected: jax.Array
+    s_unprocessed: jax.Array
+    s_alloc_fail: jax.Array
+
+
+class TickTrace(NamedTuple):
+    max_qlen: jax.Array
+    sum_qlen: jax.Array
+    drops: jax.Array
+    timeouts: jax.Array
+    delivered: jax.Array
+    injected: jax.Array
+    watch_qlen: jax.Array  # (W,)
+    watch_served: jax.Array  # (W,) int32 0/1
+
+
+class Simulator:
+    """Builds and runs one simulation scenario (static: cfg/topo/workload/
+    failures/LB; dynamic: SimState)."""
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        workload: Workload,
+        lb: LoadBalancer,
+        failures: FailureSchedule | None = None,
+        watch_queues: np.ndarray | None = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.topo = Topology.build(cfg)
+        self.wl = workload
+        self.lb = lb
+        self.failures = failures or FailureSchedule.none()
+        self.seed = seed
+
+        NC = workload.n_conns
+        msg_max = int(workload.msg_pkts.max()) if NC else 1
+        assert msg_max <= cfg.max_msg_pkts, (
+            f"message of {msg_max} pkts exceeds max_msg_pkts={cfg.max_msg_pkts}"
+        )
+        self.MSG = int(min(cfg.max_msg_pkts, max(int(2 ** np.ceil(np.log2(max(msg_max, 2)))), 2)))
+        self.NQ = self.topo.n_queues
+        self.NH = cfg.n_hosts
+        self.NP = cfg.pkt_slots or int(
+            2 ** np.ceil(np.log2(NC * cfg.max_cwnd_pkts + 4 * self.NH + 64))
+        )
+        self.MAX_ARR = self.NQ + self.NH
+        self.MAX_EV = self.NQ + 2 * self.NH
+        self.MAX_FREE = self.MAX_EV + self.NQ + self.MAX_ARR + self.NH
+
+        # host -> local conn table
+        by_host: list[list[int]] = [[] for _ in range(self.NH)]
+        for c in range(NC):
+            by_host[int(workload.src[c])].append(c)
+        self.CPH = max(1, max(len(v) for v in by_host) if NC else 1)
+        hc = np.full((self.NH, self.CPH), -1, np.int32)
+        for h, v in enumerate(by_host):
+            hc[h, : len(v)] = v
+        self.host_conns = jnp.asarray(hc)
+
+        self.conn_src = jnp.asarray(workload.src.astype(np.int32))
+        self.conn_dst = jnp.asarray(workload.dst.astype(np.int32))
+        self.conn_msg = jnp.asarray(workload.msg_pkts.astype(np.int32))
+        self.conn_start = jnp.asarray(workload.start.astype(np.int32))
+        self.conn_dep = jnp.asarray(workload.dep.astype(np.int32))
+
+        if watch_queues is None:
+            watch_queues = self.topo.t0_up_queues(0)[: cfg.n_watch_queues]
+        self.watch = jnp.asarray(np.asarray(watch_queues, np.int32))
+
+        self.f_queue = jnp.asarray(self.failures.queue)
+        self.f_start = jnp.asarray(self.failures.start)
+        self.f_end = jnp.asarray(self.failures.end)
+        self.f_kind = jnp.asarray(self.failures.kind)
+
+        self.base_key = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> SimState:
+        NP, NQ, NC, NH = self.NP, self.NQ, self.wl.n_conns, self.NH
+        cfg = self.cfg
+        i32 = jnp.int32
+        return SimState(
+            p_state=jnp.zeros((NP,), i32),
+            p_conn=jnp.zeros((NP,), i32),
+            p_ev=jnp.zeros((NP,), i32),
+            p_seq=jnp.zeros((NP,), i32),
+            p_hop=jnp.zeros((NP,), i32),
+            p_cur_queue=jnp.zeros((NP,), i32),
+            p_send_tick=jnp.zeros((NP,), i32),
+            p_event_tick=jnp.zeros((NP,), i32),
+            p_ecn=jnp.zeros((NP,), jnp.bool_),
+            p_orphan=jnp.zeros((NP,), jnp.bool_),
+            p_ack_count=jnp.zeros((NP,), i32),
+            qbuf=jnp.zeros((NQ, cfg.queue_capacity), i32),
+            q_head=jnp.zeros((NQ,), i32),
+            q_len=jnp.zeros((NQ,), i32),
+            q_served=jnp.zeros((NQ,), i32),
+            c_inflight=jnp.zeros((NC,), i32),
+            c_next_new=jnp.zeros((NC,), i32),
+            c_delivered=jnp.zeros((NC,), i32),
+            c_rx_pending=jnp.zeros((NC,), i32),
+            c_done=jnp.zeros((NC,), jnp.bool_),
+            c_done_tick=jnp.full((NC,), -1, i32),
+            c_rtx_count=jnp.zeros((NC,), i32),
+            c_rtx=jnp.zeros((NC, self.MSG), jnp.bool_),
+            c_rcv=jnp.zeros((NC, self.MSG), jnp.bool_),
+            c_cwnd=jnp.full((NC,), float(cfg.init_cwnd_pkts), jnp.float32),
+            c_alpha=jnp.zeros((NC,), jnp.float32),
+            h_rr=jnp.zeros((NH,), i32),
+            lb_state=self.lb.init_state(NC, jax.random.fold_in(self.base_key, 777)),
+            fl=jnp.arange(NP, dtype=i32),
+            fl_head=jnp.zeros((), i32),
+            fl_count=jnp.asarray(NP, i32),
+            s_drops_cong=jnp.zeros((), i32),
+            s_drops_fail=jnp.zeros((), i32),
+            s_timeouts=jnp.zeros((), i32),
+            s_delivered=jnp.zeros((), i32),
+            s_ecn_marks=jnp.zeros((), i32),
+            s_injected=jnp.zeros((), i32),
+            s_unprocessed=jnp.zeros((), i32),
+            s_alloc_fail=jnp.zeros((), i32),
+        )
+
+    # ------------------------------------------------------------------
+    def _cc_on_ack(self, cwnd, alpha, mask, ecn, rtt):
+        """Per-ACK CC update (DCTCP-variant per §4.1 / MPRDMA)."""
+        cfg = self.cfg
+        if cfg.cc == "dctcp":
+            g = cfg.dctcp_g
+            alpha = jnp.where(
+                mask, (1 - g) * alpha + g * ecn.astype(jnp.float32), alpha
+            )
+            up = cwnd + 1.0 / jnp.maximum(cwnd, 1.0)
+            down = cwnd - alpha / 2.0
+            cwnd = jnp.where(mask, jnp.where(ecn, down, up), cwnd)
+        elif cfg.cc == "eqds":
+            # receiver-credit approximation: fast additive increase toward a
+            # hard BDP cap; ECN halves toward the cap floor.
+            up = cwnd + 4.0 / jnp.maximum(cwnd, 1.0)
+            down = cwnd - 0.5
+            cwnd = jnp.where(mask, jnp.where(ecn, down, up), cwnd)
+            cwnd = jnp.minimum(cwnd, float(self.cfg.init_cwnd_pkts))
+        elif cfg.cc == "delay":
+            t = float(cfg.delay_target_ticks)
+            over = (rtt.astype(jnp.float32) - t) / t
+            up = cwnd + 1.0 / jnp.maximum(cwnd, 1.0)
+            down = cwnd - cfg.delay_beta * jnp.clip(over, 0.0, 1.0)
+            cwnd = jnp.where(mask, jnp.where(over > 0, down, up), cwnd)
+        else:
+            raise ValueError(cfg.cc)
+        cwnd = jnp.clip(cwnd, 1.0, float(cfg.max_cwnd_pkts))
+        return cwnd, alpha
+
+    # ------------------------------------------------------------------
+    def tick_fn(self, state: SimState, tick: jax.Array) -> tuple[SimState, TickTrace]:
+        cfg, topo = self.cfg, self.topo
+        NP, NQ, NH = self.NP, self.NQ, self.NH
+        NC = self.wl.n_conns
+        QCAP = cfg.queue_capacity
+        now = tick.astype(jnp.int32)
+        key = jax.random.fold_in(self.base_key, tick)
+        state_at_entry = state.p_state
+
+        (
+            p_state, p_conn, p_ev, p_seq, p_hop, p_cur_queue, p_send_tick,
+            p_event_tick, p_ecn, p_orphan, p_ack_count,
+            qbuf, q_head, q_len, q_served,
+            c_inflight, c_next_new, c_delivered, c_rx_pending, c_done,
+            c_done_tick, c_rtx_count, c_rtx, c_rcv, c_cwnd, c_alpha,
+            h_rr, lb_state, fl, fl_head, fl_count,
+            s_drops_cong, s_drops_fail, s_timeouts, s_delivered, s_ecn_marks,
+            s_injected, s_unprocessed, s_alloc_fail,
+        ) = state
+
+        # =============== 1. feedback (ACK / NACK) =====================
+        due = ((p_state == IN_ACK) | (p_state == IN_NACK)) & (p_event_tick == now)
+        e_idx = jnp.nonzero(due, size=self.MAX_EV, fill_value=NP)[0]
+        e_valid = e_idx < NP
+        eg = lambda arr, fill: jnp.where(e_valid, arr[jnp.minimum(e_idx, NP - 1)], fill)
+        e_conn = eg(p_conn, NC)  # NC = sentinel row for scatters (mode drop)
+        e_is_nack = eg(p_state, 0) == IN_NACK
+        e_ev = eg(p_ev, 0)
+        e_ecn = eg(p_ecn, False)
+        e_cnt = eg(p_ack_count, 0)
+        e_seq = eg(p_seq, 0)
+        e_rtt = jnp.where(e_valid, now - eg(p_send_tick, 0), 0)
+
+        # exact inflight accounting over ALL events
+        dec = jnp.where(e_is_nack, 1, e_cnt)
+        c_inflight = c_inflight.at[e_conn].add(-dec, mode="drop")
+        # NACK: mark retransmission, window -1 MTU (congestion drop signal)
+        nack_mask = e_valid & e_is_nack
+        already = c_rcv.at[e_conn, e_seq].get(mode="fill", fill_value=True)
+        need_rtx = nack_mask & ~already
+        prev_rtx = c_rtx.at[e_conn, e_seq].get(mode="fill", fill_value=True)
+        c_rtx = c_rtx.at[e_conn, e_seq].max(need_rtx, mode="drop")
+        c_rtx_count = c_rtx_count.at[e_conn].add(
+            (need_rtx & ~prev_rtx).astype(jnp.int32), mode="drop"
+        )
+        nacks_per_conn = (
+            jnp.zeros((NC + 1,), jnp.int32).at[e_conn].add(nack_mask, mode="drop")[:NC]
+        )
+        c_cwnd = jnp.clip(
+            c_cwnd - nacks_per_conn.astype(jnp.float32),
+            1.0,
+            float(cfg.max_cwnd_pkts),
+        )
+
+        # LB + CC updates: up to `feedback_rounds` exact rounds of one ACK
+        # event per connection.
+        processed = ~(e_valid & ~e_is_nack)
+        ev_order = jnp.arange(self.MAX_EV, dtype=jnp.int32)
+        for _ in range(cfg.feedback_rounds):
+            slot = (
+                jnp.full((NC + 1,), self.MAX_EV, jnp.int32)
+                .at[e_conn]
+                .min(jnp.where(processed, self.MAX_EV, ev_order), mode="drop")
+            )
+            win = (~processed) & (slot.at[e_conn].get(mode="fill", fill_value=self.MAX_EV) == ev_order)
+            w_conn = jnp.where(win, e_conn, NC)
+            conn_mask = (
+                jnp.zeros((NC + 1,), jnp.bool_).at[w_conn].max(win, mode="drop")[:NC]
+            )
+            conn_ev = (
+                jnp.zeros((NC + 1,), jnp.int32).at[w_conn].max(jnp.where(win, e_ev, 0), mode="drop")[:NC]
+            )
+            conn_ecn = (
+                jnp.zeros((NC + 1,), jnp.bool_).at[w_conn].max(win & e_ecn, mode="drop")[:NC]
+            )
+            conn_rtt = (
+                jnp.zeros((NC + 1,), jnp.int32).at[w_conn].max(jnp.where(win, e_rtt, 0), mode="drop")[:NC]
+            )
+            c_cwnd, c_alpha = self._cc_on_ack(c_cwnd, c_alpha, conn_mask, conn_ecn, conn_rtt)
+            lb_state = self.lb.on_ack(lb_state, conn_mask, conn_ev, conn_ecn, now)
+            processed = processed | win
+        s_unprocessed = s_unprocessed + jnp.sum((~processed).astype(jnp.int32))
+
+        # free all feedback slots
+        p_state = jnp.where(due, FREE, p_state)
+
+        # =============== 2. RTO ========================================
+        active_data = (p_state == FLYING) | (p_state == QUEUED) | (p_state == LOST_WAIT)
+        conn_done_of_pkt = c_done[jnp.clip(p_conn, 0, NC - 1)]
+        rto = (
+            active_data
+            & ~p_orphan
+            & ((now - p_send_tick) >= cfg.rto_ticks)
+            & ~conn_done_of_pkt
+        )
+        rcv_already = c_rcv.at[p_conn, p_seq].get(mode="fill", fill_value=True)
+        rto_need = rto & ~rcv_already
+        prev_rtx_p = c_rtx.at[p_conn, p_seq].get(mode="fill", fill_value=True)
+        c_rtx = c_rtx.at[jnp.where(rto_need, p_conn, NC), p_seq].max(rto_need, mode="drop")
+        c_rtx_count = c_rtx_count.at[jnp.where(rto_need & ~prev_rtx_p, p_conn, NC)].add(
+            1, mode="drop"
+        )
+        rto_per_conn = (
+            jnp.zeros((NC + 1,), jnp.int32)
+            .at[jnp.where(rto, p_conn, NC)]
+            .add(1, mode="drop")[:NC]
+        )
+        c_inflight = c_inflight - rto_per_conn
+        c_cwnd = jnp.clip(
+            c_cwnd - rto_per_conn.astype(jnp.float32), 1.0, float(cfg.max_cwnd_pkts)
+        )
+        lb_state = self.lb.on_timeout(lb_state, rto_per_conn > 0, now)
+        s_timeouts = s_timeouts + jnp.sum(rto.astype(jnp.int32))
+        # orphan in-network packets; free LOST_WAIT ones
+        p_orphan = p_orphan | rto
+        p_state = jnp.where(rto & (p_state == LOST_WAIT), FREE, p_state)
+
+        # =============== 3. service / dequeue ===========================
+        f_active = (now >= self.f_start) & (now < self.f_end)
+        failed_q = (
+            jnp.zeros((NQ + 1,), jnp.bool_)
+            .at[jnp.where(f_active & (self.f_kind == 0), self.f_queue, NQ)]
+            .max(True, mode="drop")[:NQ]
+        )
+        degraded_q = (
+            jnp.zeros((NQ + 1,), jnp.bool_)
+            .at[jnp.where(f_active & (self.f_kind == 1), self.f_queue, NQ)]
+            .max(True, mode="drop")[:NQ]
+        )
+        service_ok = ~(degraded_q & (now % 2 == 1))
+        serve = (q_len > 0) & service_ok
+        head_pid = qbuf[jnp.arange(NQ), q_head % QCAP]
+        q_head = jnp.where(serve, q_head + 1, q_head)
+        q_len = jnp.where(serve, q_len - 1, q_len)
+        q_served = q_served + serve.astype(jnp.int32)
+
+        pid = jnp.where(serve, head_pid, NP)  # NP = drop sentinel
+        qid = jnp.arange(NQ, dtype=jnp.int32)
+        blackhole = serve & failed_q
+        is_final = serve & ~blackhole & (qid >= topo.t0_down_base)
+        mid = serve & ~blackhole & ~is_final
+
+        d_orph = p_orphan.at[pid].get(mode="fill", fill_value=False)
+        # blackholed: silent loss (failure — no trim); orphans are freed
+        s_drops_fail = s_drops_fail + jnp.sum((blackhole & ~d_orph).astype(jnp.int32))
+        p_state = p_state.at[jnp.where(blackhole, pid, NP)].set(
+            jnp.where(d_orph, FREE, LOST_WAIT), mode="drop"
+        )
+        # mid-path: fly to next hop
+        p_state = p_state.at[jnp.where(mid, pid, NP)].set(FLYING, mode="drop")
+        p_event_tick = p_event_tick.at[jnp.where(mid, pid, NP)].set(
+            now + cfg.hop_latency_ticks, mode="drop"
+        )
+        p_hop = p_hop.at[jnp.where(mid, pid, NP)].add(1, mode="drop")
+        p_cur_queue = p_cur_queue.at[jnp.where(mid, pid, NP)].set(qid, mode="drop")
+
+        # deliveries (≤ 1 per connection per tick — host downlink serves 1)
+        dconn = jnp.where(is_final, p_conn.at[pid].get(mode="fill", fill_value=0), NC)
+        dseq = p_seq.at[pid].get(mode="fill", fill_value=0)
+        was_done = c_done.at[dconn].get(mode="fill", fill_value=True)
+        newly = is_final & ~c_rcv.at[dconn, dseq].get(mode="fill", fill_value=True)
+        c_rcv = c_rcv.at[dconn, dseq].max(is_final, mode="drop")
+        c_delivered = c_delivered.at[jnp.where(newly, dconn, NC)].add(1, mode="drop")
+        s_delivered = s_delivered + jnp.sum(newly.astype(jnp.int32))
+        deliver_ackable = is_final & ~d_orph & ~was_done
+        c_rx_pending = c_rx_pending.at[jnp.where(deliver_ackable, dconn, NC)].add(
+            1, mode="drop"
+        )
+        msg_of = self.conn_msg.at[dconn].get(mode="fill", fill_value=BIG)
+        now_done = c_delivered.at[dconn].get(mode="fill", fill_value=0) >= msg_of
+        rxp = c_rx_pending.at[dconn].get(mode="fill", fill_value=0)
+        emit = deliver_ackable & ((rxp >= cfg.ack_coalesce) | now_done)
+        # emitted ACK reuses the packet slot
+        p_state = p_state.at[jnp.where(is_final, pid, NP)].set(
+            jnp.where(emit, IN_ACK, FREE), mode="drop"
+        )
+        p_event_tick = p_event_tick.at[jnp.where(emit, pid, NP)].set(
+            now + cfg.ack_delay_ticks, mode="drop"
+        )
+        p_ack_count = p_ack_count.at[jnp.where(emit, pid, NP)].set(rxp, mode="drop")
+        c_rx_pending = c_rx_pending.at[jnp.where(emit, dconn, NC)].set(0, mode="drop")
+        # completion bookkeeping
+        first_done = is_final & now_done & ~was_done
+        c_done = c_done.at[jnp.where(first_done, dconn, NC)].set(True, mode="drop")
+        c_done_tick = c_done_tick.at[jnp.where(first_done, dconn, NC)].set(
+            now, mode="drop"
+        )
+
+        # =============== 4. arrivals / enqueue ==========================
+        arr = (p_state == FLYING) & (p_event_tick == now)
+        a_idx = jnp.nonzero(arr, size=self.MAX_ARR, fill_value=NP)[0]
+        a_valid = a_idx < NP
+        ag = lambda arr_, fill: jnp.where(
+            a_valid, arr_[jnp.minimum(a_idx, NP - 1)], fill
+        )
+        a_conn = ag(p_conn, 0)
+        a_ev = ag(p_ev, 0)
+        a_inj = ag(p_hop, 1) == 0
+        a_cur = ag(p_cur_queue, 0)
+        a_src = self.conn_src[jnp.clip(a_conn, 0, NC - 1)]
+        a_dst = self.conn_dst[jnp.clip(a_conn, 0, NC - 1)]
+        # adaptive switches exclude locally-known failed ports (link down is
+        # visible at the switch); hashing LBs ignore q_len entirely.
+        q_len_eff = q_len + failed_q.astype(jnp.int32) * jnp.int32(4 * QCAP)
+        target = topo.next_queue(
+            a_inj, a_cur, a_conn, a_ev, a_src, a_dst, q_len_eff,
+            adaptive=self.lb.switch_adaptive,
+        )
+        target = jnp.where(a_valid, target, NQ)
+        # FIFO rank among same-target arrivals (stable in slot order)
+        skey = target * jnp.int32(self.MAX_ARR) + jnp.arange(self.MAX_ARR, dtype=jnp.int32)
+        order = jnp.argsort(skey)
+        tsorted = target[order]
+        run_start = jnp.concatenate(
+            [jnp.ones((1,), jnp.bool_), tsorted[1:] != tsorted[:-1]]
+        )
+        pos_in_run = jnp.arange(self.MAX_ARR) - jnp.maximum.accumulate(
+            jnp.where(run_start, jnp.arange(self.MAX_ARR), 0)
+        )
+        rank = jnp.zeros((self.MAX_ARR,), jnp.int32).at[order].set(pos_in_run)
+        room = QCAP - q_len.at[target].get(mode="fill", fill_value=0)
+        accept = a_valid & (rank < room)
+        dropd = a_valid & ~accept
+        pos = q_len.at[target].get(mode="fill", fill_value=0) + rank
+        mark_p = (
+            jnp.clip(
+                (pos.astype(jnp.float32) - cfg.kmin) / float(cfg.kmax - cfg.kmin),
+                0.0,
+                1.0,
+            )
+            * cfg.pmax
+        )
+        mark = accept & (
+            jax.random.uniform(jax.random.fold_in(key, 1), (self.MAX_ARR,)) < mark_p
+        )
+        s_ecn_marks = s_ecn_marks + jnp.sum(mark.astype(jnp.int32))
+        slot = (q_head.at[target].get(mode="fill", fill_value=0) + pos) % QCAP
+        qbuf = qbuf.at[jnp.where(accept, target, NQ), slot].set(
+            a_idx, mode="drop"
+        )
+        q_len = q_len.at[jnp.where(accept, target, NQ)].add(1, mode="drop")
+        p_ecn = p_ecn.at[jnp.where(mark, a_idx, NP)].max(True, mode="drop")
+        p_state = p_state.at[jnp.where(accept, a_idx, NP)].set(QUEUED, mode="drop")
+        p_cur_queue = p_cur_queue.at[jnp.where(accept, a_idx, NP)].set(
+            target, mode="drop"
+        )
+        # congestion drops: trim → NACK; else silent (await RTO); orphans free
+        a_orph = ag(p_orphan, False)
+        s_drops_cong = s_drops_cong + jnp.sum((dropd & ~a_orph).astype(jnp.int32))
+        if cfg.trimming:
+            dstate = jnp.where(a_orph, FREE, IN_NACK)
+        else:
+            dstate = jnp.where(a_orph, FREE, LOST_WAIT)
+        p_state = p_state.at[jnp.where(dropd, a_idx, NP)].set(dstate, mode="drop")
+        if cfg.trimming:
+            p_event_tick = p_event_tick.at[jnp.where(dropd & ~a_orph, a_idx, NP)].set(
+                now + cfg.nack_delay_ticks, mode="drop"
+            )
+
+        # =============== 5. injection ===================================
+        started = (now >= self.conn_start) & (
+            (self.conn_dep < 0) | c_done[jnp.clip(self.conn_dep, 0, NC - 1)]
+        )
+        has_work = (c_rtx_count > 0) | (c_next_new < self.conn_msg)
+        can = (
+            started
+            & ~c_done
+            & has_work
+            & (c_inflight < jnp.floor(c_cwnd).astype(jnp.int32))
+        )
+        hc = self.host_conns  # (NH, CPH)
+        elig = can[jnp.clip(hc, 0, NC - 1)] & (hc >= 0)
+        ordr = (jnp.arange(self.CPH)[None, :] - h_rr[:, None]) % self.CPH
+        score = jnp.where(elig, ordr, BIG)
+        pick_local = jnp.argmin(score, axis=1).astype(jnp.int32)
+        any_pick = jnp.min(score, axis=1) < BIG
+        # free-slot allocation (ring pop)
+        srank = jnp.cumsum(any_pick.astype(jnp.int32)) - 1
+        can_alloc = srank < fl_count
+        sendh = any_pick & can_alloc
+        s_alloc_fail = s_alloc_fail + jnp.sum((any_pick & ~can_alloc).astype(jnp.int32))
+        n_alloc = jnp.sum(sendh.astype(jnp.int32))
+        slot_p = fl[(fl_head + srank) % NP]
+        fl_head = (fl_head + n_alloc) % NP
+        fl_count = fl_count - n_alloc
+
+        pick_conn = jnp.where(
+            sendh, hc[jnp.arange(NH), pick_local], NC
+        )  # NC sentinel
+        h_rr = jnp.where(sendh, (pick_local + 1) % self.CPH, h_rr)
+        send_mask = (
+            jnp.zeros((NC + 1,), jnp.bool_).at[pick_conn].max(sendh, mode="drop")[:NC]
+        )
+        # seq selection: retransmissions first
+        use_rtx = c_rtx_count[jnp.clip(pick_conn, 0, NC - 1)] > 0
+        rtx_rows = c_rtx[jnp.clip(pick_conn, 0, NC - 1)]  # (NH, MSG)
+        rtx_seq = jnp.argmax(rtx_rows, axis=1).astype(jnp.int32)
+        new_seq = c_next_new[jnp.clip(pick_conn, 0, NC - 1)]
+        seq = jnp.where(use_rtx, rtx_seq, new_seq)
+        c_rtx = c_rtx.at[jnp.where(sendh & use_rtx, pick_conn, NC), rtx_seq].set(
+            False, mode="drop"
+        )
+        c_rtx_count = c_rtx_count.at[jnp.where(sendh & use_rtx, pick_conn, NC)].add(
+            -1, mode="drop"
+        )
+        c_next_new = c_next_new.at[jnp.where(sendh & ~use_rtx, pick_conn, NC)].add(
+            1, mode="drop"
+        )
+        c_inflight = c_inflight.at[jnp.where(sendh, pick_conn, NC)].add(1, mode="drop")
+        s_injected = s_injected + n_alloc
+
+        # the load balancer stamps the EV (REPS Algorithm 2)
+        evs, lb_state = self.lb.choose_ev(
+            lb_state, send_mask, jax.random.fold_in(key, 2), now
+        )
+        pkt_ev = evs[jnp.clip(pick_conn, 0, NC - 1)]
+
+        wslot = jnp.where(sendh, slot_p, NP)
+        p_state = p_state.at[wslot].set(FLYING, mode="drop")
+        p_conn = p_conn.at[wslot].set(pick_conn, mode="drop")
+        p_ev = p_ev.at[wslot].set(pkt_ev, mode="drop")
+        p_seq = p_seq.at[wslot].set(seq, mode="drop")
+        p_hop = p_hop.at[wslot].set(0, mode="drop")
+        p_cur_queue = p_cur_queue.at[wslot].set(-1, mode="drop")
+        p_send_tick = p_send_tick.at[wslot].set(now, mode="drop")
+        p_event_tick = p_event_tick.at[wslot].set(
+            now + cfg.hop_latency_ticks, mode="drop"
+        )
+        p_ecn = p_ecn.at[wslot].set(False, mode="drop")
+        p_orphan = p_orphan.at[wslot].set(False, mode="drop")
+        p_ack_count = p_ack_count.at[wslot].set(0, mode="drop")
+
+        # =============== 6. free-list push ==============================
+        freed = (p_state == FREE) & (state_at_entry != FREE)
+        # exclude slots that were popped and re-used this tick (state FLYING
+        # now, so they are not FREE — no conflict).
+        f_idx2 = jnp.nonzero(freed, size=self.MAX_FREE, fill_value=NP)[0]
+        f_val = f_idx2 < NP
+        frank = jnp.cumsum(f_val.astype(jnp.int32)) - 1
+        n_freed = jnp.sum(f_val.astype(jnp.int32))
+        fpos = (fl_head + fl_count + frank) % NP
+        fl = fl.at[jnp.where(f_val, fpos, NP)].set(f_idx2, mode="drop")
+        fl_count = fl_count + n_freed
+
+        new_state = SimState(
+            p_state, p_conn, p_ev, p_seq, p_hop, p_cur_queue, p_send_tick,
+            p_event_tick, p_ecn, p_orphan, p_ack_count,
+            qbuf, q_head, q_len, q_served,
+            c_inflight, c_next_new, c_delivered, c_rx_pending, c_done,
+            c_done_tick, c_rtx_count, c_rtx, c_rcv, c_cwnd, c_alpha,
+            h_rr, lb_state, fl, fl_head, fl_count,
+            s_drops_cong, s_drops_fail, s_timeouts, s_delivered, s_ecn_marks,
+            s_injected, s_unprocessed, s_alloc_fail,
+        )
+        trace = TickTrace(
+            max_qlen=jnp.max(q_len),
+            sum_qlen=jnp.sum(q_len),
+            drops=s_drops_cong + s_drops_fail,
+            timeouts=s_timeouts,
+            delivered=s_delivered,
+            injected=s_injected,
+            watch_qlen=q_len[self.watch],
+            watch_served=serve[self.watch].astype(jnp.int32),
+        )
+        return new_state, trace
+
+    # ------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=(0, 1))
+    def _run(self, n_ticks: int, state: SimState):
+        ticks = jnp.arange(n_ticks, dtype=jnp.int32)
+        return jax.lax.scan(self.tick_fn, state, ticks)
+
+    def run(self, n_ticks: int, state: SimState | None = None):
+        """Run the simulation for n_ticks; returns (final_state, trace)."""
+        if state is None:
+            state = self.init_state()
+        return self._run(n_ticks, state)

@@ -1,0 +1,67 @@
+"""Failure-schedule builders (paper §4.3.3, Appendix D.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.netsim.config import SimConfig
+from repro.netsim.engine import FailureSchedule
+from repro.netsim.topology import Topology
+
+
+def link_down(queues, start: int, end: int) -> FailureSchedule:
+    q = np.atleast_1d(np.asarray(queues, np.int32))
+    n = len(q)
+    return FailureSchedule(
+        queue=q,
+        start=np.full((n,), start, np.int32),
+        end=np.full((n,), end, np.int32),
+        kind=np.zeros((n,), np.int32),
+    )
+
+
+def link_degraded(queues, start: int, end: int) -> FailureSchedule:
+    q = np.atleast_1d(np.asarray(queues, np.int32))
+    n = len(q)
+    return FailureSchedule(
+        queue=q,
+        start=np.full((n,), start, np.int32),
+        end=np.full((n,), end, np.int32),
+        kind=np.ones((n,), np.int32),
+    )
+
+
+def random_degraded_uplinks(
+    cfg: SimConfig, fraction: float, start: int = 0, end: int = 2**30, seed: int = 0
+) -> FailureSchedule:
+    """Degrade a random `fraction` of TOR uplinks to half rate (fig 4)."""
+    topo = Topology.build(cfg)
+    rng = np.random.RandomState(seed)
+    ups = np.concatenate([topo.t0_up_queues(t) for t in range(cfg.n_tors)])
+    k = max(1, int(round(fraction * len(ups))))
+    chosen = rng.choice(ups, k, replace=False)
+    return link_degraded(chosen, start, end)
+
+
+def random_down_uplinks(
+    cfg: SimConfig, fraction: float, start: int, end: int, seed: int = 0
+) -> FailureSchedule:
+    """Take a random `fraction` of TOR uplinks fully down (fig 7/8)."""
+    topo = Topology.build(cfg)
+    rng = np.random.RandomState(seed)
+    ups = np.concatenate([topo.t0_up_queues(t) for t in range(cfg.n_tors)])
+    k = max(1, int(round(fraction * len(ups))))
+    chosen = rng.choice(ups, k, replace=False)
+    return link_down(chosen, start, end)
+
+
+def incremental_uplink_failures(
+    cfg: SimConfig, tor: int, n_fail: int, first_start: int, interval: int
+) -> FailureSchedule:
+    """Fail n_fail uplinks of one TOR, staggered (Appendix D.3 / fig 19)."""
+    topo = Topology.build(cfg)
+    ups = topo.t0_up_queues(tor)[:n_fail]
+    scheds = [
+        link_down([q], first_start + i * interval, 2**30)
+        for i, q in enumerate(ups)
+    ]
+    return FailureSchedule.concat(*scheds)

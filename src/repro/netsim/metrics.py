@@ -1,0 +1,62 @@
+"""Result summarization for simulation runs."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.netsim.config import TICK_NS
+
+
+@dataclasses.dataclass
+class RunSummary:
+    name: str
+    lb: str
+    n_conns: int
+    completed: int
+    runtime_ticks: int  # max FCT over completed conns (the paper's metric)
+    runtime_us: float
+    mean_fct_ticks: float
+    p99_fct_ticks: float
+    drops_cong: int
+    drops_fail: int
+    timeouts: int
+    delivered: int
+    injected: int
+    ecn_marks: int
+    unprocessed_events: int
+    alloc_fails: int
+
+    def row(self) -> str:
+        return (
+            f"{self.name},{self.lb},{self.completed}/{self.n_conns},"
+            f"{self.runtime_us:.1f},{self.mean_fct_ticks:.0f},"
+            f"{self.p99_fct_ticks:.0f},{self.drops_cong},{self.drops_fail},"
+            f"{self.timeouts}"
+        )
+
+
+def summarize(sim, state, name: str | None = None) -> RunSummary:
+    done = np.asarray(state.c_done)
+    done_tick = np.asarray(state.c_done_tick)
+    start = np.asarray(sim.conn_start)
+    fct = (done_tick - start)[done]
+    runtime = int(done_tick[done].max()) if done.any() else -1
+    return RunSummary(
+        name=name or sim.wl.name,
+        lb=sim.lb.name,
+        n_conns=sim.wl.n_conns,
+        completed=int(done.sum()),
+        runtime_ticks=runtime,
+        runtime_us=runtime * TICK_NS / 1000.0,
+        mean_fct_ticks=float(fct.mean()) if len(fct) else float("nan"),
+        p99_fct_ticks=float(np.percentile(fct, 99)) if len(fct) else float("nan"),
+        drops_cong=int(state.s_drops_cong),
+        drops_fail=int(state.s_drops_fail),
+        timeouts=int(state.s_timeouts),
+        delivered=int(state.s_delivered),
+        injected=int(state.s_injected),
+        ecn_marks=int(state.s_ecn_marks),
+        unprocessed_events=int(state.s_unprocessed),
+        alloc_fails=int(state.s_alloc_fail),
+    )

@@ -1,0 +1,56 @@
+"""MixedLB: run two load balancers side by side in one simulation
+(foreground vs background traffic, paper Fig. 5 / incremental deployment).
+
+Each connection is statically assigned to cohort A or B; state for both LBs
+is kept and events are routed by the cohort mask.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.load_balancers import LoadBalancer
+
+
+class MixedLB(LoadBalancer):
+    name = "mixed"
+
+    def __init__(self, lb_a: LoadBalancer, lb_b: LoadBalancer, b_mask: np.ndarray):
+        super().__init__(lb_a.evs_size)
+        assert not (lb_a.switch_adaptive or lb_b.switch_adaptive), (
+            "mixed mode supports endpoint LBs only"
+        )
+        self.lb_a, self.lb_b = lb_a, lb_b
+        self.b_mask_np = np.asarray(b_mask, bool)
+        self.name = f"mixed({lb_a.name}+{lb_b.name})"
+
+    def init_state(self, n_conns, key):
+        import jax
+
+        ka, kb = jax.random.split(key)
+        return (
+            self.lb_a.init_state(n_conns, ka),
+            self.lb_b.init_state(n_conns, kb),
+            jnp.asarray(self.b_mask_np),
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        import jax
+
+        sa, sb, bm = state
+        ka, kb = jax.random.split(key)
+        ev_a, sa = self.lb_a.choose_ev(sa, mask & ~bm, ka, now)
+        ev_b, sb = self.lb_b.choose_ev(sb, mask & bm, kb, now)
+        return jnp.where(bm, ev_b, ev_a), (sa, sb, bm)
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        sa, sb, bm = state
+        sa = self.lb_a.on_ack(sa, mask & ~bm, ev, ecn, now)
+        sb = self.lb_b.on_ack(sb, mask & bm, ev, ecn, now)
+        return (sa, sb, bm)
+
+    def on_timeout(self, state, mask, now):
+        sa, sb, bm = state
+        sa = self.lb_a.on_timeout(sa, mask & ~bm, now)
+        sb = self.lb_b.on_timeout(sb, mask & bm, now)
+        return (sa, sb, bm)

@@ -1,0 +1,9 @@
+from repro.train import optimizer, steps
+from repro.train.optimizer import AdamWConfig, apply_updates, init_opt_state, opt_state_axes
+from repro.train.steps import TrainConfig, init_train_state, make_serve_steps, make_train_step
+
+__all__ = [
+    "optimizer", "steps", "AdamWConfig", "apply_updates", "init_opt_state",
+    "opt_state_axes", "TrainConfig", "init_train_state", "make_serve_steps",
+    "make_train_step",
+]

@@ -1,0 +1,46 @@
+"""Pytree-registered dataclasses (a tiny flax.struct analogue).
+
+Fields are array ("data") fields by default; static configuration fields are
+declared with ``static_field()`` and become part of the pytree treedef, so
+they may be used in Python control flow inside jitted code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+_STATIC_MARK = "__repro_static__"
+
+
+def static_field(default: Any = dataclasses.MISSING, **kwargs):
+    """Declare a dataclass field as static (hashable treedef metadata)."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata[_STATIC_MARK] = True
+    if default is dataclasses.MISSING:
+        return dataclasses.field(metadata=metadata, **kwargs)
+    return dataclasses.field(default=default, metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls: type[_T]) -> type[_T]:
+    """Decorator: freeze the dataclass and register it as a JAX pytree."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    data_fields = []
+    meta_fields = []
+    for f in dataclasses.fields(cls):
+        if f.metadata.get(_STATIC_MARK, False):
+            meta_fields.append(f.name)
+        else:
+            data_fields.append(f.name)
+    jax.tree_util.register_dataclass(
+        cls, data_fields=tuple(data_fields), meta_fields=tuple(meta_fields)
+    )
+
+    def replace(self: _T, **updates: Any) -> _T:
+        return dataclasses.replace(self, **updates)
+
+    cls.replace = replace  # type: ignore[attr-defined]
+    return cls

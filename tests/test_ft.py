@@ -1,0 +1,56 @@
+"""Fault tolerance: REPS channel scheduler, straggler detection."""
+import numpy as np
+
+from repro.ft import (
+    ChannelSim,
+    ChannelSimConfig,
+    LatencyECN,
+    OpsChannelScheduler,
+    RepsChannelScheduler,
+    StepWatchdog,
+    run_cross_pod_reduce,
+)
+
+
+def test_reps_channels_avoid_failures():
+    cfg = ChannelSimConfig(n_channels=16)
+    results = {}
+    for name, mk in [
+        ("ops", lambda: OpsChannelScheduler(16, seed=0)),
+        ("reps", lambda: RepsChannelScheduler(16, seed=0)),
+    ]:
+        sim = ChannelSim(cfg, seed=0)
+        sim.set_failed(range(6))
+        results[name] = run_cross_pod_reduce(mk(), sim, 256, 32)
+    assert results["reps"].timeouts < results["ops"].timeouts / 3
+    assert results["reps"].total_latency_us < results["ops"].total_latency_us
+
+
+def test_reps_channels_freeze_and_recover():
+    sched = RepsChannelScheduler(16, seed=1, freezing_timeout_rounds=2)
+    sim = ChannelSim(ChannelSimConfig(n_channels=16), seed=1)
+    # healthy warmup
+    run_cross_pod_reduce(sched, sim, 64, 16)
+    assert not sched.is_freezing
+    sim.set_failed(range(8))
+    run_cross_pod_reduce(sched, sim, 64, 16)
+    # after failures, scheduler must have frozen at some point and still
+    # completed; now heal and confirm it exits freezing
+    sim.set_failed(range(8), failed=False)
+    rep = run_cross_pod_reduce(sched, sim, 128, 16)
+    assert rep.timeouts == 0
+
+
+def test_latency_ecn_marks_outliers():
+    m = LatencyECN(factor=1.5)
+    lat = np.array([100.0] * 20 + [500.0, 100.0, 100.0])
+    marks = m.mark(lat)
+    assert marks[20] and not marks[:20].any()
+
+
+def test_step_watchdog():
+    w = StepWatchdog(factor=3.0, trigger_after=2)
+    for _ in range(10):
+        assert not w.observe(1.0)
+    assert not w.observe(10.0)  # first slow step
+    assert w.observe(10.0)  # second consecutive -> trigger

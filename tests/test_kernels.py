@@ -1,0 +1,113 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows", [1, 8, 17, 64])
+@pytest.mark.parametrize("nports", [2, 8, 16, 64])
+def test_ecmp_hash_sweep(rows, nports):
+    key = jax.random.PRNGKey(rows * 101 + nports)
+    flow = jax.random.randint(key, (rows, 128), 0, 1 << 20, jnp.int32)
+    ev = jax.random.randint(jax.random.fold_in(key, 1), (rows, 128), 0, 65536, jnp.int32)
+    salt = jax.random.randint(jax.random.fold_in(key, 2), (rows, 128), 0, 64, jnp.int32)
+    got = ops.ecmp_hash(flow, ev, salt, jnp.int32(nports))
+    want = ref.ecmp_hash_ref(flow, ev, salt, nports)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # output range
+    assert int(jnp.min(got)) >= 0 and int(jnp.max(got)) < nports
+
+
+def test_ecmp_hash_uniformity():
+    """the mixing hash should spread EVs near-uniformly over ports."""
+    key = jax.random.PRNGKey(0)
+    flow = jnp.zeros((64, 128), jnp.int32)
+    ev = jnp.arange(64 * 128, dtype=jnp.int32).reshape(64, 128)
+    salt = jnp.zeros((64, 128), jnp.int32)
+    got = np.asarray(ops.ecmp_hash(flow, ev, salt, jnp.int32(16)))
+    counts = np.bincount(got.reshape(-1), minlength=16)
+    assert counts.min() > 0.7 * counts.mean()
+
+
+# ---------------------------------------------------------------------------
+def _rand_reps_inputs(key, N, evs=256, bdp=4, freeze=30):
+    ks = [jax.random.fold_in(key, i) for i in range(16)]
+    buf_valid = jax.random.bernoulli(ks[1], 0.5, (N, 8)).astype(jnp.int32)
+    return dict(
+        buf_ev=jax.random.randint(ks[0], (N, 8), 0, evs, jnp.int32),
+        buf_valid=buf_valid,
+        head=jax.random.randint(ks[2], (N,), 0, 8, jnp.int32),
+        num_valid=buf_valid.sum(1),
+        explore=jax.random.randint(ks[3], (N,), 0, 3, jnp.int32),
+        freezing=jax.random.bernoulli(ks[4], 0.3, (N,)).astype(jnp.int32),
+        exit_freeze=jax.random.randint(ks[5], (N,), 0, 100, jnp.int32),
+        n_cached=jax.random.randint(ks[6], (N,), 0, 20, jnp.int32),
+        ack_mask=jax.random.bernoulli(ks[7], 0.5, (N,)).astype(jnp.int32),
+        ack_ev=jax.random.randint(ks[8], (N,), 0, evs, jnp.int32),
+        ack_ecn=jax.random.bernoulli(ks[9], 0.3, (N,)).astype(jnp.int32),
+        timeout_mask=jax.random.bernoulli(ks[10], 0.2, (N,)).astype(jnp.int32),
+        send_mask=jax.random.bernoulli(ks[11], 0.7, (N,)).astype(jnp.int32),
+        rand_ev=jax.random.randint(ks[12], (N,), 0, evs, jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("N", [1, 8, 128, 300, 515])
+def test_reps_tick_sweep(N):
+    inp = _rand_reps_inputs(jax.random.PRNGKey(N), N)
+    args = tuple(inp.values()) + (50, 4, 30)
+    got = ops.reps_tick(*args)
+    want = ref.reps_tick_ref(*args)
+    for i, (g, w) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=f"field {i}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_reps_tick_property(N, seed):
+    inp = _rand_reps_inputs(jax.random.PRNGKey(seed), N)
+    args = tuple(inp.values()) + (seed % 100, 4, 30)
+    got = ops.reps_tick(*args)
+    want = ref.reps_tick_ref(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("Q,K", [(8, 16), (64, 300), (128, 128), (200, 513)])
+def test_queue_tick_sweep(Q, K):
+    key = jax.random.PRNGKey(Q * 7 + K)
+    qlen = jax.random.randint(key, (Q,), 0, 30, jnp.int32)
+    serve = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.9, (Q,)).astype(jnp.int32)
+    target = jax.random.randint(jax.random.fold_in(key, 2), (K,), 0, Q + 8, jnp.int32)
+    u = jax.random.uniform(jax.random.fold_in(key, 3), (K,))
+    got = ops.queue_tick(target, u, qlen, serve, 32, 6, 26)
+    want = ref.queue_tick_ref(np.asarray(target), np.asarray(u), qlen, serve, 32, 6, 26)
+    for name, g, w in zip(["qlen", "accept", "mark"], got[:3], want[:3]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    acc = np.asarray(got[1])
+    np.testing.assert_array_equal(np.asarray(got[3])[acc], np.asarray(want[3])[acc])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 260), st.integers(0, 2**31 - 1))
+def test_queue_tick_property(Q, K, seed):
+    key = jax.random.PRNGKey(seed)
+    qlen = jax.random.randint(key, (Q,), 0, 40, jnp.int32)
+    serve = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (Q,)).astype(jnp.int32)
+    target = jax.random.randint(jax.random.fold_in(key, 2), (K,), 0, Q + 3, jnp.int32)
+    u = jax.random.uniform(jax.random.fold_in(key, 3), (K,))
+    cap, kmin, kmax = 32, 6, 26
+    new_qlen, accept, mark, pos = ops.queue_tick(target, u, qlen, serve, cap, kmin, kmax)
+    # invariants: capacity respected; conservation
+    assert int(jnp.max(new_qlen)) <= max(cap, int(jnp.max(qlen)))
+    served = np.asarray((qlen > 0) & (serve == 1)).sum()
+    assert int(new_qlen.sum()) == int(qlen.sum()) - served + int(np.asarray(accept).sum())
+    # marks only on accepted packets above kmin
+    a, mk, p = np.asarray(accept), np.asarray(mark), np.asarray(pos)
+    assert not np.any(mk & ~a)
+    assert not np.any(mk & (p < kmin))

@@ -1,0 +1,141 @@
+"""Packet-level simulator: conservation invariants and the paper's
+qualitative results at CI scale."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.core import make_lb
+from repro.netsim import (
+    MixedLB,
+    SimConfig,
+    Simulator,
+    Topology,
+    failures,
+    summarize,
+    workloads,
+)
+
+CFG = FATTREE_32_CI
+
+
+def run(cfg, wl, lb, ticks, fs=None, seed=0):
+    sim = Simulator(cfg, wl, lb, failures=fs, seed=seed)
+    st, tr = sim.run(ticks)
+    jax.block_until_ready(st.c_done)
+    return sim, st, summarize(sim, st)
+
+
+def assert_conserved(sim, st, s):
+    assert s.alloc_fails == 0
+    assert s.unprocessed_events == 0
+    if s.completed == s.n_conns:
+        assert int(np.asarray(st.c_inflight).clip(0).sum()) == 0
+        # every packet slot eventually returns to the free list (orphans of
+        # finished conns may still be draining; allow small slack)
+        assert int(st.fl_count) >= sim.NP - 64
+
+
+@pytest.mark.parametrize("lbn", ["ops", "reps", "ecmp", "plb", "flowlet",
+                                 "mptcp", "mprdma", "bitmap", "adaptive_roce"])
+def test_all_lbs_complete_permutation(lbn):
+    wl = workloads.permutation(32, 48, seed=1)
+    lb = make_lb(lbn, evs_size=CFG.evs_size)
+    sim, st, s = run(CFG, wl, lb, 1500)
+    assert s.completed == s.n_conns, s
+    assert_conserved(sim, st, s)
+
+
+def test_ecmp_collides_ops_does_not():
+    wl = workloads.permutation(32, 64, seed=3)
+    _, _, s_ecmp = run(CFG, wl, make_lb("ecmp", evs_size=CFG.evs_size), 2000)
+    _, _, s_ops = run(CFG, wl, make_lb("ops", evs_size=CFG.evs_size), 2000)
+    assert s_ops.runtime_ticks < s_ecmp.runtime_ticks  # paper's core premise
+
+
+def test_reps_beats_ops_under_failure():
+    topo = Topology.build(CFG)
+    fs = failures.link_down(list(topo.t0_up_queues(0)[:2]), 200, 2**30)
+    wl = workloads.permutation(32, 64, seed=3)
+    _, _, s_ops = run(CFG, wl, make_lb("ops", evs_size=CFG.evs_size), 4000, fs)
+    _, _, s_reps = run(
+        CFG, wl, make_lb("reps", evs_size=CFG.evs_size, freezing_timeout=600),
+        4000, fs,
+    )
+    assert s_reps.completed == s_reps.n_conns
+    assert s_reps.runtime_ticks < s_ops.runtime_ticks
+    assert s_reps.timeouts <= s_ops.timeouts
+
+
+def test_reps_adapts_to_asymmetry():
+    topo = Topology.build(CFG)
+    fs = failures.link_degraded([int(topo.t0_up_queues(0)[0])], 0, 2**30)
+    wl = workloads.permutation(32, 64, seed=5)
+    _, _, s_ops = run(CFG, wl, make_lb("ops", evs_size=CFG.evs_size), 3000, fs)
+    _, _, s_reps = run(CFG, wl, make_lb("reps", evs_size=CFG.evs_size), 3000, fs)
+    assert s_reps.runtime_ticks <= s_ops.runtime_ticks
+
+
+def test_trimming_reduces_timeouts():
+    wl = workloads.incast(32, 16, 48)
+    cfg_t = CFG.replace(trimming=True, queue_capacity=24)
+    cfg_n = CFG.replace(trimming=False, queue_capacity=24)
+    _, _, s_t = run(cfg_t, wl, make_lb("reps", evs_size=CFG.evs_size), 4000)
+    _, _, s_n = run(cfg_n, wl, make_lb("reps", evs_size=CFG.evs_size), 4000)
+    assert s_t.completed == s_t.n_conns
+    assert s_t.timeouts <= s_n.timeouts
+
+
+def test_ack_coalescing_still_completes():
+    wl = workloads.permutation(32, 48, seed=2)
+    cfg = CFG.replace(ack_coalesce=4)
+    sim, st, s = run(cfg, wl, make_lb("reps", evs_size=CFG.evs_size), 2500)
+    assert s.completed == s.n_conns
+    assert_conserved(sim, st, s)
+
+
+def test_three_tier_topology():
+    cfg = SimConfig(
+        n_hosts=32, hosts_per_tor=4, tiers=3, tors_per_pod=2, aggs_per_pod=4,
+        agg_uplinks=2, evs_size=256, queue_capacity=48, init_cwnd_pkts=40,
+        max_cwnd_pkts=80, rto_ticks=500, max_msg_pkts=256,
+    )
+    wl = workloads.permutation(32, 32, seed=1)
+    sim, st, s = run(cfg, wl, make_lb("reps", evs_size=256), 2500)
+    assert s.completed == s.n_conns, s
+    assert_conserved(sim, st, s)
+
+
+def test_collective_dependencies():
+    wl = workloads.ring_allreduce(8, 32)
+    cfg = CFG.replace(n_hosts=32)
+    sim, st, s = run(cfg, wl, make_lb("reps", evs_size=256), 6000)
+    assert s.completed == s.n_conns
+    # rounds must finish in dependency order
+    done_tick = np.asarray(st.c_done_tick)
+    n = 8
+    for r in range(1, 2 * (n - 1)):
+        for i in range(n):
+            c = r * n + i
+            dep = (r - 1) * n + (i - 1) % n
+            assert done_tick[c] > done_tick[dep]
+
+
+def test_mixed_traffic():
+    wl, bg = workloads.permutation_with_background(32, 48, 0.25, seed=1)
+    lb = MixedLB(
+        make_lb("reps", evs_size=CFG.evs_size),
+        make_lb("ecmp", evs_size=CFG.evs_size),
+        bg,
+    )
+    sim, st, s = run(CFG, wl, lb, 2500)
+    assert s.completed == s.n_conns
+    assert_conserved(sim, st, s)
+
+
+def test_deterministic_given_seed():
+    wl = workloads.permutation(32, 32, seed=4)
+    _, st1, s1 = run(CFG, wl, make_lb("reps", evs_size=256), 800, seed=9)
+    _, st2, s2 = run(CFG, wl, make_lb("reps", evs_size=256), 800, seed=9)
+    assert s1.runtime_ticks == s2.runtime_ticks
+    assert np.array_equal(np.asarray(st1.c_done_tick), np.asarray(st2.c_done_tick))

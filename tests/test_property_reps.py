@@ -1,0 +1,131 @@
+"""Hypothesis property tests for the REPS state machine and theory models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balls_bins, reps
+
+OPS = st.lists(
+    st.tuples(
+        st.integers(0, 2),  # 0=send, 1=ack, 2=failure
+        st.integers(0, 255),  # ev
+        st.booleans(),  # ecn
+    ),
+    min_size=1,
+    max_size=60,
+)
+
+
+def _apply_ops(ops, buffer_size=8, num_pkts_bdp=3, freezing_timeout=20):
+    cfg = reps.REPSConfig(
+        buffer_size=buffer_size,
+        evs_size=256,
+        num_pkts_bdp=num_pkts_bdp,
+        freezing_timeout=freezing_timeout,
+    )
+    state = reps.init_state(cfg, 1)
+    oracle = reps.REPSOracle(cfg)
+    key = jax.random.PRNGKey(1234)
+    for t, (op, ev, ecn) in enumerate(ops):
+        if op == 0:
+            key, sub = jax.random.split(key)
+            evs, state = reps.choose_ev(cfg, state, jnp.array([True]), sub)
+            rand_ev = int(
+                jax.random.randint(sub, (1,), 0, cfg.evs_size, jnp.int32)[0]
+            )
+            o_ev = oracle.on_send(rand_ev)
+            assert int(evs[0]) == o_ev
+        elif op == 1:
+            state = reps.on_ack(
+                cfg, state, jnp.array([True]), jnp.array([ev]),
+                jnp.array([ecn]), jnp.int32(t),
+            )
+            oracle.on_ack(ev, ecn, t)
+        else:
+            state = reps.on_failure_detection(
+                cfg, state, jnp.array([True]), jnp.int32(t)
+            )
+            oracle.on_failure_detection(t)
+    return cfg, state, oracle
+
+
+@settings(max_examples=40, deadline=None)
+@given(OPS)
+def test_vectorized_matches_oracle(ops):
+    cfg, state, oracle = _apply_ops(ops)
+    assert int(state.head[0]) == oracle.head
+    assert int(state.num_valid[0]) == oracle.num_valid
+    assert bool(state.is_freezing[0]) == oracle.is_freezing
+    assert list(np.asarray(state.buf_ev[0])) == oracle.buf_ev
+
+
+@settings(max_examples=40, deadline=None)
+@given(OPS, st.integers(1, 16))
+def test_invariants(ops, buffer_size):
+    cfg, state, _ = _apply_ops(ops, buffer_size=buffer_size)
+    B = cfg.buffer_size
+    assert 0 <= int(state.head[0]) < B
+    assert 0 <= int(state.num_valid[0]) <= B
+    # num_valid always equals the number of set validity bits
+    assert int(state.num_valid[0]) == int(np.asarray(state.buf_valid[0]).sum())
+    assert int(state.explore_counter[0]) >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(OPS)
+def test_recycled_evs_were_cached(ops):
+    """Any EV returned while not exploring must have entered via an ACK."""
+    cfg = reps.REPSConfig(buffer_size=8, evs_size=1 << 20, num_pkts_bdp=0)
+    state = reps.init_state(cfg, 1)
+    key = jax.random.PRNGKey(7)
+    acked = set()
+    for t, (op, ev, ecn) in enumerate(ops):
+        if op == 1 and not ecn:
+            acked.add(ev)
+        if op in (1, 2):
+            if op == 1:
+                state = reps.on_ack(
+                    cfg, state, jnp.array([True]), jnp.array([ev]),
+                    jnp.array([ecn]), jnp.int32(t),
+                )
+            else:
+                state = reps.on_failure_detection(
+                    cfg, state, jnp.array([True]), jnp.int32(t)
+                )
+        else:
+            had_valid = int(state.num_valid[0]) > 0
+            key, sub = jax.random.split(key)
+            evs, state = reps.choose_ev(cfg, state, jnp.array([True]), sub)
+            if had_valid:  # recycled, not explored (evs_size huge => distinct)
+                assert int(evs[0]) in acked
+
+
+def test_theorem51_recycled_bins_bounded():
+    """Theorem 5.1 flavour: at full injection, recycled balls-into-bins max
+    load stays O(log n) while OPS grows unboundedly."""
+    n = 32
+    tau = int(4 * np.log(n))  # ~13
+    b = int(np.ceil(2.4 * np.log(n)))  # ~9
+    tr = balls_bins.simulate_recycled_bins(
+        jax.random.PRNGKey(0), n, b, tau, steps=4000
+    )
+    # lambda=0.99: Bernoulli-thinned arrivals keep the variance the paper's
+    # batched model has (exact lambda=1.0 thinning is variance-free and
+    # grows much more slowly)
+    ops_ml = balls_bins.simulate_ops_bins(jax.random.PRNGKey(0), n, 0.99, 4000)
+    ml = np.asarray(tr.max_load)
+    assert int(ml[-1]) <= 3 * tau  # bounded (log-scale)
+    assert int(ml[2000:].max()) <= 3 * tau  # and STAYS bounded
+    assert int(np.asarray(ops_ml)[-1]) > 3 * tau  # OPS keeps growing
+    # a majority of colors hold a remembered bin throughout steady state
+    # (full convergence-to-1 is not observed in our variant: at full
+    # injection bins hover near tau and keep trimming memories — the
+    # bounded-load contrast, which is the theorem's operative claim for
+    # REPS, is what we pin; deviation documented in EXPERIMENTS.md)
+    assert float(tr.frac_remember[-1]) > 0.3
+
+
+def test_ops_bins_stable_below_capacity():
+    ml = balls_bins.simulate_ops_bins(jax.random.PRNGKey(1), 32, 0.5, 3000)
+    assert int(ml[-1]) < 20  # lambda=0.5 is stable

@@ -1,0 +1,139 @@
+"""REPS core: differential testing against the paper-pseudocode oracle,
+Table 1 footprint, and behavioural invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reps
+
+
+def run_differential(seed: int, steps: int = 150, p_ecn: float = 0.3):
+    cfg = reps.REPSConfig(
+        buffer_size=8, evs_size=256, num_pkts_bdp=4, freezing_timeout=50
+    )
+    state = reps.init_state(cfg, 1)
+    oracle = reps.REPSOracle(cfg)
+    rng = np.random.RandomState(seed)
+    key = jax.random.PRNGKey(seed)
+    for t in range(steps):
+        op = rng.randint(0, 3)
+        if op == 0:
+            key, sub = jax.random.split(key)
+            evs, state = reps.choose_ev(cfg, state, jnp.array([True]), sub)
+            rand_ev = int(
+                jax.random.randint(sub, (1,), 0, cfg.evs_size, jnp.int32)[0]
+            )
+            assert int(evs[0]) == oracle.on_send(rand_ev), f"step {t}"
+        elif op == 1:
+            ev, ecn = int(rng.randint(256)), bool(rng.rand() < p_ecn)
+            state = reps.on_ack(
+                cfg, state, jnp.array([True]), jnp.array([ev]),
+                jnp.array([ecn]), jnp.int32(t),
+            )
+            oracle.on_ack(ev, ecn, t)
+        else:
+            state = reps.on_failure_detection(
+                cfg, state, jnp.array([True]), jnp.int32(t)
+            )
+            oracle.on_failure_detection(t)
+        assert int(state.head[0]) == oracle.head
+        assert int(state.num_valid[0]) == oracle.num_valid
+        assert bool(state.is_freezing[0]) == oracle.is_freezing
+        assert int(state.explore_counter[0]) == oracle.explore_counter
+        assert list(np.asarray(state.buf_ev[0])) == oracle.buf_ev
+        assert list(np.asarray(state.buf_valid[0])) == oracle.buf_valid
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7])
+def test_differential_vs_oracle(seed):
+    run_differential(seed)
+
+
+def test_table1_footprint():
+    cfg = reps.REPSConfig(buffer_size=8)
+    fp = reps.state_footprint_bits(cfg)
+    assert fp["total_bits"] == 193  # paper Table 1, 8-element buffer
+    assert fp["total_bytes_ceil"] == 25
+    fp1 = reps.state_footprint_bits(reps.REPSConfig(buffer_size=1))
+    assert fp1["total_bits"] == 74  # paper Table 1, 1-element buffer
+
+
+def test_warmup_explores():
+    """During the first BDP worth of packets REPS behaves like OPS."""
+    cfg = reps.REPSConfig(num_pkts_bdp=5, evs_size=64)
+    state = reps.init_state(cfg, 3)
+    key = jax.random.PRNGKey(0)
+    # cache some clean EVs first
+    state = reps.on_ack(
+        cfg, state, jnp.ones(3, bool), jnp.array([1, 2, 3]),
+        jnp.zeros(3, bool), jnp.int32(0),
+    )
+    for i in range(5):
+        evs, state = reps.choose_ev(
+            cfg, state, jnp.ones(3, bool), jax.random.fold_in(key, i)
+        )
+    # after warmup, the cached EVs are recycled (oldest valid first)
+    evs, state = reps.choose_ev(
+        cfg, state, jnp.ones(3, bool), jax.random.fold_in(key, 99)
+    )
+    assert list(np.asarray(evs)) == [1, 2, 3]
+
+
+def test_ecn_marked_acks_are_discarded():
+    cfg = reps.REPSConfig()
+    state = reps.init_state(cfg, 1)
+    state = reps.on_ack(
+        cfg, state, jnp.array([True]), jnp.array([42]), jnp.array([True]),
+        jnp.int32(0),
+    )
+    assert int(state.num_valid[0]) == 0
+    assert int(state.n_cached[0]) == 0
+
+
+def test_freezing_recycles_invalid_entries():
+    """In freezing mode with no valid EVs, entries at head are reused and
+    head advances (Algorithm 2, getNextEV else-branch)."""
+    cfg = reps.REPSConfig(num_pkts_bdp=0, evs_size=999, freezing_timeout=100)
+    state = reps.init_state(cfg, 1)
+    # fill the whole 8-deep buffer, then drain it (getNextEV cycles through
+    # every buffer slot in freezing mode, so all slots must hold known EVs)
+    cached = [10, 20, 30, 40, 50, 60, 70, 80]
+    for i, ev in enumerate(cached):
+        state = reps.on_ack(
+            cfg, state, jnp.array([True]), jnp.array([ev]),
+            jnp.array([False]), jnp.int32(i),
+        )
+    key = jax.random.PRNGKey(0)
+    for i in range(8):
+        _, state = reps.choose_ev(
+            cfg, state, jnp.array([True]), jax.random.fold_in(key, i)
+        )
+    assert int(state.num_valid[0]) == 0
+    # enter freezing
+    state = reps.on_failure_detection(cfg, state, jnp.array([True]), jnp.int32(5))
+    assert bool(state.is_freezing[0])
+    got = []
+    for i in range(6):
+        evs, state = reps.choose_ev(
+            cfg, state, jnp.array([True]), jax.random.fold_in(key, 100 + i)
+        )
+        got.append(int(evs[0]))
+    # recycles cached (now-invalid) entries round-robin, never random
+    assert set(got) <= set(cached)
+
+
+def test_freezing_exit_rearms_explore():
+    cfg = reps.REPSConfig(num_pkts_bdp=7, freezing_timeout=10)
+    state = reps.init_state(cfg, 1)
+    state = state.replace(
+        is_freezing=jnp.array([True]),
+        exit_freezing=jnp.array([5], jnp.int32),
+        explore_counter=jnp.array([0], jnp.int32),
+    )
+    state = reps.on_ack(
+        cfg, state, jnp.array([True]), jnp.array([3]), jnp.array([False]),
+        jnp.int32(20),
+    )
+    assert not bool(state.is_freezing[0])
+    assert int(state.explore_counter[0]) == 7
