@@ -1,8 +1,12 @@
 """Shared benchmark helpers.
 
-Rows are (name, us_per_call, derived) — `us_per_call` is the wall-clock of
-the measured run (compile excluded where it matters is not attempted on
-CPU; it's a harness-time figure), `derived` the paper-relevant metric.
+Rows are (name, us_per_call, derived) plus a structured record per row
+(`Rows.records`) that run.py aggregates into BENCH_netsim.json.
+
+Timing protocol: scenarios are compiled ahead-of-time (untimed) via
+jit.lower(...).compile(), then the measured run executes the compiled
+artifact and blocks on the result — `us_per_call` therefore excludes
+compile time.  Rows that execute a simulator also report ticks/sec.
 
 Default sizes are CI-scale (1 CPU core); set BENCH_FULL=1 for paper-scale
 (128/1024 hosts, MiB messages) — same code, bigger constants.
@@ -16,9 +20,14 @@ import jax
 import numpy as np
 
 from repro.core import make_lb
-from repro.netsim import SimConfig, Simulator, summarize
+from repro.netsim import FleetRunner, SimConfig, Simulator, summarize
 
 FULL = bool(int(os.environ.get("BENCH_FULL", "0")))
+# BENCH_SEEDS>1 runs netsim scenarios as a vmapped fleet over that many
+# seeds (reported metrics stay those of the first seed = the serial run).
+SEEDS = max(1, int(os.environ.get("BENCH_SEEDS", "1")))
+# BENCH_SMOKE=1 shrinks figure mains to a CI-smoke subset (see fig modules).
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
 
 
 def ci_cfg(**kw) -> SimConfig:
@@ -47,30 +56,79 @@ def lb_for(cfg: SimConfig, name: str, **kw):
 
 
 def run_one(cfg, wl, lb, ticks, failures=None, watch=None, seed=0):
+    """Compile (untimed), then run one scenario and time only execution.
+
+    Returns (sim, final_state, trace, summary, wall_seconds).
+    """
     sim = Simulator(cfg, wl, lb, failures=failures, watch_queues=watch, seed=seed)
+    state = sim.init_state()
+    # AOT compile (untimed) so the measured run is execution only
+    compiled = jax.jit(lambda st: sim._run(ticks, st)).lower(state).compile()
     t0 = time.time()
-    st, tr = sim.run(ticks)
+    st, tr = compiled(state)
     jax.block_until_ready(st.c_done)
     wall = time.time() - t0
     return sim, st, tr, summarize(sim, st), wall
 
 
+def run_fleet(cfg, wl, lb, ticks, failures=None, watch=None, seeds=None):
+    """Run a whole multi-seed sweep as one compiled vmapped scan.
+
+    Returns (fleet, states, traces, summaries, wall_seconds); wall covers
+    the entire fleet (compile excluded), summaries are per-seed.
+    """
+    if seeds is None:
+        seeds = list(range(SEEDS))
+    fleet = FleetRunner(
+        cfg, wl, lb, failures=failures, watch_queues=watch, seeds=seeds
+    )
+    keys, states = fleet.base_keys(), fleet.init_states()
+    compiled = (
+        jax.jit(lambda k, s: fleet._run(ticks, k, s)).lower(keys, states).compile()
+    )
+    t0 = time.time()
+    states, traces = compiled(keys, states)
+    jax.block_until_ready(states.c_done)
+    wall = time.time() - t0
+    return fleet, states, traces, fleet.summaries(states), wall
+
+
 class Rows:
     def __init__(self):
         self.rows: list[tuple[str, float, str]] = []
+        self.records: list[dict] = []
 
-    def add(self, name: str, us: float, derived: str):
+    def add(self, name: str, us: float, derived: str, **extra):
         self.rows.append((name, us, derived))
+        self.records.append(
+            {"name": name, "us_per_call": us, "derived": derived, **extra}
+        )
         print(f"{name},{us:.0f},{derived}", flush=True)
 
     def extend(self, other: "Rows"):
         self.rows.extend(other.rows)
+        self.records.extend(other.records)
 
 
-def completion_row(rows: Rows, tag: str, s, wall: float):
+def throughput_extra(ticks: int | None, n_runs: int, wall: float) -> dict:
+    """Structured throughput fields for BENCH_netsim.json rows (the single
+    definition of ticks_per_sec: fleet-aggregate ticks over exec wall)."""
+    if not ticks:
+        return {}
+    return {
+        "ticks": ticks,
+        "n_runs": n_runs,
+        "ticks_per_sec": (ticks * n_runs) / max(wall, 1e-9),
+    }
+
+
+def completion_row(rows: Rows, tag: str, s, wall: float, ticks: int | None = None,
+                   n_runs: int = 1):
+    extra = throughput_extra(ticks, n_runs, wall)
     rows.add(
         tag,
         wall * 1e6,
         f"runtime_ticks={s.runtime_ticks};completed={s.completed}/{s.n_conns};"
         f"drops={s.drops_cong}+{s.drops_fail};timeouts={s.timeouts}",
+        **extra,
     )

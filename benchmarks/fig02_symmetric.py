@@ -1,33 +1,52 @@
 """Fig 2: healthy symmetric network — synthetic benchmarks, DC traces and
-AI collectives across all load balancers."""
-from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+AI collectives across all load balancers.
+
+Runs each scenario through the batched FleetRunner (BENCH_SEEDS seeds in
+one compiled scan; metrics reported for seed 0 == the serial run).
+BENCH_SMOKE=1 restricts to the three canonical LBs and the synthetic
+workloads for CI perf tracking.
+"""
+from benchmarks.common import (
+    SMOKE, Rows, ci_cfg, completion_row, lb_for, msg, run_fleet,
+    throughput_extra,
+)
 from repro.netsim import workloads
 
 LBS = ["ecmp", "ops", "reps", "plb", "flowlet", "mptcp", "mprdma", "bitmap",
        "adaptive_roce"]
+SMOKE_LBS = ["ecmp", "ops", "reps"]
 
 
 def main(rows=None):
     rows = rows or Rows()
     cfg = ci_cfg()
     n = cfg.n_hosts
+    lbs = SMOKE_LBS if SMOKE else LBS
     wls = {
         "incast8": workloads.incast(n, 8, msg(128, 1024)),
         "permutation": workloads.permutation(n, msg(256, 2048), seed=1),
         "tornado": workloads.tornado(n, msg(256, 2048)),
     }
+    ticks = 4000
     for wname, wl in wls.items():
-        for lbn in LBS:
-            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 4000)
-            completion_row(rows, f"fig02/{wname}/{lbn}", s, wall)
+        for lbn in lbs:
+            fleet, _, _, sums, wall = run_fleet(cfg, wl, lb_for(cfg, lbn), ticks)
+            completion_row(
+                rows, f"fig02/{wname}/{lbn}", sums[0], wall, ticks=ticks,
+                n_runs=fleet.n_runs,
+            )
+    if SMOKE:
+        return rows
     # DC traces (websearch) at moderate load
     wl = workloads.websearch_trace(n, load=0.6, duration_ticks=1500, seed=2, max_pkts=cfg.max_msg_pkts)
     for lbn in ["ecmp", "ops", "reps", "plb", "bitmap"]:
-        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 4500)
+        fleet, _, _, sums, wall = run_fleet(cfg, wl, lb_for(cfg, lbn), 4500)
+        s = sums[0]
         rows.add(
             f"fig02/websearch60/{lbn}", wall * 1e6,
             f"completed={s.completed}/{s.n_conns};mean_fct={s.mean_fct_ticks:.0f};"
             f"p99_fct={s.p99_fct_ticks:.0f}",
+            **throughput_extra(4500, fleet.n_runs, wall),
         )
     # AI collectives
     for cname, wl in {
@@ -36,8 +55,11 @@ def main(rows=None):
         "alltoall_w4": workloads.alltoall(16, msg(16, 64), window=4),
     }.items():
         for lbn in ["ecmp", "ops", "reps", "adaptive_roce"]:
-            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 12000)
-            completion_row(rows, f"fig02/{cname}/{lbn}", s, wall)
+            fleet, _, _, sums, wall = run_fleet(cfg, wl, lb_for(cfg, lbn), 12000)
+            completion_row(
+                rows, f"fig02/{cname}/{lbn}", sums[0], wall, ticks=12000,
+                n_runs=fleet.n_runs,
+            )
     return rows
 
 

@@ -1,6 +1,10 @@
 """Fig 6: two transient uplink failures (100us-ish and 200us-ish); REPS
-freezes within ~1 RTO and avoids the failed paths; OPS keeps spraying."""
-from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_one
+freezes within ~1 RTO and avoids the failed paths; OPS keeps spraying.
+
+Runs through the batched FleetRunner (BENCH_SEEDS seeds in one compiled
+scan; metrics reported for seed 0 == the serial run).
+"""
+from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_fleet, throughput_extra
 from repro.netsim import FailureSchedule, Topology, failures, workloads
 
 
@@ -14,15 +18,18 @@ def main(rows=None):
         failures.link_down([int(ups[1])], 1200, 2400),
     )
     wl = workloads.permutation(cfg.n_hosts, msg(768, 4096), seed=3)
+    ticks = 8000
     for lbn in ["ops", "reps"]:
-        _, st, tr, s, wall = run_one(
+        fleet, _, _, sums, wall = run_fleet(
             cfg, wl, lb_for(cfg, lbn, **({"freezing_timeout": 800} if lbn == "reps" else {})),
-            8000, fs, topo.t0_up_queues(0),
+            ticks, fs, topo.t0_up_queues(0),
         )
+        s = sums[0]
         rows.add(
             f"fig06/{lbn}", wall * 1e6,
             f"runtime={s.runtime_ticks};drops_fail={s.drops_fail};"
             f"timeouts={s.timeouts};completed={s.completed}/{s.n_conns}",
+            **throughput_extra(ticks, fleet.n_runs, wall),
         )
     return rows
 

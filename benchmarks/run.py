@@ -1,9 +1,16 @@
 """Benchmark harness: one module per paper figure/table.
 
-Prints ``name,us_per_call,derived`` CSV rows.  BENCH_FULL=1 switches to
-paper-scale constants.  Select subsets with BENCH_ONLY=fig02,fig13.
+Prints ``name,us_per_call,derived`` CSV rows and writes a machine-readable
+``BENCH_netsim.json`` (name -> us_per_call / derived / ticks-per-sec where
+applicable) so perf trajectory is tracked across PRs.
+
+BENCH_FULL=1 switches to paper-scale constants.  Select subsets with
+BENCH_ONLY=fig02,fig13.  BENCH_SMOKE=1 shrinks figure mains to CI-smoke
+subsets; BENCH_SEEDS=N runs netsim scenarios as N-seed vmapped fleets.
 """
+import json
 import os
+import platform
 import sys
 import time
 
@@ -29,8 +36,12 @@ MODULES = [
     "reps_channels_bench",
 ]
 
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_netsim.json")
+
 
 def main() -> None:
+    from benchmarks.common import FULL, SEEDS, SMOKE, Rows
+
     only = os.environ.get("BENCH_ONLY")
     selected = MODULES
     if only:
@@ -39,14 +50,45 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failed = []
+    records: dict[str, dict] = {}
     for mod_name in selected:
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
         try:
-            mod.main()
+            result = mod.main()
         except Exception as e:  # noqa: BLE001
             failed.append((mod_name, repr(e)))
             print(f"{mod_name},0,ERROR={e!r}", flush=True)
-    print(f"# total_wall_s={time.time()-t0:.0f} failed={len(failed)}")
+            continue
+        if isinstance(result, Rows):
+            for rec in result.records:
+                records[rec["name"]] = {k: v for k, v in rec.items() if k != "name"}
+    wall = time.time() - t0
+    print(f"# total_wall_s={wall:.0f} failed={len(failed)}")
+    if only and os.path.exists(JSON_PATH):
+        # Subset run: merge into the existing baseline instead of erasing
+        # rows for modules that were not selected — BENCH_netsim.json is
+        # the cross-PR perf trajectory, each row keeps its latest sample.
+        try:
+            with open(JSON_PATH) as f:
+                records = {**json.load(f).get("rows", {}), **records}
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload = {
+        "meta": {
+            "full_scale": FULL,
+            "smoke": SMOKE,
+            "seeds": SEEDS,
+            "modules": selected,
+            "failed": [m for m, _ in failed],
+            "total_wall_s": wall,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+        },
+        "rows": records,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {JSON_PATH} ({len(records)} rows)")
     if failed:
         sys.exit(1)
 

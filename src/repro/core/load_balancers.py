@@ -78,6 +78,18 @@ class OpsLB(LoadBalancer):
 # REPS (the paper).  §3
 # ---------------------------------------------------------------------------
 class RepsLB(LoadBalancer):
+    """REPS with a switchable compute backend.
+
+    backend="jnp"    — the vectorized repro.core.reps implementation;
+    backend="pallas" — the fused repro.kernels.reps_update kernel drives
+                       Algorithms 1+2 (Mosaic on TPU, interpret elsewhere);
+    backend="auto"   — pallas on TPU, jnp otherwise.
+
+    Both backends share the REPSState pytree and are bit-identical (the
+    kernel is pinned to the same scalar oracle; tests assert parity), so
+    flipping the backend never changes simulation results.
+    """
+
     name = "reps"
 
     def __init__(
@@ -87,6 +99,7 @@ class RepsLB(LoadBalancer):
         num_pkts_bdp: int = 32,
         freezing_timeout: int = 1024,
         enable_freezing: bool = True,
+        backend: str = "auto",
     ):
         super().__init__(evs_size)
         self.cfg = reps_core.REPSConfig(
@@ -96,18 +109,87 @@ class RepsLB(LoadBalancer):
             freezing_timeout=freezing_timeout,
         )
         self.enable_freezing = enable_freezing
+        assert backend in ("auto", "jnp", "pallas"), backend
+        if backend == "auto":
+            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        if backend == "pallas":
+            from repro.kernels import reps_update
+
+            assert buffer_size == reps_update.BUF, (
+                f"pallas backend is compiled for buffer depth "
+                f"{reps_update.BUF}, got {buffer_size}"
+            )
+        self.backend = backend
 
     def init_state(self, n_conns, key):
         return reps_core.init_state(self.cfg, n_conns)
 
+    def _kernel_tick(self, state, ack_mask, ack_ev, ack_ecn, timeout_mask,
+                     send_mask, rand_ev, now):
+        """One fused Algorithm 1+2 pass through the Pallas kernel.
+
+        Unused event classes are passed as all-zero masks, which makes the
+        corresponding algorithm a no-op — so the engine's split pipeline
+        stages (feedback / RTO / injection) each map onto one kernel call.
+        """
+        from repro.kernels import ops as kernel_ops
+
+        n = state.head.shape[0]
+        z = jnp.zeros((n,), jnp.int32)
+        i = lambda x: x.astype(jnp.int32)
+        out = kernel_ops.reps_tick(
+            state.buf_ev, i(state.buf_valid), state.head, state.num_valid,
+            state.explore_counter, i(state.is_freezing), state.exit_freezing,
+            state.n_cached,
+            i(ack_mask) if ack_mask is not None else z,
+            ack_ev if ack_ev is not None else z,
+            i(ack_ecn) if ack_ecn is not None else z,
+            i(timeout_mask) if timeout_mask is not None else z,
+            i(send_mask) if send_mask is not None else z,
+            rand_ev if rand_ev is not None else z,
+            jnp.asarray(now, jnp.int32),
+            self.cfg.num_pkts_bdp,
+            self.cfg.freezing_timeout,
+        )
+        (buf_ev, buf_valid, head, num_valid, explore, freezing, exit_freeze,
+         n_cached, evs) = out
+        new_state = reps_core.REPSState(
+            buf_ev=buf_ev,
+            buf_valid=buf_valid.astype(jnp.bool_),
+            head=head,
+            num_valid=num_valid,
+            explore_counter=explore,
+            is_freezing=freezing.astype(jnp.bool_),
+            exit_freezing=exit_freeze,
+            n_cached=n_cached,
+        )
+        return new_state, evs
+
     def choose_ev(self, state, mask, key, now):
+        if self.backend == "pallas":
+            n = state.head.shape[0]
+            rand_ev = jax.random.randint(key, (n,), 0, self.cfg.evs_size, jnp.int32)
+            state, evs = self._kernel_tick(
+                state, None, None, None, None, mask, rand_ev, now
+            )
+            return evs, state
         return reps_core.choose_ev(self.cfg, state, mask, key)
 
     def on_ack(self, state, mask, ev, ecn, now):
+        if self.backend == "pallas":
+            state, _ = self._kernel_tick(
+                state, mask, ev, ecn, None, None, None, now
+            )
+            return state
         return reps_core.on_ack(self.cfg, state, mask, ev, ecn, now)
 
     def on_timeout(self, state, mask, now):
         if not self.enable_freezing:
+            return state
+        if self.backend == "pallas":
+            state, _ = self._kernel_tick(
+                state, None, None, None, mask, None, None, now
+            )
             return state
         return reps_core.on_failure_detection(self.cfg, state, mask, now)
 

@@ -1,6 +1,7 @@
 from repro.netsim import failures, metrics, workloads
 from repro.netsim.config import TICK_NS, SimConfig, ns_to_ticks, us_to_ticks
 from repro.netsim.engine import FailureSchedule, SimState, Simulator, Workload
+from repro.netsim.fleet import FleetRunner
 from repro.netsim.metrics import RunSummary, summarize
 from repro.netsim.mixed import MixedLB
 from repro.netsim.topology import Topology, ecmp_hash, mix32
@@ -8,6 +9,6 @@ from repro.netsim.topology import Topology, ecmp_hash, mix32
 __all__ = [
     "failures", "metrics", "workloads",
     "TICK_NS", "SimConfig", "ns_to_ticks", "us_to_ticks",
-    "FailureSchedule", "SimState", "Simulator", "Workload",
+    "FailureSchedule", "SimState", "Simulator", "Workload", "FleetRunner",
     "RunSummary", "summarize", "MixedLB", "Topology", "ecmp_hash", "mix32",
 ]

@@ -68,6 +68,15 @@ class SimConfig:
     pkt_slots: int = 0  # 0 = auto (n_conns * max_cwnd + slack)
     feedback_rounds: int = 2  # exact per-conn events applied per tick
     n_watch_queues: int = 16  # queues traced per tick for micro figures
+    # arrivals enqueue backend: "jnp" (segment-cumsum in the tick body),
+    # "pallas" (fused repro.kernels.queue_tick; interpret mode off-TPU), or
+    # "auto" (pallas on TPU, jnp elsewhere).
+    arrivals_backend: str = "auto"
+
+    def __post_init__(self):
+        assert self.arrivals_backend in ("auto", "jnp", "pallas"), (
+            f"unknown arrivals_backend {self.arrivals_backend!r}"
+        )
 
     # Derived topology ---------------------------------------------------------
     @property

@@ -1,0 +1,49 @@
+"""Version-compat shims for the JAX pinned in this container (0.4.x).
+
+Code in this repo targets the modern public API surface; this module maps
+the few newer entry points we use onto their older homes so the same source
+runs on the container's jax without behavioral drift.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` (new) -> `jax.experimental.shard_map.shard_map` (old).
+
+    The old entry point spells the replication check `check_rep`.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+@jax.custom_vjp
+def grad_safe_barrier(tree):
+    """`optimization_barrier` that is transparent to autodiff.
+
+    Older jax has no differentiation rule for the barrier primitive; the
+    barrier is semantically the identity, so the VJP passes cotangents
+    through untouched while the primal keeps the scheduling barrier.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+def _barrier_fwd(tree):
+    return grad_safe_barrier(tree), None
+
+
+def _barrier_bwd(_, cotangent):
+    return (cotangent,)
+
+
+grad_safe_barrier.defvjp(_barrier_fwd, _barrier_bwd)

@@ -1,0 +1,79 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The container image does not ship hypothesis and installing packages is not
+an option, so property tests fall back to this shim: each strategy is a
+callable `rng -> value`, and `given` runs the test body over a fixed number
+of seeded-random examples (deterministic across runs).  Coverage is thinner
+than real hypothesis (no shrinking, no example database) but the same
+property bodies execute, which keeps the parity/invariant assertions live.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def tuples(*parts: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(p.draw(rng) for p in parts))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0, max_size: int = 32) -> _Strategy:
+        return _Strategy(
+            lambda rng: [
+                elem.draw(rng) for _ in range(rng.randint(min_size, max_size))
+            ]
+        )
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+st = strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (already `given`-wrapped) test."""
+
+    def apply(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return apply
+
+
+def given(*strats: _Strategy):
+    def decorate(fn):
+        # No functools.wraps: the wrapper must expose a ZERO-arg signature,
+        # otherwise pytest treats the strategy-filled parameters as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+            for ex in range(n):
+                rng = random.Random(0xC0FFEE ^ (ex * 0x9E3779B1))
+                drawn = tuple(s.draw(rng) for s in strats)
+                fn(*drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return decorate

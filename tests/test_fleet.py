@@ -1,0 +1,71 @@
+"""FleetRunner: vmapped multi-seed execution must be bit-identical to
+serial single-scenario runs, per seed."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.core import make_lb
+from repro.netsim import FleetRunner, Simulator, Topology, failures, workloads
+
+CFG = FATTREE_32_CI
+SEEDS = [0, 3, 11]
+
+
+def _serial(cfg, wl, lb_factory, ticks, fs=None, seed=0):
+    sim = Simulator(cfg, wl, lb_factory(), failures=fs, seed=seed)
+    st, tr = sim.run(ticks)
+    jax.block_until_ready(st.c_done)
+    return st, tr
+
+
+@pytest.mark.parametrize("lbn", ["reps", "ops", "plb"])
+def test_fleet_matches_serial_per_seed(lbn):
+    wl = workloads.permutation(32, 48, seed=1)
+    lb_factory = lambda: make_lb(lbn, evs_size=CFG.evs_size)
+    fleet = FleetRunner(CFG, wl, lb_factory(), seeds=SEEDS)
+    states, traces = fleet.run(700)
+    jax.block_until_ready(states.c_done)
+    for i, seed in enumerate(SEEDS):
+        st, tr = _serial(CFG, wl, lb_factory, 700, seed=seed)
+        np.testing.assert_array_equal(
+            np.asarray(states.c_done_tick[i]), np.asarray(st.c_done_tick)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(states.s_stats[i]), np.asarray(st.s_stats)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(traces.delivered[:, i]), np.asarray(tr.delivered)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(traces.watch_qlen[:, i]), np.asarray(tr.watch_qlen)
+        )
+
+
+def test_fleet_matches_serial_under_failures():
+    topo = Topology.build(CFG)
+    fs = failures.link_down(list(topo.t0_up_queues(0)[:2]), 150, 2**30)
+    wl = workloads.permutation(32, 48, seed=3)
+    lb_factory = lambda: make_lb("reps", evs_size=CFG.evs_size, freezing_timeout=600)
+    fleet = FleetRunner(CFG, wl, lb_factory(), failures=fs, seeds=SEEDS)
+    states, _ = fleet.run(1200)
+    for i, seed in enumerate(SEEDS):
+        st, _ = _serial(CFG, wl, lb_factory, 1200, fs=fs, seed=seed)
+        np.testing.assert_array_equal(
+            np.asarray(states.c_done_tick[i]), np.asarray(st.c_done_tick)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(states.s_stats[i]), np.asarray(st.s_stats)
+        )
+
+
+def test_fleet_summaries_shape():
+    wl = workloads.permutation(32, 32, seed=4)
+    fleet = FleetRunner(
+        CFG, wl, make_lb("reps", evs_size=256), seeds=[5, 9]
+    )
+    states, _ = fleet.run(600)
+    sums = fleet.summaries(states)
+    assert len(sums) == 2
+    # different seeds take different paths through the network
+    assert sums[0].completed == sums[1].completed == wl.n_conns

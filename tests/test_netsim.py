@@ -133,6 +133,45 @@ def test_mixed_traffic():
     assert_conserved(sim, st, s)
 
 
+def test_pallas_reps_backend_matches_jnp_in_engine():
+    """fig06-style failure recovery with the Pallas-kernel-backed RepsLB
+    (interpret mode) must produce identical metrics to the jnp backend."""
+    topo = Topology.build(CFG)
+    fs = failures.link_down(list(topo.t0_up_queues(0)[:2]), 150, 900)
+    wl = workloads.permutation(32, 48, seed=3)
+    kwargs = dict(evs_size=CFG.evs_size, freezing_timeout=400)
+    _, st_j, s_j = run(CFG, wl, make_lb("reps", backend="jnp", **kwargs), 1500, fs)
+    _, st_p, s_p = run(CFG, wl, make_lb("reps", backend="pallas", **kwargs), 1500, fs)
+    assert s_p.completed == s_j.completed
+    assert s_p.timeouts == s_j.timeouts
+    assert s_p.drops_fail == s_j.drops_fail
+    assert s_p.runtime_ticks == s_j.runtime_ticks
+    np.testing.assert_array_equal(
+        np.asarray(st_p.c_done_tick), np.asarray(st_j.c_done_tick)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_p.s_stats), np.asarray(st_j.s_stats)
+    )
+
+
+def test_pallas_arrivals_backend_matches_jnp():
+    """Routing the arrivals enqueue through the queue_tick kernel must not
+    change simulation results (incl. tail-drop + RED marking under load)."""
+    wl = workloads.incast(32, 12, 48)
+    cfg_j = CFG.replace(arrivals_backend="jnp", queue_capacity=24)
+    cfg_p = CFG.replace(arrivals_backend="pallas", queue_capacity=24)
+    _, st_j, s_j = run(cfg_j, wl, make_lb("reps", evs_size=CFG.evs_size), 1200)
+    _, st_p, s_p = run(cfg_p, wl, make_lb("reps", evs_size=CFG.evs_size), 1200)
+    np.testing.assert_array_equal(
+        np.asarray(st_p.c_done_tick), np.asarray(st_j.c_done_tick)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_p.s_stats), np.asarray(st_j.s_stats)
+    )
+    assert s_p.drops_cong == s_j.drops_cong
+    assert s_p.ecn_marks == s_j.ecn_marks
+
+
 def test_deterministic_given_seed():
     wl = workloads.permutation(32, 32, seed=4)
     _, st1, s1 = run(CFG, wl, make_lb("reps", evs_size=256), 800, seed=9)

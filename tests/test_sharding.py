@@ -75,6 +75,8 @@ SUBPROCESS_SCRIPT = textwrap.dedent(
             c = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                         donate_argnums=(0, 1)).lower(params, opt, batch).compile()
             ca = c.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+                ca = ca[0] if ca else {}
             out[arch] = {"flops": float(ca.get("flops", 0)),
                          "compiled": True}
     print(json.dumps(out))
