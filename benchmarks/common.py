@@ -20,7 +20,9 @@ import jax
 import numpy as np
 
 from repro.core import make_lb
-from repro.netsim import FleetRunner, SimConfig, Simulator, summarize
+from repro.netsim import (
+    FleetRunner, SimConfig, Simulator, SweepCase, SweepEngine, summarize,
+)
 
 FULL = bool(int(os.environ.get("BENCH_FULL", "0")))
 # BENCH_SEEDS>1 runs netsim scenarios as a vmapped fleet over that many
@@ -93,6 +95,60 @@ def run_fleet(cfg, wl, lb, ticks, failures=None, watch=None, seeds=None):
     return fleet, states, traces, fleet.summaries(states), wall
 
 
+def sweep_case(name, wl, lbn, ticks, cfg, failures=None, watch=None, **lb_kwargs):
+    """A SweepCase with the harness defaults: cfg-derived evs_size and the
+    BENCH_SEEDS seed axis."""
+    lb_kwargs.setdefault("evs_size", cfg.evs_size)
+    return SweepCase(
+        name=name, workload=wl, lb=lbn, ticks=ticks, lb_kwargs=lb_kwargs,
+        failures=failures, watch_queues=watch, seeds=tuple(range(SEEDS)),
+    )
+
+
+def run_sweep(cfg, cases):
+    """Submit a whole figure as one sweep: a few compiled bucket scans
+    instead of one trace+compile+run per (workload, lb) cell.  Compile is
+    excluded from exec walls (AOT per bucket, same protocol as run_one).
+    Buckets stop at quiescence (early_exit) — reported metrics are
+    bit-identical to the full horizon, see netsim/sweep.py."""
+    eng = SweepEngine(cfg, cases)
+    res = eng.run(collect="none", early_exit=True)
+    return eng, res
+
+
+def sweep_rows(rows, res, fmt=None):
+    """Emit one row per sweep cell (seed-0 metrics == the serial run).
+
+    ``fmt(name, summary) -> str`` picks the derived string per cell
+    (default: completion format).  Wall attribution: a cell's us_per_call
+    is its bucket's exec wall split evenly over the bucket's cells;
+    ticks_per_sec stays the fleet-aggregate definition, here
+    bucket-aggregate (rows x ticks over bucket wall).
+    """
+    sums = res.summaries()
+    for b in res.buckets:
+        share_us = b.exec_wall_s / max(len(b.cells), 1) * 1e6
+        tps = b.ticks_run * b.n_rows / max(b.exec_wall_s, 1e-9)
+        for c in b.cells:
+            s = sums[c.case.name][0]
+            derived = fmt(c.case.name, s) if fmt else completion_fmt(s)
+            rows.add(
+                c.case.name, share_us, derived,
+                ticks=b.ticks, ticks_run=b.ticks_run,
+                n_runs=len(c.case.seeds),
+                ticks_per_sec=tps, bucket_rows=b.n_rows,
+                bucket_wall_s=b.exec_wall_s,
+            )
+    return sums
+
+
+def completion_fmt(s):
+    return (
+        f"runtime_ticks={s.runtime_ticks};completed={s.completed}/{s.n_conns};"
+        f"drops={s.drops_cong}+{s.drops_fail};timeouts={s.timeouts}"
+    )
+
+
 class Rows:
     def __init__(self):
         self.rows: list[tuple[str, float, str]] = []
@@ -100,8 +156,15 @@ class Rows:
 
     def add(self, name: str, us: float, derived: str, **extra):
         self.rows.append((name, us, derived))
+        # every row carries the run context it was produced under, so that
+        # BENCH_ONLY subset merges into BENCH_netsim.json stay attributable
+        # row-by-row (run.py derives honest meta flags from these).
         self.records.append(
-            {"name": name, "us_per_call": us, "derived": derived, **extra}
+            {
+                "name": name, "us_per_call": us, "derived": derived,
+                "seeds": SEEDS, "full_scale": FULL, "smoke": SMOKE,
+                **extra,
+            }
         )
         print(f"{name},{us:.0f},{derived}", flush=True)
 

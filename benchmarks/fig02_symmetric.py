@@ -1,14 +1,16 @@
 """Fig 2: healthy symmetric network — synthetic benchmarks, DC traces and
 AI collectives across all load balancers.
 
-Runs each scenario through the batched FleetRunner (BENCH_SEEDS seeds in
-one compiled scan; metrics reported for seed 0 == the serial run).
-BENCH_SMOKE=1 restricts to the three canonical LBs and the synthetic
-workloads for CI perf tracking.
+The whole figure is submitted as ONE sweep batch (repro.netsim.sweep):
+cells sharing padded shapes compile together, the ECMP/OPS/REPS columns
+ride one lax.switch, seeds vmap on the row axis, and rows shard across
+visible devices.  Per-cell metrics are bit-identical to the serial
+Simulator.run on the same padded scenario (tests/test_sweep.py); seed-0 is
+the reported run.  BENCH_SMOKE=1 restricts to the three canonical LBs and
+the synthetic workloads for CI perf tracking.
 """
 from benchmarks.common import (
-    SMOKE, Rows, ci_cfg, completion_row, lb_for, msg, run_fleet,
-    throughput_extra,
+    SMOKE, Rows, ci_cfg, completion_fmt, msg, run_sweep, sweep_case, sweep_rows,
 )
 from repro.netsim import workloads
 
@@ -27,39 +29,50 @@ def main(rows=None):
         "permutation": workloads.permutation(n, msg(256, 2048), seed=1),
         "tornado": workloads.tornado(n, msg(256, 2048)),
     }
-    ticks = 4000
-    for wname, wl in wls.items():
-        for lbn in lbs:
-            fleet, _, _, sums, wall = run_fleet(cfg, wl, lb_for(cfg, lbn), ticks)
-            completion_row(
-                rows, f"fig02/{wname}/{lbn}", sums[0], wall, ticks=ticks,
-                n_runs=fleet.n_runs,
-            )
-    if SMOKE:
-        return rows
-    # DC traces (websearch) at moderate load
-    wl = workloads.websearch_trace(n, load=0.6, duration_ticks=1500, seed=2, max_pkts=cfg.max_msg_pkts)
-    for lbn in ["ecmp", "ops", "reps", "plb", "bitmap"]:
-        fleet, _, _, sums, wall = run_fleet(cfg, wl, lb_for(cfg, lbn), 4500)
-        s = sums[0]
-        rows.add(
-            f"fig02/websearch60/{lbn}", wall * 1e6,
-            f"completed={s.completed}/{s.n_conns};mean_fct={s.mean_fct_ticks:.0f};"
-            f"p99_fct={s.p99_fct_ticks:.0f}",
-            **throughput_extra(4500, fleet.n_runs, wall),
+    cases = [
+        sweep_case(f"fig02/{wname}/{lbn}", wl, lbn, 4000, cfg)
+        for wname, wl in wls.items()
+        for lbn in lbs
+    ]
+    if not SMOKE:
+        # DC traces (websearch) at moderate load
+        wsw = workloads.websearch_trace(
+            n, load=0.6, duration_ticks=1500, seed=2, max_pkts=cfg.max_msg_pkts
         )
-    # AI collectives
-    for cname, wl in {
-        "ring_allreduce": workloads.ring_allreduce(16, msg(128, 1024)),
-        "butterfly_allreduce": workloads.butterfly_allreduce(16, msg(128, 1024)),
-        "alltoall_w4": workloads.alltoall(16, msg(16, 64), window=4),
-    }.items():
-        for lbn in ["ecmp", "ops", "reps", "adaptive_roce"]:
-            fleet, _, _, sums, wall = run_fleet(cfg, wl, lb_for(cfg, lbn), 12000)
-            completion_row(
-                rows, f"fig02/{cname}/{lbn}", sums[0], wall, ticks=12000,
-                n_runs=fleet.n_runs,
+        cases += [
+            sweep_case(f"fig02/websearch60/{lbn}", wsw, lbn, 4500, cfg)
+            for lbn in ["ecmp", "ops", "reps", "plb", "bitmap"]
+        ]
+        # AI collectives
+        cases += [
+            sweep_case(f"fig02/{cname}/{lbn}", wl, lbn, 12000, cfg)
+            for cname, wl in {
+                "ring_allreduce": workloads.ring_allreduce(16, msg(128, 1024)),
+                "butterfly_allreduce": workloads.butterfly_allreduce(16, msg(128, 1024)),
+                "alltoall_w4": workloads.alltoall(16, msg(16, 64), window=4),
+            }.items()
+            for lbn in ["ecmp", "ops", "reps", "adaptive_roce"]
+        ]
+    eng, res = run_sweep(cfg, cases)
+
+    def fmt(name, s):
+        if "/websearch" in name:  # trace cells read better with FCT stats
+            return (
+                f"completed={s.completed}/{s.n_conns};"
+                f"mean_fct={s.mean_fct_ticks:.0f};"
+                f"p99_fct={s.p99_fct_ticks:.0f}"
             )
+        return completion_fmt(s)
+
+    sweep_rows(rows, res, fmt=fmt)
+    n_rows_total = sum(b.n_rows for b in res.buckets)
+    agg_ticks = sum(b.ticks_run * b.n_rows for b in res.buckets)
+    rows.add(
+        "fig02/sweep_total", res.exec_wall_s * 1e6,
+        f"cells={len(cases)};buckets={len(res.buckets)};rows={n_rows_total}",
+        ticks_per_sec=agg_ticks / max(res.exec_wall_s, 1e-9),
+        compile_wall_s=res.compile_wall_s,
+    )
     return rows
 
 

@@ -1,10 +1,11 @@
 """Fig 6: two transient uplink failures (100us-ish and 200us-ish); REPS
 freezes within ~1 RTO and avoids the failed paths; OPS keeps spraying.
 
-Runs through the batched FleetRunner (BENCH_SEEDS seeds in one compiled
-scan; metrics reported for seed 0 == the serial run).
+Both LB cells (and the BENCH_SEEDS seed axis) run as one sweep bucket —
+the failure schedules pad to a common shape and the OPS/REPS columns share
+one compiled scan behind a lax.switch branch index.
 """
-from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_fleet, throughput_extra
+from benchmarks.common import Rows, ci_cfg, msg, run_sweep, sweep_case, sweep_rows
 from repro.netsim import FailureSchedule, Topology, failures, workloads
 
 
@@ -18,19 +19,22 @@ def main(rows=None):
         failures.link_down([int(ups[1])], 1200, 2400),
     )
     wl = workloads.permutation(cfg.n_hosts, msg(768, 4096), seed=3)
-    ticks = 8000
-    for lbn in ["ops", "reps"]:
-        fleet, _, _, sums, wall = run_fleet(
-            cfg, wl, lb_for(cfg, lbn, **({"freezing_timeout": 800} if lbn == "reps" else {})),
-            ticks, fs, topo.t0_up_queues(0),
-        )
-        s = sums[0]
-        rows.add(
-            f"fig06/{lbn}", wall * 1e6,
+    watch = topo.t0_up_queues(0)
+    cases = [
+        sweep_case("fig06/ops", wl, "ops", 8000, cfg, failures=fs, watch=watch),
+        sweep_case(
+            "fig06/reps", wl, "reps", 8000, cfg, failures=fs, watch=watch,
+            freezing_timeout=800,
+        ),
+    ]
+    _, res = run_sweep(cfg, cases)
+    sweep_rows(
+        rows, res,
+        fmt=lambda _name, s: (
             f"runtime={s.runtime_ticks};drops_fail={s.drops_fail};"
-            f"timeouts={s.timeouts};completed={s.completed}/{s.n_conns}",
-            **throughput_extra(ticks, fleet.n_runs, wall),
-        )
+            f"timeouts={s.timeouts};completed={s.completed}/{s.n_conns}"
+        ),
+    )
     return rows
 
 

@@ -64,21 +64,38 @@ def main() -> None:
                 records[rec["name"]] = {k: v for k, v in rec.items() if k != "name"}
     wall = time.time() - t0
     print(f"# total_wall_s={wall:.0f} failed={len(failed)}")
+    modules = list(selected)
     if only and os.path.exists(JSON_PATH):
         # Subset run: merge into the existing baseline instead of erasing
         # rows for modules that were not selected — BENCH_netsim.json is
         # the cross-PR perf trajectory, each row keeps its latest sample.
+        # meta must then describe the *merged* file, not just this run:
+        # modules become the union, and full_scale/smoke/seeds are derived
+        # from the per-row context stamps (mixed runs are marked "mixed").
         try:
             with open(JSON_PATH) as f:
-                records = {**json.load(f).get("rows", {}), **records}
+                prev = json.load(f)
+            records = {**prev.get("rows", {}), **records}
+            modules = sorted(set(prev.get("meta", {}).get("modules", [])) | set(selected))
         except (json.JSONDecodeError, OSError):
             pass
+
+    def _row_consensus(key, default):
+        # rows without a context stamp (pre-stamp legacy merges) must not
+        # be backfilled with the current run's flag — that would launder a
+        # mixed file into a unanimous one; treat "absent" as its own value.
+        vals = {rec.get(key) for rec in records.values()}
+        if len(vals) != 1:
+            return "mixed"
+        v = vals.pop()
+        return default if v is None else v
+
     payload = {
         "meta": {
-            "full_scale": FULL,
-            "smoke": SMOKE,
-            "seeds": SEEDS,
-            "modules": selected,
+            "full_scale": _row_consensus("full_scale", FULL),
+            "smoke": _row_consensus("smoke", SMOKE),
+            "seeds": _row_consensus("seeds", SEEDS),
+            "modules": modules,
             "failed": [m for m, _ in failed],
             "total_wall_s": wall,
             "platform": platform.platform(),

@@ -1,5 +1,5 @@
 from repro.core import balls_bins, load_balancers, reps
-from repro.core.load_balancers import REGISTRY, LoadBalancer, make_lb
+from repro.core.load_balancers import REGISTRY, LoadBalancer, SwitchLB, make_lb
 from repro.core.reps import REPSConfig, REPSOracle, REPSState
 
 __all__ = [
@@ -8,6 +8,7 @@ __all__ = [
     "reps",
     "REGISTRY",
     "LoadBalancer",
+    "SwitchLB",
     "make_lb",
     "REPSConfig",
     "REPSOracle",

@@ -436,6 +436,91 @@ class BitmapLB(LoadBalancer):
 
 
 # ---------------------------------------------------------------------------
+# SwitchLB: N variants behind one lax.switch branch index, so scenarios that
+# differ only in their load balancer share a single compilation (the sweep
+# engine's LB dispatch, repro.netsim.sweep).  State is (branch_idx, tuple of
+# every variant's state); each callback switches into the active variant,
+# passing the *same* key/mask the variant would see serially and rewriting
+# only its own state slot — so the active branch's stream is bit-identical
+# to a serial run with the plain variant.  Under vmap the switch lowers to
+# run-all-branches + select, which is the price of one compilation for the
+# whole LB column.
+# ---------------------------------------------------------------------------
+class SwitchLB(LoadBalancer):
+    name = "switch"
+
+    def __init__(self, variants):
+        variants = tuple(variants)
+        assert variants, "need at least one variant"
+        flags = {v.switch_adaptive for v in variants}
+        assert len(flags) == 1, (
+            "SwitchLB variants must agree on switch_adaptive (in-network "
+            "adaptive LBs change the routing function, a static property); "
+            "bucket them separately"
+        )
+        super().__init__(max(v.evs_size for v in variants))
+        self.variants = variants
+        self.switch_adaptive = flags.pop()
+        self.name = "switch(" + "+".join(v.name for v in variants) + ")"
+
+    def _dispatch(self, bidx, states, fn, out_proto=None):
+        """lax.switch over per-variant callbacks; branch i rewrites state
+        slot i only.  fn(i, state_i) -> (aux_i, new_state_i)."""
+
+        def mk(i):
+            def br(sts):
+                aux, si = fn(i, sts[i])
+                return aux, tuple(
+                    si if j == i else sts[j] for j in range(len(sts))
+                )
+
+            return br
+
+        return jax.lax.switch(bidx, [mk(i) for i in range(len(self.variants))], states)
+
+    def init_state(self, n_conns, key):
+        # every variant is seeded with the same key it would get serially
+        return (
+            jnp.zeros((), jnp.int32),
+            tuple(v.init_state(n_conns, key) for v in self.variants),
+        )
+
+    def with_branch(self, state, branch_idx):
+        """Rebind the branch index (the sweep sets it per scenario row)."""
+        return (jnp.asarray(branch_idx, jnp.int32), state[1])
+
+    def choose_ev(self, state, mask, key, now):
+        bidx, states = state
+        evs, states = self._dispatch(
+            bidx, states,
+            lambda i, s: self.variants[i].choose_ev(s, mask, key, now),
+        )
+        return evs, (bidx, states)
+
+    def on_ack(self, state, mask, ev, ecn, now):
+        bidx, states = state
+        _, states = self._dispatch(
+            bidx, states,
+            lambda i, s: (
+                jnp.zeros((), jnp.int32),
+                self.variants[i].on_ack(s, mask, ev, ecn, now),
+            ),
+        )
+        return (bidx, states)
+
+    def on_timeout(self, state, mask, now):
+        bidx, states = state
+        _, states = self._dispatch(
+            bidx, states,
+            lambda i, s: (
+                jnp.zeros((), jnp.int32),
+                self.variants[i].on_timeout(s, mask, now),
+            ),
+        )
+        return (bidx, states)
+
+
+# ---------------------------------------------------------------------------
 # Adaptive RoCE (NVIDIA Spectrum-X style): in-network per-packet adaptive
 # routing — switches pick the least-loaded valid uplink.  The sender sprays
 # (EV is ignored by adaptive switches).

@@ -121,3 +121,31 @@ def named_sharding(*logical_axes: Optional[str], shape=None) -> Optional[NamedSh
     if c.mesh is None:
         return None
     return NamedSharding(c.mesh, resolve_spec(logical_axes, shape))
+
+
+# ---------------------------------------------------------------------------
+# Sweep-row sharding (netsim/sweep.py): independent scenario rows sharded
+# over a flat 1-D device mesh.  On CPU CI the device axis is materialized
+# with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+# ---------------------------------------------------------------------------
+SWEEP_AXIS = "rows"
+
+
+def sweep_mesh(max_devices: Optional[int] = None) -> Optional[Mesh]:
+    """1-D mesh over the available devices for row-parallel sweeps, or None
+    when only one device is visible (callers then skip shard_map)."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if max_devices is None else max(1, min(max_devices, len(devs)))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), (SWEEP_AXIS,))
+
+
+def pad_rows(n_rows: int, mesh: Optional[Mesh]) -> int:
+    """Row count after padding to a multiple of the sweep mesh size."""
+    if mesh is None:
+        return n_rows
+    n_dev = mesh.shape[SWEEP_AXIS]
+    return ((n_rows + n_dev - 1) // n_dev) * n_dev

@@ -1,14 +1,19 @@
 from repro.netsim import failures, metrics, workloads
 from repro.netsim.config import TICK_NS, SimConfig, ns_to_ticks, us_to_ticks
-from repro.netsim.engine import FailureSchedule, SimState, Simulator, Workload
+from repro.netsim.engine import (
+    FailureSchedule, ScenarioArrays, SimState, Simulator, Workload,
+)
 from repro.netsim.fleet import FleetRunner
 from repro.netsim.metrics import RunSummary, summarize
 from repro.netsim.mixed import MixedLB
+from repro.netsim.sweep import SweepCase, SweepEngine, SweepResult
 from repro.netsim.topology import Topology, ecmp_hash, mix32
 
 __all__ = [
     "failures", "metrics", "workloads",
     "TICK_NS", "SimConfig", "ns_to_ticks", "us_to_ticks",
-    "FailureSchedule", "SimState", "Simulator", "Workload", "FleetRunner",
-    "RunSummary", "summarize", "MixedLB", "Topology", "ecmp_hash", "mix32",
+    "FailureSchedule", "ScenarioArrays", "SimState", "Simulator", "Workload",
+    "FleetRunner", "RunSummary", "summarize", "MixedLB",
+    "SweepCase", "SweepEngine", "SweepResult",
+    "Topology", "ecmp_hash", "mix32",
 ]

@@ -66,6 +66,13 @@ class SimConfig:
 
     # --- engine sizing ---------------------------------------------------------
     pkt_slots: int = 0  # 0 = auto (n_conns * max_cwnd + slack)
+    # Shape pins for the sweep engine's bucketing (netsim/sweep.py): padding
+    # two scenarios to one compiled shape requires the *derived* static sizes
+    # (per-conn bitmap width, host conn-table width) to match too, or the
+    # round-robin / RNG streams diverge from the serial reference.  0 = auto
+    # (derive from the workload, the seed behavior).
+    msg_slots: int = 0  # 0 = auto (pow2 of the workload's max message)
+    conns_per_host: int = 0  # 0 = auto (max conns sharing one source host)
     feedback_rounds: int = 2  # exact per-conn events applied per tick
     n_watch_queues: int = 16  # queues traced per tick for micro figures
     # arrivals enqueue backend: "jnp" (segment-cumsum in the tick body),

@@ -116,6 +116,25 @@ class FailureSchedule:
         )
 
 
+class ScenarioArrays(NamedTuple):
+    """Per-scenario dynamic arrays, split out of the Simulator so the sweep
+    engine can batch *heterogeneous* scenarios: ``step_scenario`` is pure in
+    (state, tick, key, scenario), and scenarios sharing static shapes vmap
+    together on a leading row axis (repro.netsim.sweep)."""
+
+    conn_src: jax.Array  # (NC,) int32
+    conn_dst: jax.Array  # (NC,) int32
+    conn_msg: jax.Array  # (NC,) int32
+    conn_start: jax.Array  # (NC,) int32
+    conn_dep: jax.Array  # (NC,) int32
+    host_conns: jax.Array  # (NH, CPH) int32, -1 padded
+    watch: jax.Array  # (W,) int32 queue ids traced per tick
+    f_queue: jax.Array  # (F,) int32
+    f_start: jax.Array  # (F,) int32
+    f_end: jax.Array  # (F,) int32
+    f_kind: jax.Array  # (F,) int32
+
+
 class SimState(NamedTuple):
     # packed packet table (PF, NP) int32 — see field constants above
     pkt: jax.Array
@@ -267,7 +286,14 @@ class Simulator:
         assert msg_max <= cfg.max_msg_pkts, (
             f"message of {msg_max} pkts exceeds max_msg_pkts={cfg.max_msg_pkts}"
         )
-        self.MSG = int(min(cfg.max_msg_pkts, max(int(2 ** np.ceil(np.log2(max(msg_max, 2)))), 2)))
+        auto_msg = int(min(cfg.max_msg_pkts, max(int(2 ** np.ceil(np.log2(max(msg_max, 2)))), 2)))
+        if cfg.msg_slots:
+            assert cfg.msg_slots >= auto_msg, (
+                f"msg_slots={cfg.msg_slots} < required bitmap width {auto_msg}"
+            )
+            self.MSG = int(cfg.msg_slots)
+        else:
+            self.MSG = auto_msg
         self.NQ = self.topo.n_queues
         self.NH = cfg.n_hosts
         self.NP = cfg.pkt_slots or int(
@@ -281,7 +307,14 @@ class Simulator:
         by_host: list[list[int]] = [[] for _ in range(self.NH)]
         for c in range(NC):
             by_host[int(workload.src[c])].append(c)
-        self.CPH = max(1, max(len(v) for v in by_host) if NC else 1)
+        auto_cph = max(1, max(len(v) for v in by_host) if NC else 1)
+        if cfg.conns_per_host:
+            assert cfg.conns_per_host >= auto_cph, (
+                f"conns_per_host={cfg.conns_per_host} < required {auto_cph}"
+            )
+            self.CPH = int(cfg.conns_per_host)
+        else:
+            self.CPH = auto_cph
         hc = np.full((self.NH, self.CPH), -1, np.int32)
         for h, v in enumerate(by_host):
             hc[h, : len(v)] = v
@@ -301,6 +334,21 @@ class Simulator:
         self.f_start = jnp.asarray(self.failures.start)
         self.f_end = jnp.asarray(self.failures.end)
         self.f_kind = jnp.asarray(self.failures.kind)
+
+        # the pure-step view of this scenario's dynamic arrays
+        self.scn = ScenarioArrays(
+            conn_src=self.conn_src,
+            conn_dst=self.conn_dst,
+            conn_msg=self.conn_msg,
+            conn_start=self.conn_start,
+            conn_dep=self.conn_dep,
+            host_conns=self.host_conns,
+            watch=self.watch,
+            f_queue=self.f_queue,
+            f_start=self.f_start,
+            f_end=self.f_end,
+            f_kind=self.f_kind,
+        )
 
         self.base_key = jax.random.PRNGKey(seed)
 
@@ -413,6 +461,23 @@ class Simulator:
     def _step(
         self, state: SimState, tick: jax.Array, base_key: jax.Array
     ) -> tuple[SimState, TickTrace]:
+        return self.step_scenario(state, tick, base_key, self.scn)
+
+    def step_scenario(
+        self,
+        state: SimState,
+        tick: jax.Array,
+        base_key: jax.Array,
+        scn: ScenarioArrays,
+    ) -> tuple[SimState, TickTrace]:
+        """One tick, pure in (state, tick, key, scenario arrays).
+
+        Static structure (cfg, topology, shapes, LB object) still lives on
+        the instance; everything a scenario can vary *without changing
+        shapes* arrives via ``scn`` — which is what the sweep engine vmaps
+        over to batch heterogeneous (workload, lb, failures) cells into one
+        compiled scan (repro.netsim.sweep).
+        """
         cfg, topo = self.cfg, self.topo
         NP, NQ, NH = self.NP, self.NQ, self.NH
         NC = self.wl.n_conns
@@ -536,15 +601,15 @@ class Simulator:
         pkt = pkt.at[PORPH].set(p_orphan.astype(jnp.int32))
 
         # =============== 3. service / dequeue ===========================
-        f_active = (now >= self.f_start) & (now < self.f_end)
+        f_active = (now >= scn.f_start) & (now < scn.f_end)
         failed_q = (
             jnp.zeros((NQ + 1,), jnp.bool_)
-            .at[jnp.where(f_active & (self.f_kind == 0), self.f_queue, NQ)]
+            .at[jnp.where(f_active & (scn.f_kind == 0), scn.f_queue, NQ)]
             .max(True, mode="drop")[:NQ]
         )
         degraded_q = (
             jnp.zeros((NQ + 1,), jnp.bool_)
-            .at[jnp.where(f_active & (self.f_kind == 1), self.f_queue, NQ)]
+            .at[jnp.where(f_active & (scn.f_kind == 1), scn.f_queue, NQ)]
             .max(True, mode="drop")[:NQ]
         )
         service_ok = ~(degraded_q & (now % 2 == 1))
@@ -578,7 +643,7 @@ class Simulator:
         )[:NC]
         delivered_d = jnp.sum(newly.astype(jnp.int32))
         deliver_ackable = is_final & ~d_orph & ~was_done
-        msg_of = self.conn_msg.at[dconn].get(mode="fill", fill_value=BIG)
+        msg_of = scn.conn_msg.at[dconn].get(mode="fill", fill_value=BIG)
         # ≤1 delivery per conn per tick ⇒ the post-update gathered values are
         # the pre-update gathers plus this queue's own contribution.
         del_of = (
@@ -635,8 +700,8 @@ class Simulator:
         a_ev = jnp.where(a_valid, A[PEV], 0)
         a_inj = jnp.where(a_valid, A[PHOP], 1) == 0
         a_cur = jnp.where(a_valid, A[PCURQ], 0)
-        a_src = self.conn_src[jnp.clip(a_conn, 0, NC - 1)]
-        a_dst = self.conn_dst[jnp.clip(a_conn, 0, NC - 1)]
+        a_src = scn.conn_src[jnp.clip(a_conn, 0, NC - 1)]
+        a_dst = scn.conn_dst[jnp.clip(a_conn, 0, NC - 1)]
         # adaptive switches exclude locally-known failed ports (link down is
         # visible at the switch); hashing LBs ignore q_len entirely.
         q_len_eff = q_len + failed_q.astype(jnp.int32) * jnp.int32(4 * QCAP)
@@ -702,17 +767,17 @@ class Simulator:
         pkt = pkt.at[:, a_idx].set(An, mode="drop")
 
         # =============== 5. injection ===================================
-        started = (now >= self.conn_start) & (
-            (self.conn_dep < 0) | c_done[jnp.clip(self.conn_dep, 0, NC - 1)]
+        started = (now >= scn.conn_start) & (
+            (scn.conn_dep < 0) | c_done[jnp.clip(scn.conn_dep, 0, NC - 1)]
         )
-        has_work = (c_rtx_count > 0) | (c_next_new < self.conn_msg)
+        has_work = (c_rtx_count > 0) | (c_next_new < scn.conn_msg)
         can = (
             started
             & ~c_done
             & has_work
             & (c_inflight < jnp.floor(c_cwnd).astype(jnp.int32))
         )
-        hc = self.host_conns  # (NH, CPH)
+        hc = scn.host_conns  # (NH, CPH)
         elig = can[jnp.clip(hc, 0, NC - 1)] & (hc >= 0)
         ordr = (jnp.arange(self.CPH)[None, :] - h_rr[:, None]) % self.CPH
         score = jnp.where(elig, ordr, BIG)
@@ -810,8 +875,8 @@ class Simulator:
             timeouts=s_stats[ST_TIMEOUTS],
             delivered=s_stats[ST_DELIVERED],
             injected=s_stats[ST_INJECTED],
-            watch_qlen=q_len[self.watch],
-            watch_served=serve[self.watch].astype(jnp.int32),
+            watch_qlen=q_len[scn.watch],
+            watch_served=serve[scn.watch].astype(jnp.int32),
         )
         return new_state, trace
 

@@ -87,7 +87,15 @@ class FleetRunner:
         return jax.tree_util.tree_map(lambda x: x[i], states)
 
     def summaries(self, states: SimState, name: str | None = None) -> list[RunSummary]:
+        # one device_get for the whole stacked state — summarize() touches
+        # many leaves per run, and slicing device arrays per run costs
+        # O(n_runs * n_leaves) host round-trips
+        host_states = jax.device_get(states)
         return [
-            summarize(self.sim, self.state_at(states, i), name=name)
+            summarize(
+                self.sim,
+                jax.tree_util.tree_map(lambda x, i=i: x[i], host_states),
+                name=name,
+            )
             for i in range(self.n_runs)
         ]

@@ -36,16 +36,31 @@ class RunSummary:
         )
 
 
-def summarize(sim, state, name: str | None = None) -> RunSummary:
+def summarize(
+    sim,
+    state,
+    name: str | None = None,
+    lb_name: str | None = None,
+    n_conns: int | None = None,
+    conn_start=None,
+) -> RunSummary:
+    """Summarize one run's final state.
+
+    The overrides exist for sweep cells (netsim/sweep.py): the hosting
+    bucket simulator carries a SwitchLB and a shape-padded conn table, so
+    the cell's true LB name, original conn count, and its own start ticks
+    are passed explicitly.  Padded conns never start, so they are invisible
+    to every completion/FCT statistic.
+    """
     done = np.asarray(state.c_done)
     done_tick = np.asarray(state.c_done_tick)
-    start = np.asarray(sim.conn_start)
+    start = np.asarray(conn_start if conn_start is not None else sim.conn_start)
     fct = (done_tick - start)[done]
     runtime = int(done_tick[done].max()) if done.any() else -1
     return RunSummary(
         name=name or sim.wl.name,
-        lb=sim.lb.name,
-        n_conns=sim.wl.n_conns,
+        lb=lb_name or sim.lb.name,
+        n_conns=n_conns if n_conns is not None else sim.wl.n_conns,
         completed=int(done.sum()),
         runtime_ticks=runtime,
         runtime_us=runtime * TICK_NS / 1000.0,

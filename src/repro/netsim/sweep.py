@@ -1,0 +1,539 @@
+"""Sweep engine: shape-bucketed multi-scenario fleets in a few compiled calls.
+
+The paper's headline figures sweep workloads × load balancers × seeds ×
+failure schedules; serially that costs one trace + compile + scan per cell.
+This module batches *heterogeneous* cells instead:
+
+  1. **Bucketing** — cells are grouped by their padded static shapes
+     ``(ticks, adaptive, NC, MSG, F, W)``: conn counts and message-bitmap
+     widths round up to powers of two, failure schedules and watch lists pad
+     to the bucket max.  Within a bucket every cell compiles to the *same*
+     jaxpr, so the whole bucket is one ``lax.scan``.
+  2. **Neutral padding** — padded conns never start (start tick 2^29) and
+     padded failure rows are never active (start == end == 0); the derived
+     static sizes a padded table would perturb (per-conn bitmap width,
+     host round-robin width) are pinned via ``SimConfig.msg_slots`` /
+     ``conns_per_host`` so the *serial reference* (``serial_sim``) builds
+     bit-identical shapes.  Every sweep row is bit-identical to
+     ``Simulator.run`` on that reference (tests/test_sweep.py).
+  3. **LB dispatch** — cells that differ only in load balancer share the
+     bucket through ``SwitchLB``: one ``lax.switch`` branch index per row
+     selects the variant, so ECMP/OPS/REPS columns cost one compilation.
+     In-network adaptive LBs change the routing function (a static
+     property) and bucket separately.
+  4. **(scenario, seed) vmap + device sharding** — rows are the product of
+     cells and seeds; ``Simulator.step_scenario`` vmaps over the row axis
+     and, when more than one device is visible, rows shard across a 1-D
+     ``shard_map`` mesh (CPU CI materializes devices with
+     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+  5. **Donated chunked execution** — the scan carry is donated per chunk
+     and trace chunks stream to the host, so long sweeps never hold the
+     full (ticks, rows, ...) trace on device.  ``collect="none"`` drops
+     trace emission entirely (the scan carries no ys), which is the fast
+     path benchmarks use.
+
+Example (one compiled call per shape bucket, not per cell):
+
+    cases = [SweepCase(f"fig02/{w}/{lb}", wl, lb, ticks=4000)
+             for w, wl in wls.items() for lb in ("ecmp", "ops", "reps")]
+    result = SweepEngine(cfg, cases).run()
+    for name, summaries in result.summaries().items(): ...
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.load_balancers import SwitchLB, make_lb
+from repro.distrib.sharding import SWEEP_AXIS, pad_rows, sweep_mesh
+from repro.netsim.config import SimConfig
+from repro.netsim.engine import (
+    FailureSchedule, ScenarioArrays, Simulator, SimState, Workload,
+)
+from repro.netsim.metrics import RunSummary, summarize
+from repro.utils import compat
+
+# padded conns start here: far beyond any sweep horizon, still well inside
+# int32 so `now >= start` arithmetic cannot wrap.
+NEVER_TICK = 2**29
+
+
+def _pow2(n: int) -> int:
+    return int(2 ** np.ceil(np.log2(max(int(n), 1))))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCase:
+    """One cell of a sweep grid: a scenario structure plus its seeds."""
+
+    name: str
+    workload: Workload
+    lb: str  # load-balancer registry name
+    ticks: int
+    lb_kwargs: dict = dataclasses.field(default_factory=dict)
+    failures: FailureSchedule | None = None
+    watch_queues: Any = None  # None = topology default
+    seeds: tuple[int, ...] = (0,)
+
+
+def _canon_lb_kwargs(case: SweepCase, cfg: SimConfig) -> dict:
+    """LB kwargs with harness defaults resolved — keying on the raw kwargs
+    would give `{}` and `{"evs_size": cfg.evs_size}` distinct SwitchLB
+    branches, and every redundant branch costs a full extra LB evaluation
+    per tick under the vmapped switch."""
+    kw = dict(case.lb_kwargs)
+    kw.setdefault("evs_size", cfg.evs_size)
+    return kw
+
+
+def _variant_key(case: SweepCase, cfg: SimConfig) -> tuple:
+    return (case.lb, tuple(sorted(_canon_lb_kwargs(case, cfg).items())))
+
+
+def _pad_workload(wl: Workload, nc: int, n_hosts: int) -> Workload:
+    """Pad the conn table to ``nc`` rows with inert connections: they never
+    start, depend on nothing, and are spread round-robin over hosts to keep
+    the padded host conn-table width small."""
+    extra = nc - wl.n_conns
+    if extra == 0:
+        return wl
+    assert extra > 0
+    pad_src = (np.arange(extra, dtype=np.int32) % n_hosts).astype(np.int32)
+    return Workload(
+        src=np.concatenate([wl.src.astype(np.int32), pad_src]),
+        dst=np.concatenate(
+            [wl.dst.astype(np.int32), (pad_src + 1) % n_hosts]
+        ).astype(np.int32),
+        msg_pkts=np.concatenate(
+            [wl.msg_pkts.astype(np.int32), np.ones((extra,), np.int32)]
+        ),
+        start=np.concatenate(
+            [wl.start.astype(np.int32), np.full((extra,), NEVER_TICK, np.int32)]
+        ),
+        dep=np.concatenate(
+            [wl.dep.astype(np.int32), np.full((extra,), -1, np.int32)]
+        ),
+        name=wl.name,
+    )
+
+
+def _pad_failures(fs: FailureSchedule | None, f: int) -> FailureSchedule:
+    """Pad to ``f`` rows with never-active events (start == end == 0)."""
+    fs = fs or FailureSchedule.none()
+    extra = f - len(fs.queue)
+    assert extra >= 0
+    z = np.zeros((extra,), np.int32)
+    return FailureSchedule(
+        queue=np.concatenate([fs.queue.astype(np.int32), z]),
+        start=np.concatenate([fs.start.astype(np.int32), z]),
+        end=np.concatenate([fs.end.astype(np.int32), z]),
+        kind=np.concatenate([fs.kind.astype(np.int32), z]),
+    )
+
+
+def _host_conns(wl: Workload, n_hosts: int, cph: int) -> np.ndarray:
+    """host -> local conn table, same layout the engine builds (-1 padded)."""
+    hc = np.full((n_hosts, cph), -1, np.int32)
+    fill = np.zeros((n_hosts,), np.int32)
+    for c in range(wl.n_conns):
+        h = int(wl.src[c])
+        hc[h, fill[h]] = c
+        fill[h] += 1
+    return hc
+
+
+def _pad_watch(watch: np.ndarray, w: int) -> np.ndarray:
+    watch = np.asarray(watch, np.int32)
+    extra = w - len(watch)
+    assert extra >= 0
+    if extra == 0:
+        return watch
+    fill = watch[-1] if len(watch) else 0
+    return np.concatenate([watch, np.full((extra,), fill, np.int32)])
+
+
+@dataclasses.dataclass
+class _Cell:
+    case: SweepCase
+    padded_wl: Workload
+    padded_fs: FailureSchedule
+    padded_watch: np.ndarray
+    branch: int
+    rows: list[int] = dataclasses.field(default_factory=list)  # per seed
+
+
+@dataclasses.dataclass
+class _Bucket:
+    key: tuple
+    ticks: int
+    cfg: SimConfig  # shape-pinned bucket config
+    lb: SwitchLB
+    cells: list[_Cell]
+    sim: Simulator
+    n_rows: int
+    # stacked per-row inputs
+    keys: jax.Array  # (R, key)
+    scn: ScenarioArrays  # leaves (R, ...)
+    branch_idx: np.ndarray  # (R,)
+    # filled by run()
+    final_state: Any = None  # host-side SimState, leaves (R, ...)
+    traces: Any = None  # host-side TickTrace, leaves (ticks, R, ...) or None
+    exec_wall_s: float = 0.0
+    compile_wall_s: float = 0.0
+    ticks_run: int = 0  # == ticks unless early exit fired sooner
+
+
+class SweepResult:
+    """Per-cell access to a finished sweep (all arrays already on host)."""
+
+    def __init__(self, engine: "SweepEngine"):
+        self._engine = engine
+        self.buckets = engine.buckets
+        self.exec_wall_s = sum(b.exec_wall_s for b in self.buckets)
+        self.compile_wall_s = sum(b.compile_wall_s for b in self.buckets)
+
+    def _find(self, name: str) -> tuple[_Bucket, _Cell]:
+        for b in self.buckets:
+            for c in b.cells:
+                if c.case.name == name:
+                    return b, c
+        raise KeyError(name)
+
+    def state_for(self, name: str, seed_idx: int = 0) -> SimState:
+        b, c = self._find(name)
+        row = c.rows[seed_idx]
+        return jax.tree_util.tree_map(lambda x: x[row], b.final_state)
+
+    def trace_for(self, name: str, seed_idx: int = 0):
+        b, c = self._find(name)
+        assert b.traces is not None, "run with collect='full' to keep traces"
+        row = c.rows[seed_idx]
+        return jax.tree_util.tree_map(lambda x: x[:, row], b.traces)
+
+    def summaries(self) -> dict[str, list[RunSummary]]:
+        """Per-cell summaries (one per seed), sliced from the single
+        host-side copy of each bucket's stacked final state."""
+        out: dict[str, list[RunSummary]] = {}
+        for b in self.buckets:
+            for c in b.cells:
+                variant = b.lb.variants[c.branch]
+                out[c.case.name] = [
+                    summarize(
+                        b.sim,
+                        jax.tree_util.tree_map(lambda x, r=row: x[r], b.final_state),
+                        name=c.case.name,
+                        lb_name=variant.name,
+                        n_conns=c.case.workload.n_conns,
+                        conn_start=c.padded_wl.start,
+                    )
+                    for row in c.rows
+                ]
+        return out
+
+
+class SweepEngine:
+    """Buckets a list of SweepCases and runs each bucket as one compiled,
+    row-sharded, donated-carry scan."""
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        cases: Sequence[SweepCase],
+        devices: int | str | None = "auto",
+        min_conn_bucket: int = 8,
+    ):
+        self.cfg = cfg
+        self.cases = list(cases)
+        assert self.cases, "need at least one case"
+        if devices == "auto":
+            self.mesh = sweep_mesh()
+        elif devices in (None, 1):
+            self.mesh = None
+        else:
+            self.mesh = sweep_mesh(int(devices))
+        self.min_conn_bucket = min_conn_bucket
+        self.buckets = self._build_buckets()
+
+    # ------------------------------------------------------------------
+    def _default_watch(self) -> np.ndarray:
+        from repro.netsim.topology import Topology
+
+        topo = Topology.build(self.cfg)
+        return np.asarray(
+            topo.t0_up_queues(0)[: self.cfg.n_watch_queues], np.int32
+        )
+
+    def _build_buckets(self) -> list[_Bucket]:
+        cfg = self.cfg
+        default_watch = self._default_watch()
+        groups: dict[tuple, list[tuple[SweepCase, Any]]] = {}
+        for case in self.cases:
+            variant = make_lb(case.lb, **_canon_lb_kwargs(case, cfg))
+            wl = case.workload
+            msg_max = int(wl.msg_pkts.max()) if wl.n_conns else 1
+            nc_b = _pow2(max(wl.n_conns, self.min_conn_bucket))
+            msg_b = int(
+                min(cfg.max_msg_pkts, max(_pow2(max(msg_max, 2)), 2))
+            )
+            n_fail = len(case.failures.queue) if case.failures else 0
+            f_b = _pow2(max(n_fail, 1))
+            watch = (
+                default_watch
+                if case.watch_queues is None
+                else np.asarray(case.watch_queues, np.int32)
+            )
+            w_b = _pow2(max(len(watch), 1))
+            key = (case.ticks, variant.switch_adaptive, nc_b, msg_b, f_b, w_b)
+            groups.setdefault(key, []).append((case, variant, watch))
+        buckets = []
+        for key, members in groups.items():
+            buckets.append(self._build_bucket(key, members))
+        return buckets
+
+    def _build_bucket(self, key: tuple, members) -> _Bucket:
+        ticks, _adaptive, nc_b, msg_b, f_b, w_b = key
+        cfg = self.cfg
+
+        # one SwitchLB branch per distinct (lb name, kwargs) spec
+        variant_order: list[tuple] = []
+        variants = []
+        for case, variant, _watch in members:
+            vk = _variant_key(case, cfg)
+            if vk not in variant_order:
+                variant_order.append(vk)
+                variants.append(variant)
+
+        cells: list[_Cell] = []
+        for case, _variant, watch in members:
+            cells.append(
+                _Cell(
+                    case=case,
+                    padded_wl=_pad_workload(case.workload, nc_b, cfg.n_hosts),
+                    padded_fs=_pad_failures(case.failures, f_b),
+                    padded_watch=_pad_watch(watch, w_b),
+                    branch=variant_order.index(_variant_key(case, cfg)),
+                )
+            )
+
+        # pin the derived static sizes the padded tables would otherwise
+        # perturb, so serial references share bit-identical shapes
+        cph_b = 1
+        for c in cells:
+            counts = np.bincount(c.padded_wl.src, minlength=cfg.n_hosts)
+            cph_b = max(cph_b, int(counts.max()))
+        cfg_b = cfg.replace(msg_slots=msg_b, conns_per_host=cph_b)
+
+        lb = SwitchLB(variants)
+        sim = Simulator(
+            cfg_b,
+            cells[0].padded_wl,
+            lb,
+            failures=cells[0].padded_fs,
+            watch_queues=cells[0].padded_watch,
+            seed=int(cells[0].case.seeds[0]),
+        )
+
+        # rows = cells × seeds, padded to a multiple of the mesh size by
+        # repeating row 0 (discarded on output)
+        row_cells: list[tuple[_Cell, int]] = []
+        for c in cells:
+            for s in c.case.seeds:
+                c.rows.append(len(row_cells))
+                row_cells.append((c, int(s)))
+        n_rows = len(row_cells)
+        n_padded = pad_rows(n_rows, self.mesh)
+        row_cells += [row_cells[0]] * (n_padded - n_rows)
+
+        def stack(field_of):
+            return jnp.asarray(np.stack([field_of(c, s) for c, s in row_cells]))
+
+        scn = ScenarioArrays(
+            conn_src=stack(lambda c, s: c.padded_wl.src.astype(np.int32)),
+            conn_dst=stack(lambda c, s: c.padded_wl.dst.astype(np.int32)),
+            conn_msg=stack(lambda c, s: c.padded_wl.msg_pkts.astype(np.int32)),
+            conn_start=stack(lambda c, s: c.padded_wl.start.astype(np.int32)),
+            conn_dep=stack(lambda c, s: c.padded_wl.dep.astype(np.int32)),
+            host_conns=stack(
+                lambda c, s: _host_conns(c.padded_wl, cfg.n_hosts, cph_b)
+            ),
+            watch=stack(lambda c, s: c.padded_watch),
+            f_queue=stack(lambda c, s: c.padded_fs.queue.astype(np.int32)),
+            f_start=stack(lambda c, s: c.padded_fs.start.astype(np.int32)),
+            f_end=stack(lambda c, s: c.padded_fs.end.astype(np.int32)),
+            f_kind=stack(lambda c, s: c.padded_fs.kind.astype(np.int32)),
+        )
+        keys = jnp.stack([jax.random.PRNGKey(s) for _, s in row_cells])
+        branch_idx = np.asarray([c.branch for c, _ in row_cells], np.int32)
+        return _Bucket(
+            key=key, ticks=ticks, cfg=cfg_b, lb=lb, cells=cells, sim=sim,
+            n_rows=n_rows, keys=keys, scn=scn, branch_idx=branch_idx,
+        )
+
+    # ------------------------------------------------------------------
+    def serial_sim(self, name: str, seed: int | None = None) -> Simulator:
+        """The serial reference for a cell: a plain Simulator built on the
+        same padded scenario and shape-pinned config the sweep row ran —
+        ``serial_sim(name).run(ticks)`` is bit-identical to the sweep row."""
+        for b in self.buckets:
+            for c in b.cells:
+                if c.case.name == name:
+                    lb = make_lb(
+                        c.case.lb, **_canon_lb_kwargs(c.case, self.cfg)
+                    )
+                    return Simulator(
+                        b.cfg,
+                        c.padded_wl,
+                        lb,
+                        failures=c.padded_fs,
+                        watch_queues=c.padded_watch,
+                        seed=int(c.case.seeds[0] if seed is None else seed),
+                    )
+        raise KeyError(name)
+
+    # ------------------------------------------------------------------
+    def _init_states(self, bucket: _Bucket) -> SimState:
+        states = jax.vmap(bucket.sim.init_state)(bucket.keys)
+        _, variant_states = states.lb_state
+        return states._replace(
+            lb_state=(jnp.asarray(bucket.branch_idx), variant_states)
+        )
+
+    def _make_chunk_fn(self, bucket: _Bucket, n: int, collect: str):
+        """Compiled runner for one chunk of ``n`` ticks: carries donated
+        states, returns (states, traces-or-None)."""
+        sim = bucket.sim
+        vstep = jax.vmap(sim.step_scenario, in_axes=(0, None, 0, 0))
+        full = collect == "full"
+
+        def body(states, keys, scn, t0):
+            def tick(carry, t):
+                new_carry, tr = vstep(carry, t, keys, scn)
+                return new_carry, (tr if full else None)
+
+            ticks = t0 + jnp.arange(n, dtype=jnp.int32)
+            return jax.lax.scan(tick, states, ticks)
+
+        if self.mesh is not None:
+            body = compat.shard_map(
+                body,
+                self.mesh,
+                in_specs=(P(SWEEP_AXIS), P(SWEEP_AXIS), P(SWEEP_AXIS), P()),
+                out_specs=(P(SWEEP_AXIS), P(None, SWEEP_AXIS) if full else P()),
+                check_vma=False,
+            )
+        return jax.jit(body, donate_argnums=(0,))
+
+    def _make_quiescent_fn(self, bucket: _Bucket):
+        """Per-row fixed-point detector.  A row is quiescent when no packet
+        slot is allocated (covers FLYING/QUEUED/ACK/NACK/LOST_WAIT — every
+        live state holds a slot until consumed) and no connection that can
+        still start within the horizon has work left.  Once both hold,
+        every later tick is a no-op for packet/conn/stat state, so the
+        remaining scan chunks can be skipped without changing any reported
+        result (only time-keeping LB internals, e.g. PLB epoch clocks,
+        would have kept advancing).
+        """
+        NP = bucket.sim.NP
+
+        def f(states: SimState, scn: ScenarioArrays, end_tick):
+            no_pkts = states.fl_count == NP  # (R,)
+            dep = jnp.clip(scn.conn_dep, 0, scn.conn_src.shape[-1] - 1)
+            dep_ok = (scn.conn_dep < 0) | jnp.take_along_axis(
+                states.c_done, dep, axis=-1
+            )
+            startable = (scn.conn_start < end_tick) & dep_ok
+            has_work = (states.c_rtx_count > 0) | (
+                states.c_next_new < scn.conn_msg
+            )
+            active = startable & ~states.c_done & has_work
+            return jnp.all(no_pkts & ~jnp.any(active, axis=-1))
+
+        return jax.jit(f)
+
+    def run(
+        self,
+        collect: str = "none",
+        chunk: int | None = None,
+        early_exit: bool = False,
+    ) -> SweepResult:
+        """Execute every bucket.  ``collect``:
+
+        * ``"none"``  — no per-tick traces (fastest; summaries only);
+        * ``"full"``  — full TickTrace streams, fetched chunk-by-chunk.
+
+        ``chunk`` bounds how many ticks of trace live on device at once
+        (defaults to the whole run in one chunk).  ``early_exit`` stops a
+        bucket at the first chunk boundary where every row has reached its
+        fixed point (see _make_quiescent_fn); all reported metrics are
+        bit-identical to running the full horizon.  Requires
+        ``collect="none"`` (skipped ticks would otherwise be missing from
+        the trace streams, even though their values are constant).
+        """
+        assert collect in ("none", "full"), collect
+        assert not (early_exit and collect == "full"), (
+            "early_exit would truncate trace streams; use collect='none'"
+        )
+        for bucket in self.buckets:
+            self._run_bucket(bucket, collect, chunk, early_exit)
+        return SweepResult(self)
+
+    def _run_bucket(
+        self, bucket: _Bucket, collect: str, chunk: int | None,
+        early_exit: bool = False,
+    ):
+        ticks = bucket.ticks
+        if chunk is None:
+            # early exit needs chunk boundaries to act on
+            chunk = max(64, ticks // 8) if early_exit else ticks
+        chunk = max(1, min(chunk, ticks))
+        sizes = [chunk] * (ticks // chunk)
+        if ticks % chunk:
+            sizes.append(ticks % chunk)
+
+        t_c0 = time.time()
+        states = self._init_states(bucket)
+        # AOT-compile each distinct chunk length (usually 1-2) untimed
+        compiled: dict[int, Any] = {}
+        t0 = jnp.zeros((), jnp.int32)
+        for n in sorted(set(sizes)):
+            fn = self._make_chunk_fn(bucket, n, collect)
+            compiled[n] = fn.lower(states, bucket.keys, bucket.scn, t0).compile()
+        quiescent = self._make_quiescent_fn(bucket) if early_exit else None
+        jax.block_until_ready(states.c_done)
+        bucket.compile_wall_s = time.time() - t_c0
+
+        trace_chunks = []
+        offset = 0
+        t_e0 = time.time()
+        for n in sizes:
+            states, traces = compiled[n](
+                states, bucket.keys, bucket.scn, jnp.asarray(offset, jnp.int32)
+            )
+            offset += n
+            if collect == "full":
+                # stream this chunk to host so the device never holds more
+                # than `chunk` ticks of trace
+                trace_chunks.append(jax.device_get(traces))
+            if quiescent is not None and offset < ticks and bool(
+                quiescent(states, bucket.scn, jnp.asarray(ticks, jnp.int32))
+            ):
+                break
+        jax.block_until_ready(states.c_done)
+        bucket.exec_wall_s = time.time() - t_e0
+        bucket.ticks_run = offset
+
+        host_state = jax.device_get(states)  # one transfer for the bucket
+        keep = bucket.n_rows
+        bucket.final_state = jax.tree_util.tree_map(
+            lambda x: x[:keep], host_state
+        )
+        if collect == "full":
+            bucket.traces = jax.tree_util.tree_map(
+                lambda *xs: np.concatenate(xs, axis=0)[:, :keep], *trace_chunks
+            )

@@ -1,0 +1,164 @@
+"""Sweep engine: shape-bucketed heterogeneous cells must be bit-identical
+to serial ``Simulator.run`` on the padded serial reference (`serial_sim`),
+per cell and per seed — across buckets, SwitchLB branches, failure padding,
+chunked trace streaming, and quiescence early exit.  Plus conservation
+invariants for the AI-collective workloads."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.netsim import (
+    SweepCase, SweepEngine, Topology, failures, workloads,
+)
+
+CFG = FATTREE_32_CI
+
+
+def _case(name, wl, lb, ticks, fs=None, seeds=(0,), **lb_kwargs):
+    lb_kwargs.setdefault("evs_size", CFG.evs_size)
+    return SweepCase(
+        name=name, workload=wl, lb=lb, ticks=ticks, lb_kwargs=lb_kwargs,
+        failures=fs, seeds=tuple(seeds),
+    )
+
+
+def _assert_cell_matches_serial(eng, res, name, ticks, seed_idx=0, seed=0,
+                                traces=True):
+    ref = eng.serial_sim(name, seed=seed)
+    st, tr = ref.run(ticks)
+    jax.block_until_ready(st.c_done)
+    sw = res.state_for(name, seed_idx)
+    np.testing.assert_array_equal(np.asarray(st.c_done_tick), sw.c_done_tick)
+    np.testing.assert_array_equal(np.asarray(st.s_stats), sw.s_stats)
+    np.testing.assert_array_equal(np.asarray(st.q_served), sw.q_served)
+    if traces:
+        sw_tr = res.trace_for(name, seed_idx)
+        np.testing.assert_array_equal(np.asarray(tr.delivered), sw_tr.delivered)
+        np.testing.assert_array_equal(np.asarray(tr.watch_qlen), sw_tr.watch_qlen)
+    return st, sw
+
+
+def test_sweep_parity_across_buckets_and_lbs():
+    """≥2 shape buckets (NC 32 and NC 8→padded), three LB variants behind
+    one lax.switch, full traces streamed in chunks — every cell equals its
+    serial reference bit-for-bit."""
+    wl_p = workloads.permutation(32, 48, seed=1)
+    wl_i = workloads.incast(32, 5, 48)
+    cases = [
+        _case("perm/ecmp", wl_p, "ecmp", 500),
+        _case("perm/ops", wl_p, "ops", 500),
+        _case("perm/reps", wl_p, "reps", 500),
+        _case("incast/reps", wl_i, "reps", 500),
+    ]
+    eng = SweepEngine(CFG, cases)
+    assert len(eng.buckets) >= 2, "expected distinct shape buckets"
+    res = eng.run(collect="full", chunk=200)
+    for c in cases:
+        _assert_cell_matches_serial(eng, res, c.name, 500)
+    sums = res.summaries()
+    assert sums["perm/ecmp"][0].lb == "ecmp"
+    assert sums["incast/reps"][0].n_conns == wl_i.n_conns  # unpadded count
+
+
+def test_sweep_parity_failures_and_seeds():
+    """Padded failure schedules and a multi-seed row axis: per-seed rows
+    equal serial runs with those seeds, including the LB pytree of the
+    active switch branch."""
+    topo = Topology.build(CFG)
+    fs = failures.link_down(list(topo.t0_up_queues(0)[:2]), 100, 400)
+    wl = workloads.permutation(32, 48, seed=3)
+    cases = [
+        _case("f/ops", wl, "ops", 600, fs=fs),
+        _case("f/reps", wl, "reps", 600, fs=fs, seeds=(0, 5),
+              freezing_timeout=300),
+    ]
+    eng = SweepEngine(CFG, cases)
+    res = eng.run(collect="none")
+    _assert_cell_matches_serial(eng, res, "f/ops", 600, traces=False)
+    for i, seed in enumerate((0, 5)):
+        ref = eng.serial_sim("f/reps", seed=seed)
+        st, _ = ref.run(600)
+        jax.block_until_ready(st.c_done)
+        sw = res.state_for("f/reps", i)
+        np.testing.assert_array_equal(np.asarray(st.c_done_tick), sw.c_done_tick)
+        np.testing.assert_array_equal(np.asarray(st.s_stats), sw.s_stats)
+        # the active branch's LB state matches the serial variant's
+        bidx, variant_states = sw.lb_state
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            st.lb_state, variant_states[int(bidx)],
+        )
+
+
+def test_sweep_early_exit_is_fixed_point():
+    """Quiescence early exit must leave every engine-state leaf (everything
+    but LB-internal clocks) bit-identical to running the full horizon."""
+    wl = workloads.permutation(32, 48, seed=1)
+    cases = [
+        _case("p/ecmp", wl, "ecmp", 2000),
+        _case("p/plb", wl, "plb", 2000),
+    ]
+    eng = SweepEngine(CFG, cases)
+    res = eng.run(collect="none", early_exit=True, chunk=250)
+    bucket = eng.buckets[0]
+    assert bucket.ticks_run < 2000, "early exit should fire well before 2000"
+    for name in ("p/ecmp", "p/plb"):
+        ref = eng.serial_sim(name)
+        st, _ = ref.run(2000)  # full horizon
+        jax.block_until_ready(st.c_done)
+        sw = res.state_for(name)
+        for field in st._fields:
+            if field == "lb_state":
+                continue  # PLB epoch clocks legitimately keep advancing
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st, field)),
+                np.asarray(getattr(sw, field)),
+                err_msg=field,
+            )
+
+
+def test_collectives_conservation_and_sweep_parity():
+    """alltoall / ring_allreduce / butterfly_allreduce, swept over ≥2 shape
+    buckets: at quiescence every message is fully delivered, no packet slot
+    leaks, and injected == delivered + drops (exact when no timeouts —
+    retransmissions are the only source of duplicate injections)."""
+    ticks = 400
+    wls = {
+        "ring": workloads.ring_allreduce(8, 32),
+        "butterfly": workloads.butterfly_allreduce(8, 32),
+        "alltoall": workloads.alltoall(8, 4, window=2),
+    }
+    cases = [_case(f"coll/{k}", wl, "reps", ticks) for k, wl in wls.items()]
+    eng = SweepEngine(CFG, cases)
+    assert len(eng.buckets) >= 2
+    res = eng.run(collect="none")
+    sums = res.summaries()
+    for k, wl in wls.items():
+        name = f"coll/{k}"
+        st, _sw = _assert_cell_matches_serial(
+            eng, res, name, ticks, traces=False
+        )
+        sw = res.state_for(name)
+        s = sums[name][0]
+        # completion: every conn done, every message fully delivered
+        assert s.completed == wl.n_conns, (k, s.completed)
+        np.testing.assert_array_equal(
+            sw.c_delivered[: wl.n_conns], wl.msg_pkts.astype(np.int32)
+        )
+        # conservation at quiescence: no slots leaked, nothing in flight
+        assert int(sw.fl_count) == eng.serial_sim(name).NP, k
+        assert not np.any(sw.c_inflight), k
+        # injected == delivered + drops (timeout-free runs are exact)
+        injected, delivered = int(s.injected), int(s.delivered)
+        drops = int(s.drops_cong) + int(s.drops_fail)
+        assert injected >= delivered, k
+        if s.timeouts == 0:
+            assert injected == delivered + drops, (k, injected, delivered, drops)
+
+
+def test_sweep_engine_rejects_full_traces_with_early_exit():
+    wl = workloads.permutation(32, 32, seed=4)
+    eng = SweepEngine(CFG, [_case("x", wl, "ops", 100)])
+    with pytest.raises(AssertionError):
+        eng.run(collect="full", early_exit=True)
