@@ -105,24 +105,26 @@ def sweep_case(name, wl, lbn, ticks, cfg, failures=None, watch=None, **lb_kwargs
     )
 
 
-def run_sweep(cfg, cases):
+def run_sweep(cfg, cases, packer=None):
     """Submit a whole figure as one sweep: a few compiled bucket scans
     instead of one trace+compile+run per (workload, lb) cell.  Compile is
     excluded from exec walls (AOT per bucket, same protocol as run_one).
     Buckets stop at quiescence (early_exit) — reported metrics are
     bit-identical to the full horizon, see netsim/sweep.py."""
-    eng = SweepEngine(cfg, cases)
+    eng = SweepEngine(cfg, cases, packer=packer)
     res = eng.run(collect="none", early_exit=True)
     return eng, res
 
 
-def sweep_rows(rows, res, fmt=None):
+def sweep_rows(rows, res, fmt=None, derive=None):
     """Emit one row per sweep cell (seed-0 metrics == the serial run).
 
     ``fmt(name, summary) -> str`` picks the derived string per cell
-    (default: completion format).  Wall attribution: a cell's us_per_call
-    is its bucket's exec wall split evenly over the bucket's cells;
-    ticks_per_sec stays the fleet-aggregate definition, here
+    (default: completion format); ``derive(case, summary, state) -> str``
+    overrides it when the string needs the cell's final state (fig03's
+    served shares, fig05's cohort FCTs).  Wall attribution: a cell's
+    us_per_call is its bucket's exec wall split evenly over the bucket's
+    cells; ticks_per_sec stays the fleet-aggregate definition, here
     bucket-aggregate (rows x ticks over bucket wall).
     """
     sums = res.summaries()
@@ -131,15 +133,47 @@ def sweep_rows(rows, res, fmt=None):
         tps = b.ticks_run * b.n_rows / max(b.exec_wall_s, 1e-9)
         for c in b.cells:
             s = sums[c.case.name][0]
-            derived = fmt(c.case.name, s) if fmt else completion_fmt(s)
+            if derive is not None:
+                d = derive(c.case, s, res.state_for(c.case.name))
+            elif fmt is not None:
+                d = fmt(c.case.name, s)
+            else:
+                d = completion_fmt(s)
             rows.add(
-                c.case.name, share_us, derived,
+                c.case.name, share_us, d,
                 ticks=b.ticks, ticks_run=b.ticks_run,
                 n_runs=len(c.case.seeds),
                 ticks_per_sec=tps, bucket_rows=b.n_rows,
                 bucket_wall_s=b.exec_wall_s,
             )
     return sums
+
+
+def figure_grid(rows, fig, cfg, cases, fmt=None, derive=None, packer=None):
+    """Run a declarative figure grid (list of SweepCases) as one sweep
+    submission and emit its rows plus a ``{fig}/sweep_total`` row.
+
+    This is the figure→sweep-batch path every grid figure rides: the
+    cost-aware packer (netsim/sweep.pack) fuses near-identical cell shapes
+    and tick horizons into a few bucket scans, and the sweep_total row
+    records the plan shape (cells/buckets/compiled programs/merge waste)
+    next to aggregate throughput so CI can gate it (±20% median-normalized
+    vs the committed BENCH_netsim.json).
+    """
+    eng, res = run_sweep(cfg, cases, packer=packer)
+    sweep_rows(rows, res, fmt=fmt, derive=derive)
+    plan = eng.plan
+    agg_ticks = sum(b.ticks_run * b.n_rows for b in res.buckets)
+    rows.add(
+        f"{fig}/sweep_total", res.exec_wall_s * 1e6,
+        f"cells={len(cases)};buckets={len(res.buckets)};"
+        f"programs={plan.n_groups};rows={plan.n_rows};"
+        f"merge_waste={plan.merge_waste:.3f}",
+        ticks_per_sec=agg_ticks / max(res.exec_wall_s, 1e-9),
+        compile_wall_s=res.compile_wall_s,
+        buckets=len(res.buckets),
+    )
+    return eng, res
 
 
 def completion_fmt(s):

@@ -1,16 +1,16 @@
 """Fig 2: healthy symmetric network — synthetic benchmarks, DC traces and
 AI collectives across all load balancers.
 
-The whole figure is submitted as ONE sweep batch (repro.netsim.sweep):
-cells sharing padded shapes compile together, the ECMP/OPS/REPS columns
-ride one lax.switch, seeds vmap on the row axis, and rows shard across
-visible devices.  Per-cell metrics are bit-identical to the serial
-Simulator.run on the same padded scenario (tests/test_sweep.py); seed-0 is
-the reported run.  BENCH_SMOKE=1 restricts to the three canonical LBs and
-the synthetic workloads for CI perf tracking.
+The whole figure is submitted as ONE sweep batch (figure_grid →
+repro.netsim.sweep): cells sharing padded shapes compile together, the
+ECMP/OPS/REPS columns ride one lax.switch, seeds vmap on the row axis, and
+rows shard across visible devices.  Per-cell metrics are bit-identical to
+the serial Simulator.run on the same padded scenario (tests/test_sweep.py);
+seed-0 is the reported run.  BENCH_SMOKE=1 restricts to the three canonical
+LBs and the synthetic workloads for CI perf tracking.
 """
 from benchmarks.common import (
-    SMOKE, Rows, ci_cfg, completion_fmt, msg, run_sweep, sweep_case, sweep_rows,
+    SMOKE, Rows, ci_cfg, completion_fmt, figure_grid, msg, sweep_case,
 )
 from repro.netsim import workloads
 
@@ -19,32 +19,30 @@ LBS = ["ecmp", "ops", "reps", "plb", "flowlet", "mptcp", "mprdma", "bitmap",
 SMOKE_LBS = ["ecmp", "ops", "reps"]
 
 
-def main(rows=None):
-    rows = rows or Rows()
-    cfg = ci_cfg()
+def cases(cfg, smoke=SMOKE):
     n = cfg.n_hosts
-    lbs = SMOKE_LBS if SMOKE else LBS
+    lbs = SMOKE_LBS if smoke else LBS
     wls = {
         "incast8": workloads.incast(n, 8, msg(128, 1024)),
         "permutation": workloads.permutation(n, msg(256, 2048), seed=1),
         "tornado": workloads.tornado(n, msg(256, 2048)),
     }
-    cases = [
+    out = [
         sweep_case(f"fig02/{wname}/{lbn}", wl, lbn, 4000, cfg)
         for wname, wl in wls.items()
         for lbn in lbs
     ]
-    if not SMOKE:
+    if not smoke:
         # DC traces (websearch) at moderate load
         wsw = workloads.websearch_trace(
             n, load=0.6, duration_ticks=1500, seed=2, max_pkts=cfg.max_msg_pkts
         )
-        cases += [
+        out += [
             sweep_case(f"fig02/websearch60/{lbn}", wsw, lbn, 4500, cfg)
             for lbn in ["ecmp", "ops", "reps", "plb", "bitmap"]
         ]
         # AI collectives
-        cases += [
+        out += [
             sweep_case(f"fig02/{cname}/{lbn}", wl, lbn, 12000, cfg)
             for cname, wl in {
                 "ring_allreduce": workloads.ring_allreduce(16, msg(128, 1024)),
@@ -53,26 +51,23 @@ def main(rows=None):
             }.items()
             for lbn in ["ecmp", "ops", "reps", "adaptive_roce"]
         ]
-    eng, res = run_sweep(cfg, cases)
+    return out
 
-    def fmt(name, s):
-        if "/websearch" in name:  # trace cells read better with FCT stats
-            return (
-                f"completed={s.completed}/{s.n_conns};"
-                f"mean_fct={s.mean_fct_ticks:.0f};"
-                f"p99_fct={s.p99_fct_ticks:.0f}"
-            )
-        return completion_fmt(s)
 
-    sweep_rows(rows, res, fmt=fmt)
-    n_rows_total = sum(b.n_rows for b in res.buckets)
-    agg_ticks = sum(b.ticks_run * b.n_rows for b in res.buckets)
-    rows.add(
-        "fig02/sweep_total", res.exec_wall_s * 1e6,
-        f"cells={len(cases)};buckets={len(res.buckets)};rows={n_rows_total}",
-        ticks_per_sec=agg_ticks / max(res.exec_wall_s, 1e-9),
-        compile_wall_s=res.compile_wall_s,
-    )
+def _fmt(name, s):
+    if "/websearch" in name:  # trace cells read better with FCT stats
+        return (
+            f"completed={s.completed}/{s.n_conns};"
+            f"mean_fct={s.mean_fct_ticks:.0f};"
+            f"p99_fct={s.p99_fct_ticks:.0f}"
+        )
+    return completion_fmt(s)
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    figure_grid(rows, "fig02", cfg, cases(cfg), fmt=_fmt)
     return rows
 
 

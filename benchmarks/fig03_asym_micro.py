@@ -1,28 +1,43 @@
 """Fig 3: asymmetric micro — one TOR uplink degraded to half rate; REPS
-skews selection away from the slow link, OPS stays uniform."""
+skews selection away from the slow link, OPS stays uniform.
+
+Both LB cells share one sweep bucket (figure_grid); the slow-link share is
+derived from each cell's final q_served state, bit-identical to the serial
+per-cell path.
+"""
 import numpy as np
 
-from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_one
+from benchmarks.common import SMOKE, Rows, ci_cfg, figure_grid, msg, sweep_case
 from repro.netsim import Topology, failures, workloads
+
+
+def cases(cfg, smoke=SMOKE):
+    topo = Topology.build(cfg)
+    slow = int(topo.t0_up_queues(0)[0])
+    fs = failures.link_degraded([slow], 0, failures.FOREVER)
+    wl = workloads.permutation(cfg.n_hosts, msg(256, 2048), seed=3)
+    watch = topo.t0_up_queues(0)
+    return [
+        sweep_case(f"fig03/{lbn}", wl, lbn, 4000, cfg, failures=fs,
+                   watch=watch)
+        for lbn in ["ops", "reps"]
+    ]
 
 
 def main(rows=None):
     rows = rows or Rows()
     cfg = ci_cfg()
-    topo = Topology.build(cfg)
-    slow = int(topo.t0_up_queues(0)[0])
-    fs = failures.link_degraded([slow], 0, 2**30)
-    wl = workloads.permutation(cfg.n_hosts, msg(256, 2048), seed=3)
-    watch = topo.t0_up_queues(0)
-    for lbn in ["ops", "reps"]:
-        sim, st, tr, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 4000, fs, watch)
+    watch = Topology.build(cfg).t0_up_queues(0)
+
+    def derive(case, s, st):
         served = np.asarray(st.q_served)[watch]
         share = served[0] / max(served.sum(), 1)
-        rows.add(
-            f"fig03/{lbn}", wall * 1e6,
+        return (
             f"runtime={s.runtime_ticks};slow_link_share={share:.3f};"
-            f"uniform_share={1/len(watch):.3f}",
+            f"uniform_share={1 / len(watch):.3f}"
         )
+
+    figure_grid(rows, "fig03", cfg, cases(cfg), derive=derive)
     return rows
 
 

@@ -1,25 +1,49 @@
 """Fig 4: asymmetric macro — ~2% of TOR uplinks degraded; synthetic + DC +
-collective workloads across load balancers."""
-from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+collective workloads across load balancers.
+
+The whole grid runs as one sweep submission (benchmarks.common.figure_grid
+→ repro.netsim.sweep): the synthetic-workload × endpoint-LB block shares
+one bucket scan, adaptive RoCE buckets separately (in-network routing is a
+static property), and the ring-AllReduce block keeps its own shapes/horizon
+unless the packer can fuse it under the waste budget.  Every cell's metrics
+are bit-identical to the PR 2 per-cell `run_one` path
+(tests/test_figure_parity.py).  BENCH_SMOKE=1 restricts to the canonical
+LBs on the synthetic workloads.
+"""
+from benchmarks.common import SMOKE, Rows, ci_cfg, figure_grid, msg, sweep_case
 from repro.netsim import failures, workloads
+
+LBS = ["ecmp", "ops", "reps", "plb", "bitmap", "adaptive_roce"]
+SMOKE_LBS = ["ecmp", "ops", "reps"]
+
+
+def cases(cfg, smoke=SMOKE):
+    """Declarative cell list for the fig04 grid (smoke = CI subset)."""
+    fs = failures.random_degraded_uplinks(cfg, 0.03, seed=4)
+    n = cfg.n_hosts
+    lbs = SMOKE_LBS if smoke else LBS
+    out = [
+        sweep_case(f"fig04/{wname}/{lbn}", wl, lbn, 5000, cfg, failures=fs)
+        for wname, wl in {
+            "permutation": workloads.permutation(n, msg(256, 2048), seed=1),
+            "tornado": workloads.tornado(n, msg(256, 2048)),
+        }.items()
+        for lbn in lbs
+    ]
+    if not smoke:
+        wl = workloads.ring_allreduce(16, msg(128, 1024))
+        out += [
+            sweep_case(f"fig04/ring_allreduce/{lbn}", wl, lbn, 14000, cfg,
+                       failures=fs)
+            for lbn in ["ops", "reps", "bitmap"]
+        ]
+    return out
 
 
 def main(rows=None):
     rows = rows or Rows()
     cfg = ci_cfg()
-    fs = failures.random_degraded_uplinks(cfg, 0.03, seed=4)
-    n = cfg.n_hosts
-    for wname, wl in {
-        "permutation": workloads.permutation(n, msg(256, 2048), seed=1),
-        "tornado": workloads.tornado(n, msg(256, 2048)),
-    }.items():
-        for lbn in ["ecmp", "ops", "reps", "plb", "bitmap", "adaptive_roce"]:
-            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 5000, fs)
-            completion_row(rows, f"fig04/{wname}/{lbn}", s, wall)
-    wl = workloads.ring_allreduce(16, msg(128, 1024))
-    for lbn in ["ops", "reps", "bitmap"]:
-        _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn), 14000, fs)
-        completion_row(rows, f"fig04/ring_allreduce/{lbn}", s, wall)
+    figure_grid(rows, "fig04", cfg, cases(cfg))
     return rows
 
 

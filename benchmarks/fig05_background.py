@@ -1,27 +1,48 @@
 """Fig 5: coexistence — REPS foreground with ECMP background traffic
-(incremental deployment)."""
-from benchmarks.common import Rows, ci_cfg, lb_for, msg, run_one
-from repro.netsim import MixedLB, workloads
+(incremental deployment).
+
+Both mixed-cohort cells ride one sweep bucket: MixedLB is registry-backed
+(`make_lb("mixed", fg=..., bg=..., bg_conns=...)`), so the foreground
+variants share a lax.switch scan like any other LB column; cohort FCTs are
+derived from each cell's final c_done_tick state.
+"""
+import numpy as np
+
+from benchmarks.common import SMOKE, Rows, ci_cfg, figure_grid, msg, sweep_case
+from repro.netsim import workloads
+
+
+def _workload(cfg):
+    return workloads.permutation_with_background(
+        cfg.n_hosts, msg(256, 2048), 0.1, seed=1
+    )
+
+
+def cases(cfg, smoke=SMOKE):
+    wl, bg = _workload(cfg)
+    bg_conns = tuple(int(i) for i in np.nonzero(bg)[0])
+    return [
+        sweep_case(f"fig05/{fg}+ecmp_bg", wl, "mixed", 5000, cfg,
+                   fg=fg, bg="ecmp", bg_conns=bg_conns)
+        for fg in ["ops", "reps"]
+    ]
 
 
 def main(rows=None):
     rows = rows or Rows()
     cfg = ci_cfg()
-    wl, bg = workloads.permutation_with_background(
-        cfg.n_hosts, msg(256, 2048), 0.1, seed=1
-    )
-    import numpy as np
-    for fg in ["ops", "reps"]:
-        lb = MixedLB(lb_for(cfg, fg), lb_for(cfg, "ecmp"), bg)
-        sim, st, tr, s, wall = run_one(cfg, wl, lb, 5000)
-        done_tick = np.asarray(st.c_done_tick)
+    wl, bg = _workload(cfg)
+
+    def derive(case, s, st):
+        done_tick = np.asarray(st.c_done_tick)[: wl.n_conns]
         fg_fct = done_tick[~bg & (done_tick > 0)].max() if (~bg).any() else -1
         bg_fct = done_tick[bg & (done_tick > 0)].max() if bg.any() else -1
-        rows.add(
-            f"fig05/{fg}+ecmp_bg", wall * 1e6,
+        return (
             f"fg_runtime={fg_fct};bg_runtime={bg_fct};"
-            f"completed={s.completed}/{s.n_conns}",
+            f"completed={s.completed}/{s.n_conns}"
         )
+
+    figure_grid(rows, "fig05", cfg, cases(cfg), derive=derive)
     return rows
 
 

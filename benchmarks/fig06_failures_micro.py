@@ -1,35 +1,38 @@
 """Fig 6: two transient uplink failures (100us-ish and 200us-ish); REPS
 freezes within ~1 RTO and avoids the failed paths; OPS keeps spraying.
 
-Both LB cells (and the BENCH_SEEDS seed axis) run as one sweep bucket —
-the failure schedules pad to a common shape and the OPS/REPS columns share
-one compiled scan behind a lax.switch branch index.
+Both LB cells (and the BENCH_SEEDS seed axis) run as one sweep bucket via
+figure_grid — the failure schedules pad to a common shape and the OPS/REPS
+columns share one compiled scan behind a lax.switch branch index.
 """
-from benchmarks.common import Rows, ci_cfg, msg, run_sweep, sweep_case, sweep_rows
+from benchmarks.common import SMOKE, Rows, ci_cfg, figure_grid, msg, sweep_case
 from repro.netsim import FailureSchedule, Topology, failures, workloads
 
 
-def main(rows=None):
-    rows = rows or Rows()
-    cfg = ci_cfg()
+def cases(cfg, smoke=SMOKE):
     topo = Topology.build(cfg)
     ups = topo.t0_up_queues(0)
     fs = FailureSchedule.concat(
         failures.link_down([int(ups[0])], 150, 800),
         failures.link_down([int(ups[1])], 1200, 2400),
     )
-    wl = workloads.permutation(cfg.n_hosts, msg(768, 4096), seed=3)
+    wl = workloads.permutation(
+        cfg.n_hosts, min(msg(768, 4096), cfg.max_msg_pkts), seed=3
+    )
     watch = topo.t0_up_queues(0)
-    cases = [
-        sweep_case("fig06/ops", wl, "ops", 8000, cfg, failures=fs, watch=watch),
-        sweep_case(
-            "fig06/reps", wl, "reps", 8000, cfg, failures=fs, watch=watch,
-            freezing_timeout=800,
-        ),
+    return [
+        sweep_case("fig06/ops", wl, "ops", 8000, cfg, failures=fs,
+                   watch=watch),
+        sweep_case("fig06/reps", wl, "reps", 8000, cfg, failures=fs,
+                   watch=watch, freezing_timeout=800),
     ]
-    _, res = run_sweep(cfg, cases)
-    sweep_rows(
-        rows, res,
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    figure_grid(
+        rows, "fig06", cfg, cases(cfg),
         fmt=lambda _name, s: (
             f"runtime={s.runtime_ticks};drops_fail={s.drops_fail};"
             f"timeouts={s.timeouts};completed={s.completed}/{s.n_conns}"

@@ -1,23 +1,50 @@
 """Fig 7: failure modes macro — persistent partial failures during
-permutation / DC traces / ring AllReduce."""
-from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+permutation / DC traces / ring AllReduce.
+
+Runs as one sweep submission (figure_grid): the three workload blocks have
+different conn counts *and* tick horizons, so they bucket separately unless
+the cost-aware packer can fuse them under the waste budget (horizon-merged
+rows freeze bit-exactly at their own horizon).  LB columns within a block
+share one lax.switch scan.  BENCH_SMOKE=1 drops the websearch trace block.
+"""
+from benchmarks.common import SMOKE, Rows, ci_cfg, figure_grid, msg, sweep_case
 from repro.netsim import failures, workloads
+
+LBS = ["ops", "reps", "plb"]
+SMOKE_LBS = ["ops", "reps"]
+
+
+def cases(cfg, smoke=SMOKE):
+    """Declarative cell list for the fig07 grid (smoke = CI subset)."""
+    fs = failures.random_down_uplinks(cfg, 0.05, 150, failures.FOREVER, seed=7)
+    n = cfg.n_hosts
+    lbs = SMOKE_LBS if smoke else LBS
+    blocks = [
+        ("permutation", workloads.permutation(n, msg(256, 2048), seed=1), 8000),
+        ("ring_allreduce", workloads.ring_allreduce(16, msg(96, 1024)), 16000),
+    ]
+    if not smoke:
+        blocks.insert(1, (
+            "websearch100",
+            workloads.websearch_trace(n, 0.9, 1200, seed=2,
+                                      max_pkts=cfg.max_msg_pkts),
+            6000,
+        ))
+    out = []
+    for wname, wl, ticks in blocks:
+        for lbn in lbs:
+            kw = {"freezing_timeout": 800} if lbn == "reps" else {}
+            out.append(
+                sweep_case(f"fig07/{wname}/{lbn}", wl, lbn, ticks, cfg,
+                           failures=fs, **kw)
+            )
+    return out
 
 
 def main(rows=None):
     rows = rows or Rows()
     cfg = ci_cfg()
-    fs = failures.random_down_uplinks(cfg, 0.05, 150, 2**30, seed=7)
-    n = cfg.n_hosts
-    for wname, wl, ticks in [
-        ("permutation", workloads.permutation(n, msg(256, 2048), seed=1), 8000),
-        ("websearch100", workloads.websearch_trace(n, 0.9, 1200, seed=2, max_pkts=cfg.max_msg_pkts), 6000),
-        ("ring_allreduce", workloads.ring_allreduce(16, msg(96, 1024)), 16000),
-    ]:
-        for lbn in ["ops", "reps", "plb"]:
-            kw = {"freezing_timeout": 800} if lbn == "reps" else {}
-            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn, **kw), ticks, fs)
-            completion_row(rows, f"fig07/{wname}/{lbn}", s, wall)
+    figure_grid(rows, "fig07", cfg, cases(cfg))
     return rows
 
 

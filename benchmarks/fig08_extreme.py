@@ -1,19 +1,41 @@
 """Fig 8: extreme failures — up to 50% of uplinks down; REPS stays close to
-ideal while others degrade."""
-from benchmarks.common import Rows, ci_cfg, completion_row, lb_for, msg, run_one
+ideal while others degrade.
+
+The failure-fraction axis only changes the schedule length (F), which is a
+near-zero term of the packer's cost model — the whole grid fuses into ONE
+bucket scan (failure rows pad to the max F with inert rows; the
+never-resurrect pad semantics live on FailureSchedule).  BENCH_SMOKE=1
+drops the middle fraction and the PLB column.
+"""
+from benchmarks.common import SMOKE, Rows, ci_cfg, figure_grid, msg, sweep_case
 from repro.netsim import failures, workloads
+
+LBS = ["ops", "reps", "plb"]
+SMOKE_LBS = ["ops", "reps"]
+
+
+def cases(cfg, smoke=SMOKE):
+    """Declarative cell list for the fig08 grid (smoke = CI subset)."""
+    wl = workloads.permutation(cfg.n_hosts, msg(192, 2048), seed=5)
+    fracs = [0.125, 0.5] if smoke else [0.125, 0.25, 0.5]
+    lbs = SMOKE_LBS if smoke else LBS
+    out = []
+    for frac in fracs:
+        fs = failures.random_down_uplinks(cfg, frac, 150, failures.FOREVER,
+                                          seed=11)
+        for lbn in lbs:
+            kw = {"freezing_timeout": 800} if lbn == "reps" else {}
+            out.append(
+                sweep_case(f"fig08/fail{int(frac * 100)}pct/{lbn}", wl, lbn,
+                           12000, cfg, failures=fs, **kw)
+            )
+    return out
 
 
 def main(rows=None):
     rows = rows or Rows()
     cfg = ci_cfg()
-    wl = workloads.permutation(cfg.n_hosts, msg(192, 2048), seed=5)
-    for frac in [0.125, 0.25, 0.5]:
-        fs = failures.random_down_uplinks(cfg, frac, 150, 2**30, seed=11)
-        for lbn in ["ops", "reps", "plb"]:
-            kw = {"freezing_timeout": 800} if lbn == "reps" else {}
-            _, _, _, s, wall = run_one(cfg, wl, lb_for(cfg, lbn, **kw), 12000, fs)
-            completion_row(rows, f"fig08/fail{int(frac*100)}pct/{lbn}", s, wall)
+    figure_grid(rows, "fig08", cfg, cases(cfg))
     return rows
 
 

@@ -96,6 +96,11 @@ def main() -> None:
             "smoke": _row_consensus("smoke", SMOKE),
             "seeds": _row_consensus("seeds", SEEDS),
             "modules": modules,
+            # figures that ran as sweep batches (figure_grid emits one
+            # aggregate row per figure; CI gates these)
+            "sweep_totals": sorted(
+                k for k in records if k.endswith("/sweep_total")
+            ),
             "failed": [m for m, _ in failed],
             "total_wall_s": wall,
             "platform": platform.platform(),

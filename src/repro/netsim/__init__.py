@@ -6,7 +6,10 @@ from repro.netsim.engine import (
 from repro.netsim.fleet import FleetRunner
 from repro.netsim.metrics import RunSummary, summarize
 from repro.netsim.mixed import MixedLB
-from repro.netsim.sweep import SweepCase, SweepEngine, SweepResult
+from repro.netsim.sweep import (
+    BucketPlan, CellShape, PackerConfig, PackPlan, SweepCase, SweepEngine,
+    SweepResult, est_row_tick_cost, pack,
+)
 from repro.netsim.topology import Topology, ecmp_hash, mix32
 
 __all__ = [
@@ -15,5 +18,7 @@ __all__ = [
     "FailureSchedule", "ScenarioArrays", "SimState", "Simulator", "Workload",
     "FleetRunner", "RunSummary", "summarize", "MixedLB",
     "SweepCase", "SweepEngine", "SweepResult",
+    "BucketPlan", "CellShape", "PackerConfig", "PackPlan",
+    "est_row_tick_cost", "pack",
     "Topology", "ecmp_hash", "mix32",
 ]

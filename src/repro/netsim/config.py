@@ -73,6 +73,12 @@ class SimConfig:
     # (derive from the workload, the seed behavior).
     msg_slots: int = 0  # 0 = auto (pow2 of the workload's max message)
     conns_per_host: int = 0  # 0 = auto (max conns sharing one source host)
+    # Failure-schedule row pin: pad the schedule with inert rows to this
+    # length at Simulator build (0 = use the schedule as given).  The sweep
+    # packer sets it on bucket configs so a serial reference built from the
+    # *raw* schedule still shares the bucket's (F,) shape; pad semantics
+    # (never resurrect a link) live on FailureSchedule.pad_to/validate.
+    failure_slots: int = 0
     feedback_rounds: int = 2  # exact per-conn events applied per tick
     n_watch_queues: int = 16  # queues traced per tick for micro figures
     # arrivals enqueue backend: "jnp" (segment-cumsum in the tick body),

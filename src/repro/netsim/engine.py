@@ -94,12 +94,25 @@ class Workload:
 
 @dataclasses.dataclass(frozen=True)
 class FailureSchedule:
-    """Link events: kind 0 = down (blackhole), 1 = degraded to half rate."""
+    """Link events: kind 0 = down (blackhole), 1 = degraded to half rate.
+
+    A row is *active* at tick ``t`` iff ``start <= t < end``.  Two row
+    shapes are legal (``validate``): real windows (``end > start``) and
+    inert pads (``start == end == 0``).  Padding/truncation must preserve
+    the active-set at every tick — in particular a permanent failure
+    (``end = failures.FOREVER``) may never have its ``end`` clipped to a
+    pad/bucket boundary, which would silently resurrect the link there.
+    ``pad_to`` only ever appends inert rows; dropping rows is the job of
+    ``failures.truncate_dead`` (which refuses to drop live events).
+    """
 
     queue: np.ndarray  # (F,) int32 queue id
     start: np.ndarray  # (F,) int32 tick
     end: np.ndarray  # (F,) int32 tick
     kind: np.ndarray  # (F,) int32
+
+    def __len__(self) -> int:
+        return len(self.queue)
 
     @staticmethod
     def none() -> "FailureSchedule":
@@ -114,6 +127,50 @@ class FailureSchedule:
             np.concatenate([s.end for s in scheds]).astype(np.int32),
             np.concatenate([s.kind for s in scheds]).astype(np.int32),
         )
+
+    def pad_to(self, f: int) -> "FailureSchedule":
+        """Append inert rows (start == end == 0: never active for any
+        ``now >= 0``) up to ``f`` total.  Existing rows are bit-unchanged —
+        padding can therefore never alter the active-set of any tick."""
+        extra = f - len(self.queue)
+        assert extra >= 0, (
+            f"cannot pad a {len(self.queue)}-event schedule down to {f} "
+            "rows; drop provably-dead events first (failures.truncate_dead)"
+        )
+        if extra == 0:
+            return self
+        z = np.zeros((extra,), np.int32)
+        return FailureSchedule(
+            queue=np.concatenate([self.queue.astype(np.int32), z]),
+            start=np.concatenate([self.start.astype(np.int32), z]),
+            end=np.concatenate([self.end.astype(np.int32), z]),
+            kind=np.concatenate([self.kind.astype(np.int32), z]),
+        )
+
+    def validate(self, n_queues: int | None = None) -> None:
+        """Reject rows that are neither real windows nor inert pads.  The
+        dangerous in-between (``end <= start`` but not all-zero) is what a
+        buggy pad/truncate produces when it clips ``end`` instead of
+        keeping the original window — at the clip boundary the link would
+        come back up even though the builder scheduled it down forever."""
+        s = np.asarray(self.start)
+        e = np.asarray(self.end)
+        q = np.asarray(self.queue)
+        k = np.asarray(self.kind)
+        live = e > s
+        inert = (s == 0) & (e == 0) & (q == 0) & (k == 0)
+        bad = ~(live | inert)
+        assert not bad.any(), (
+            "failure rows must be real windows (end > start) or inert pads "
+            "(queue == start == end == kind == 0); offending rows "
+            f"{np.nonzero(bad)[0].tolist()} look like a clipped/truncated "
+            "schedule, which would resurrect the link at the clip boundary"
+        )
+        assert np.all(s >= 0), "failure windows cannot start before tick 0"
+        if n_queues is not None:
+            assert np.all(q[live] >= 0) and np.all(q[live] < n_queues), (
+                "failure row targets a queue outside the topology"
+            )
 
 
 class ScenarioArrays(NamedTuple):
@@ -279,6 +336,12 @@ class Simulator:
         self.wl = workload
         self.lb = lb
         self.failures = failures or FailureSchedule.none()
+        if cfg.failure_slots:
+            # shape pin (sweep bucketing): pad with inert rows so a serial
+            # reference built from the raw schedule shares the sweep row's
+            # (F,) shape — semantics of pad rows are FailureSchedule's.
+            self.failures = self.failures.pad_to(cfg.failure_slots)
+        self.failures.validate(self.topo.n_queues)
         self.seed = seed
 
         NC = workload.n_conns

@@ -1,4 +1,12 @@
-"""Failure-schedule builders (paper §4.3.3, Appendix D.3)."""
+"""Failure-schedule builders (paper §4.3.3, Appendix D.3).
+
+Padding/truncation semantics (shared with the sweep packer): a schedule may
+be *padded* with inert rows (``FailureSchedule.pad_to``) or *truncated* by
+dropping rows that provably never activate before a horizon
+(``truncate_dead``) — never by clipping a window's ``end``, which would
+resurrect the link at the clip boundary.  Permanent events use ``FOREVER``
+as their end tick.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -6,6 +14,27 @@ import numpy as np
 from repro.netsim.config import SimConfig
 from repro.netsim.engine import FailureSchedule
 from repro.netsim.topology import Topology
+
+# "permanent" end tick: far beyond any horizon, still int32-safe for the
+# engine's `now < end` arithmetic.
+FOREVER = 2**30
+
+
+def truncate_dead(fs: FailureSchedule, horizon: int) -> FailureSchedule:
+    """Drop rows that can never be active in ``[0, horizon)`` — inert pads
+    (empty windows) and events starting at/after the horizon.  Live rows
+    are kept bit-unchanged, so the active-set of every tick < horizon is
+    preserved exactly; a row that is live before the horizon is *never*
+    dropped or clipped, even if its window extends past it."""
+    s = np.asarray(fs.start)
+    e = np.asarray(fs.end)
+    live = (e > s) & (s < horizon)
+    return FailureSchedule(
+        queue=np.asarray(fs.queue, np.int32)[live],
+        start=s.astype(np.int32)[live],
+        end=e.astype(np.int32)[live],
+        kind=np.asarray(fs.kind, np.int32)[live],
+    )
 
 
 def link_down(queues, start: int, end: int) -> FailureSchedule:
@@ -31,7 +60,7 @@ def link_degraded(queues, start: int, end: int) -> FailureSchedule:
 
 
 def random_degraded_uplinks(
-    cfg: SimConfig, fraction: float, start: int = 0, end: int = 2**30, seed: int = 0
+    cfg: SimConfig, fraction: float, start: int = 0, end: int = FOREVER, seed: int = 0
 ) -> FailureSchedule:
     """Degrade a random `fraction` of TOR uplinks to half rate (fig 4)."""
     topo = Topology.build(cfg)
@@ -61,7 +90,7 @@ def incremental_uplink_failures(
     topo = Topology.build(cfg)
     ups = topo.t0_up_queues(tor)[:n_fail]
     scheds = [
-        link_down([q], first_start + i * interval, 2**30)
+        link_down([q], first_start + i * interval, FOREVER)
         for i, q in enumerate(ups)
     ]
     return FailureSchedule.concat(*scheds)

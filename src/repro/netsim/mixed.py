@@ -2,27 +2,55 @@
 (foreground vs background traffic, paper Fig. 5 / incremental deployment).
 
 Each connection is statically assigned to cohort A or B; state for both LBs
-is kept and events are routed by the cohort mask.
+is kept and events are routed by the cohort mask.  The cohort is specified
+either as a boolean mask over the workload's connections or as a tuple of
+background conn indices (``bg_conns``) — the mask itself is materialized in
+``init_state`` at the engine's conn-table width, so padded sweep rows
+(extra inert conns) default to the foreground cohort and the serial/sweep
+streams stay bit-identical.
+
+Registered as ``make_lb("mixed", fg=..., bg=..., bg_conns=(...))`` so sweep
+cells (repro.netsim.sweep) can carry mixed cohorts through the hashable
+``lb_kwargs`` spec.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.load_balancers import LoadBalancer
+from repro.core.load_balancers import REGISTRY, LoadBalancer, make_lb
 
 
 class MixedLB(LoadBalancer):
     name = "mixed"
 
-    def __init__(self, lb_a: LoadBalancer, lb_b: LoadBalancer, b_mask: np.ndarray):
+    def __init__(
+        self,
+        lb_a: LoadBalancer,
+        lb_b: LoadBalancer,
+        b_mask: np.ndarray | None = None,
+        bg_conns: tuple[int, ...] | None = None,
+    ):
         super().__init__(lb_a.evs_size)
         assert not (lb_a.switch_adaptive or lb_b.switch_adaptive), (
             "mixed mode supports endpoint LBs only"
         )
+        assert (b_mask is None) != (bg_conns is None), (
+            "pass exactly one of b_mask / bg_conns"
+        )
+        if b_mask is not None:
+            bg_conns = tuple(
+                int(i) for i in np.nonzero(np.asarray(b_mask, bool))[0]
+            )
         self.lb_a, self.lb_b = lb_a, lb_b
-        self.b_mask_np = np.asarray(b_mask, bool)
+        self.bg_conns = tuple(int(i) for i in bg_conns)
         self.name = f"mixed({lb_a.name}+{lb_b.name})"
+
+    def _mask(self, n_conns: int) -> np.ndarray:
+        bm = np.zeros((n_conns,), bool)
+        if self.bg_conns:
+            bm[list(self.bg_conns)] = True
+        return bm
 
     def init_state(self, n_conns, key):
         import jax
@@ -31,7 +59,7 @@ class MixedLB(LoadBalancer):
         return (
             self.lb_a.init_state(n_conns, ka),
             self.lb_b.init_state(n_conns, kb),
-            jnp.asarray(self.b_mask_np),
+            jnp.asarray(self._mask(n_conns)),
         )
 
     def choose_ev(self, state, mask, key, now):
@@ -54,3 +82,20 @@ class MixedLB(LoadBalancer):
         sa = self.lb_a.on_timeout(sa, mask & ~bm, now)
         sb = self.lb_b.on_timeout(sb, mask & bm, now)
         return (sa, sb, bm)
+
+
+def _make_mixed(
+    fg: str = "ops",
+    bg: str = "ecmp",
+    bg_conns: tuple[int, ...] = (),
+    evs_size: int = 65536,
+) -> MixedLB:
+    """Registry entry: a hashable-kwargs constructor for sweep cells."""
+    return MixedLB(
+        make_lb(fg, evs_size=evs_size),
+        make_lb(bg, evs_size=evs_size),
+        bg_conns=tuple(bg_conns),
+    )
+
+
+REGISTRY["mixed"] = _make_mixed

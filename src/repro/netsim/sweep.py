@@ -4,39 +4,70 @@ The paper's headline figures sweep workloads × load balancers × seeds ×
 failure schedules; serially that costs one trace + compile + scan per cell.
 This module batches *heterogeneous* cells instead:
 
-  1. **Bucketing** — cells are grouped by their padded static shapes
+  1. **Quantization** — cells are described by their padded static shapes
      ``(ticks, adaptive, NC, MSG, F, W)``: conn counts and message-bitmap
-     widths round up to powers of two, failure schedules and watch lists pad
-     to the bucket max.  Within a bucket every cell compiles to the *same*
-     jaxpr, so the whole bucket is one ``lax.scan``.
-  2. **Neutral padding** — padded conns never start (start tick 2^29) and
-     padded failure rows are never active (start == end == 0); the derived
-     static sizes a padded table would perturb (per-conn bitmap width,
-     host round-robin width) are pinned via ``SimConfig.msg_slots`` /
-     ``conns_per_host`` so the *serial reference* (``serial_sim``) builds
-     bit-identical shapes.  Every sweep row is bit-identical to
-     ``Simulator.run`` on that reference (tests/test_sweep.py).
-  3. **LB dispatch** — cells that differ only in load balancer share the
+     widths round up to powers of two, failure schedules drop events that
+     are provably dead before the horizon (``failures.truncate_dead``) and
+     pad to the bucket max, watch lists pad to the bucket max.  Within a
+     bucket every cell compiles to the *same* jaxpr, so the whole bucket is
+     one ``lax.scan``.
+  2. **Cost-aware packing** (``pack``) — pure, host-side, inspectable:
+
+     * *merge*: shape groups whose padded union costs at most
+       ``PackerConfig.waste_budget`` more than the sum of their native
+       costs fuse into one bucket (greedy lowest-waste pair first).  The
+       cost model (``est_row_tick_cost``) is a gather/scatter footprint
+       proxy: packet-table slots + per-conn bitmaps + event one-hots +
+       schedule/watch rows, times the tick horizon.  Merging may fuse
+       *different tick horizons*: the bucket scans to the max and each row
+       freezes bit-exactly at its own horizon (see 4).
+     * *split*: groups larger than ``max_rows_per_bucket`` rows split into
+       equal-capacity sub-buckets (cells stay atomic).  Sub-buckets of one
+       group share padded shapes *and* padded row count, so they reuse one
+       compiled program — splitting bounds device memory, not compiles.
+     * *device alignment*: bucket rows pad to a multiple of the sweep mesh
+       so ``shard_map`` assigns every device the same row count (rows of a
+       bucket cost the same, so equal rows ⇒ balanced cost).
+
+     The resulting ``PackPlan`` (→ ``SweepEngine.plan``) is a dataclass
+     tree that tests and benchmarks assert on: cell→bucket coverage,
+     per-bucket ``merge_waste``, pad rows, device row assignment.
+  3. **Neutral padding** — padded conns never start (start tick 2^29),
+     padded failure rows are inert (start == end == 0; semantics and the
+     never-resurrect invariant live on ``FailureSchedule``), and the
+     derived static sizes a padded table would perturb are pinned via
+     ``SimConfig.msg_slots`` / ``conns_per_host`` / ``failure_slots`` so
+     the *serial reference* (``serial_sim``) builds bit-identical shapes.
+     Every sweep row is bit-identical to ``Simulator.run`` on that
+     reference (tests/test_sweep.py, tests/test_figure_parity.py).
+  4. **Per-row horizons** — when a bucket fuses cells with different tick
+     horizons, each row carries its own horizon and the scan body freezes
+     the row's carry once ``tick >= horizon`` (a ``where`` on every state
+     leaf; skipped entirely for homogeneous buckets).  A frozen row is
+     bit-identical to stopping its serial run at that tick.
+  5. **LB dispatch** — cells that differ only in load balancer share the
      bucket through ``SwitchLB``: one ``lax.switch`` branch index per row
      selects the variant, so ECMP/OPS/REPS columns cost one compilation.
      In-network adaptive LBs change the routing function (a static
-     property) and bucket separately.
-  4. **(scenario, seed) vmap + device sharding** — rows are the product of
+     property) and never merge with endpoint LBs.
+  6. **(scenario, seed) vmap + device sharding** — rows are the product of
      cells and seeds; ``Simulator.step_scenario`` vmaps over the row axis
      and, when more than one device is visible, rows shard across a 1-D
      ``shard_map`` mesh (CPU CI materializes devices with
      ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
-  5. **Donated chunked execution** — the scan carry is donated per chunk
-     and trace chunks stream to the host, so long sweeps never hold the
-     full (ticks, rows, ...) trace on device.  ``collect="none"`` drops
-     trace emission entirely (the scan carries no ys), which is the fast
-     path benchmarks use.
+  7. **Donated chunked execution** — the scan carry is donated per chunk
+     and trace chunks stream to the host; ``collect="none"`` drops trace
+     emission entirely (the fast path benchmarks use), and quiescence
+     early exit skips post-fixed-point chunks without changing any
+     reported metric.
 
 Example (one compiled call per shape bucket, not per cell):
 
     cases = [SweepCase(f"fig02/{w}/{lb}", wl, lb, ticks=4000)
              for w, wl in wls.items() for lb in ("ecmp", "ops", "reps")]
-    result = SweepEngine(cfg, cases).run()
+    eng = SweepEngine(cfg, cases)
+    print(eng.plan.describe())
+    result = eng.run()
     for name, summaries in result.summaries().items(): ...
 """
 from __future__ import annotations
@@ -51,11 +82,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.load_balancers import SwitchLB, make_lb
-from repro.distrib.sharding import SWEEP_AXIS, pad_rows, sweep_mesh
+from repro.distrib.sharding import SWEEP_AXIS, sweep_mesh
 from repro.netsim.config import SimConfig
 from repro.netsim.engine import (
     FailureSchedule, ScenarioArrays, Simulator, SimState, Workload,
 )
+from repro.netsim.failures import truncate_dead
 from repro.netsim.metrics import RunSummary, summarize
 from repro.utils import compat
 
@@ -82,6 +114,356 @@ class SweepCase:
     seeds: tuple[int, ...] = (0,)
 
 
+# ---------------------------------------------------------------------------
+# Cost-aware bucket packer.  Pure host-side planning over quantized cell
+# shapes — no jax, no Simulator construction — so property tests can hammer
+# it with random grids (tests/test_sweep.py).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackerConfig:
+    """Knobs for ``pack``.
+
+    * ``max_rows_per_bucket`` — split threshold: a bucket's (cells × seeds)
+      row count beyond this splits into sub-buckets sharing one compiled
+      program.  A single cell larger than the threshold stays atomic (one
+      oversized bucket).
+    * ``waste_budget`` — max fractional padded-cost overhead a merged
+      bucket may carry over the sum of its members' native costs
+      (``BucketPlan.merge_waste``).  0 disables all padding-for-merging
+      but still fuses bit-identical shapes.
+    * ``merge`` — disable to reproduce pure shape quantization (one bucket
+      per distinct quantized shape, the pre-packer behavior).
+    """
+
+    max_rows_per_bucket: int = 1024
+    waste_budget: float = 0.25
+    merge: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class CellShape:
+    """What the packer sees of a cell: quantized static shapes + row count.
+
+    ``nc``/``msg``/``f``/``w`` are the cell's *own* padded sizes (pow2
+    conns, pow2 message bitmap, live failure rows, watch rows); ``rows`` is
+    its seed count.  Merging never mutates a CellShape — native costs are
+    always measured on these original shapes.
+
+    ``nc_exact`` is the unquantized conn count.  Grouping and cost compare
+    the pow2 ``nc`` (so near-sized cells land together), but the bucket is
+    finally sized to the *max exact* conn count of its members: conn
+    padding is visible to spraying LBs through their per-conn random draw
+    shapes (jax threefry pairs counter i with i + n/2, so a (480,) draw and
+    a (512,) draw differ everywhere), and shrink-to-fit keeps the largest
+    cell of every bucket — and any solo-shape figure column — bit-identical
+    to a *raw* unpadded serial run, not just to the padded reference.
+    """
+
+    name: str
+    ticks: int
+    adaptive: bool
+    nc: int
+    msg: int
+    f: int
+    w: int
+    rows: int
+    nc_exact: int = 0  # 0 = same as nc
+
+    @property
+    def key(self) -> tuple:
+        return (self.ticks, self.adaptive, self.nc, self.msg, self.f, self.w)
+
+
+def est_row_tick_cost(
+    cfg: SimConfig, nc: int, msg: int, f: int, w: int
+) -> float:
+    """Estimated cost of one row-tick at the given padded shapes.
+
+    The tick body is gather/scatter-bound (engine.py header), so the proxy
+    counts array footprint touched per tick rather than FLOPs: the packed
+    packet table (NP slots, pow2 of conns × max cwnd + host slack), the
+    per-conn message bitmaps (NC × MSG, touched via event scatters at ~1/8
+    density), the feedback/delivery one-hots (MAX_EV ≈ 3·NH events × NC+1
+    segments), and the linear schedule/watch rows.  Only *relative* cost
+    matters — the packer compares merged vs native sums of this estimate.
+    """
+    np_slots = _pow2(nc * cfg.max_cwnd_pkts + 4 * cfg.n_hosts + 64)
+    max_ev = 3 * cfg.n_hosts
+    return float(np_slots + nc * msg / 8.0 + max_ev * (nc + 1) / 8.0 + f + w)
+
+
+def _cell_cost(cfg: SimConfig, s: CellShape) -> float:
+    return s.rows * s.ticks * est_row_tick_cost(cfg, s.nc, s.msg, s.f, s.w)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """One planned bucket: a set of cells sharing padded shapes + horizon.
+
+    ``key = (ticks, adaptive, nc, msg, f, w)`` is the padded union shape;
+    ``group`` identifies the split family — buckets with equal ``group``
+    share padded shapes *and* ``n_padded_rows`` and therefore one compiled
+    program.  ``native_cost`` sums the members' costs at their own
+    quantized shapes/horizons, so ``merge_waste`` isolates the padding
+    overhead the packer accepted to fuse them.
+    """
+
+    key: tuple
+    cells: tuple[str, ...]
+    group: int
+    n_rows: int
+    n_padded_rows: int
+    n_devices: int
+    est_row_cost: float  # one padded row over the full bucket horizon
+    native_cost: float
+
+    @property
+    def ticks(self) -> int:
+        return self.key[0]
+
+    @property
+    def est_cost(self) -> float:
+        return self.n_rows * self.est_row_cost
+
+    @property
+    def merge_waste(self) -> float:
+        """Fractional padded-cost overhead from shape/horizon merging
+        (row padding excluded — see ``pad_rows``)."""
+        return self.est_cost / max(self.native_cost, 1e-9) - 1.0
+
+    @property
+    def pad_rows(self) -> int:
+        return self.n_padded_rows - self.n_rows
+
+    @property
+    def device_rows(self) -> tuple[int, ...]:
+        """Rows per mesh device (shard_map splits the padded row axis
+        evenly; rows of one bucket cost the same, so equal rows ⇒ balanced
+        estimated tick cost)."""
+        per = self.n_padded_rows // self.n_devices
+        return (per,) * self.n_devices
+
+
+@dataclasses.dataclass(frozen=True)
+class PackPlan:
+    """The packer's full output — inspect via ``SweepEngine.plan``."""
+
+    buckets: tuple[BucketPlan, ...]
+    n_devices: int
+    packer: PackerConfig
+
+    @property
+    def n_cells(self) -> int:
+        return sum(len(b.cells) for b in self.buckets)
+
+    @property
+    def n_rows(self) -> int:
+        return sum(b.n_rows for b in self.buckets)
+
+    @property
+    def n_padded_rows(self) -> int:
+        return sum(b.n_padded_rows for b in self.buckets)
+
+    @property
+    def n_groups(self) -> int:
+        return len({b.group for b in self.buckets})
+
+    @property
+    def merge_waste(self) -> float:
+        native = sum(b.native_cost for b in self.buckets)
+        est = sum(b.est_cost for b in self.buckets)
+        return est / max(native, 1e-9) - 1.0
+
+    def group_merge_waste(self) -> dict[int, float]:
+        """Per split-group aggregate waste — the level the budget is
+        enforced at (an individual sub-bucket holding only the group's
+        shortest-horizon cells can sit above it)."""
+        est: dict[int, float] = {}
+        native: dict[int, float] = {}
+        for b in self.buckets:
+            est[b.group] = est.get(b.group, 0.0) + b.est_cost
+            native[b.group] = native.get(b.group, 0.0) + b.native_cost
+        return {
+            g: est[g] / max(native[g], 1e-9) - 1.0 for g in est
+        }
+
+    def describe(self) -> str:
+        lines = [
+            f"PackPlan: {self.n_cells} cells -> {len(self.buckets)} buckets "
+            f"({self.n_groups} compiled programs, {self.n_devices} devices, "
+            f"waste {self.merge_waste:+.1%})"
+        ]
+        for b in self.buckets:
+            t, ad, nc, msg, f, w = b.key
+            lines.append(
+                f"  g{b.group} ticks={t} adaptive={int(ad)} NC={nc} MSG={msg} "
+                f"F={f} W={w} rows={b.n_rows}+{b.pad_rows}pad "
+                f"waste={b.merge_waste:+.1%} cells={list(b.cells)}"
+            )
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class _Group:
+    shapes: list[CellShape]
+
+    def key(self) -> tuple:
+        ks = [s.key for s in self.shapes]
+        return (
+            max(k[0] for k in ks), ks[0][1], max(k[2] for k in ks),
+            max(k[3] for k in ks), max(k[4] for k in ks),
+            max(k[5] for k in ks),
+        )
+
+    def fit_key(self) -> tuple:
+        """The bucket's final key: NC shrunk to the members' max *exact*
+        conn count (see CellShape.nc_exact) — quantized NC is a grouping /
+        cost artifact, not a shape the scan has to pay (or perturb RNG
+        streams) for."""
+        k = self.key()
+        nc_fit = max(max(s.nc_exact or s.nc, 1) for s in self.shapes)
+        return (k[0], k[1], nc_fit, *k[3:])
+
+    def rows(self) -> int:
+        return sum(s.rows for s in self.shapes)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def pack(
+    cfg: SimConfig,
+    shapes: Sequence[CellShape],
+    packer: PackerConfig = PackerConfig(),
+    n_devices: int = 1,
+) -> PackPlan:
+    """Plan buckets for quantized cell shapes (pure; deterministic).
+
+    Guarantees (property-tested):
+      * every cell lands in exactly one bucket;
+      * ``n_rows <= max(max_rows_per_bucket, largest cell) + n_devices - 1``
+        for every bucket (cells are atomic; capacities are device-rounded);
+      * aggregate ``merge_waste <= waste_budget`` for every split group
+        (``PackPlan.group_merge_waste`` — the merge decision's level; a
+        single sub-bucket of a heterogeneous group can sit above it);
+      * ``n_padded_rows`` is a multiple of ``n_devices`` and every device
+        is assigned exactly ``n_padded_rows / n_devices`` rows.
+    """
+    assert n_devices >= 1
+    assert shapes, "need at least one cell"
+    names = [s.name for s in shapes]
+    assert len(set(names)) == len(names), "cell names must be unique"
+
+    # 1. exact-shape grouping (insertion order kept for determinism)
+    by_key: dict[tuple, _Group] = {}
+    for s in shapes:
+        by_key.setdefault(s.key, _Group(shapes=[])).shapes.append(s)
+    groups = list(by_key.values())
+
+    def native(g: _Group) -> float:
+        return sum(_cell_cost(cfg, s) for s in g.shapes)
+
+    def est(key: tuple, rows: int) -> float:
+        t, _ad, nc, msg, f, w = key
+        return rows * t * est_row_tick_cost(cfg, nc, msg, f, w)
+
+    # 2. greedy lowest-waste pairwise merging under the budget.  Group
+    #    key/rows/native are additive under merge, so they are memoized and
+    #    updated incrementally — the pair search is O(1) per pair instead
+    #    of re-summing per-cell costs.
+    keys = [g.key() for g in groups]
+    rows = [g.rows() for g in groups]
+    natives = [native(g) for g in groups]
+
+    def merged_key(a: tuple, b: tuple) -> tuple:
+        return (
+            max(a[0], b[0]), a[1], max(a[2], b[2]), max(a[3], b[3]),
+            max(a[4], b[4]), max(a[5], b[5]),
+        )
+
+    while packer.merge and len(groups) > 1:
+        best = None  # (waste, i, j)
+        for i in range(len(groups)):
+            for j in range(i + 1, len(groups)):
+                if keys[i][1] != keys[j][1]:
+                    continue  # adaptive routing is a static property
+                k = merged_key(keys[i], keys[j])
+                waste = est(k, rows[i] + rows[j]) / max(
+                    natives[i] + natives[j], 1e-9
+                ) - 1.0
+                if waste <= packer.waste_budget and (
+                    best is None or waste < best[0] - 1e-12
+                ):
+                    best = (waste, i, j)
+        if best is None:
+            break
+        _, i, j = best
+        groups[i] = _Group(shapes=groups[i].shapes + groups[j].shapes)
+        keys[i] = merged_key(keys[i], keys[j])
+        rows[i] += rows[j]
+        natives[i] += natives[j]
+        del groups[j], keys[j], rows[j], natives[j]
+
+    # 3. split oversized groups into equal-capacity sub-buckets that share
+    #    one compiled program (same shapes AND same padded row count)
+    buckets: list[BucketPlan] = []
+    for gid, g in enumerate(groups):
+        key = g.fit_key()
+        total = g.rows()
+        max_cell = max(s.rows for s in g.shapes)
+        threshold = max(packer.max_rows_per_bucket, max_cell)
+        n_sub = -(-total // threshold)
+        target = max(-(-total // n_sub), max_cell)
+        cap = _pad_to(target, n_devices)
+        if n_sub == 1:
+            order = list(g.shapes)  # keep submission order
+        else:
+            order = sorted(g.shapes, key=lambda s: (-s.rows, s.name))
+        bins: list[list[CellShape]] = []
+        fill: list[int] = []
+        for s in order:
+            for b_i, used in enumerate(fill):
+                if used + s.rows <= cap:
+                    bins[b_i].append(s)
+                    fill[b_i] += s.rows
+                    break
+            else:
+                bins.append([s])
+                fill.append(s.rows)
+        shared_pad = (
+            _pad_to(max(fill), n_devices) if len(bins) > 1 else None
+        )
+        row_cost = key[0] * est_row_tick_cost(cfg, *key[2:])
+        for cells, used in zip(bins, fill):
+            buckets.append(
+                BucketPlan(
+                    key=key,
+                    cells=tuple(s.name for s in cells),
+                    group=gid,
+                    n_rows=used,
+                    n_padded_rows=(
+                        shared_pad
+                        if shared_pad is not None
+                        else _pad_to(used, n_devices)
+                    ),
+                    n_devices=n_devices,
+                    est_row_cost=row_cost,
+                    native_cost=sum(_cell_cost(cfg, s) for s in cells),
+                )
+            )
+    return PackPlan(
+        buckets=tuple(buckets), n_devices=n_devices, packer=packer
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine-side materialization of a plan.
+# ---------------------------------------------------------------------------
+
+
 def _canon_lb_kwargs(case: SweepCase, cfg: SimConfig) -> dict:
     """LB kwargs with harness defaults resolved — keying on the raw kwargs
     would give `{}` and `{"evs_size": cfg.evs_size}` distinct SwitchLB
@@ -98,13 +480,23 @@ def _variant_key(case: SweepCase, cfg: SimConfig) -> tuple:
 
 def _pad_workload(wl: Workload, nc: int, n_hosts: int) -> Workload:
     """Pad the conn table to ``nc`` rows with inert connections: they never
-    start, depend on nothing, and are spread round-robin over hosts to keep
-    the padded host conn-table width small."""
+    start and depend on nothing.  Pad conns fill the *least-loaded* hosts
+    first, so whenever the padding fits into existing per-host slack the
+    conns_per_host pin equals the unpadded auto width — and the padded row
+    stays bit-identical to a raw (unpinned) serial run, not just to the
+    pinned serial reference."""
     extra = nc - wl.n_conns
     if extra == 0:
         return wl
     assert extra > 0
-    pad_src = (np.arange(extra, dtype=np.int32) % n_hosts).astype(np.int32)
+    counts = np.bincount(
+        wl.src.astype(np.int64), minlength=n_hosts
+    ).astype(np.int64)
+    pad_src = np.empty((extra,), np.int32)
+    for i in range(extra):
+        h = int(np.argmin(counts))  # stable: lowest host id wins ties
+        pad_src[i] = h
+        counts[h] += 1
     return Workload(
         src=np.concatenate([wl.src.astype(np.int32), pad_src]),
         dst=np.concatenate(
@@ -120,20 +512,6 @@ def _pad_workload(wl: Workload, nc: int, n_hosts: int) -> Workload:
             [wl.dep.astype(np.int32), np.full((extra,), -1, np.int32)]
         ),
         name=wl.name,
-    )
-
-
-def _pad_failures(fs: FailureSchedule | None, f: int) -> FailureSchedule:
-    """Pad to ``f`` rows with never-active events (start == end == 0)."""
-    fs = fs or FailureSchedule.none()
-    extra = f - len(fs.queue)
-    assert extra >= 0
-    z = np.zeros((extra,), np.int32)
-    return FailureSchedule(
-        queue=np.concatenate([fs.queue.astype(np.int32), z]),
-        start=np.concatenate([fs.start.astype(np.int32), z]),
-        end=np.concatenate([fs.end.astype(np.int32), z]),
-        kind=np.concatenate([fs.kind.astype(np.int32), z]),
     )
 
 
@@ -169,24 +547,59 @@ class _Cell:
 
 
 @dataclasses.dataclass
-class _Bucket:
-    key: tuple
-    ticks: int
+class _Program:
+    """One compiled scan family: all sub-buckets of a split group share it
+    (identical padded shapes, padded row count, SwitchLB variant set)."""
+
+    group: int
     cfg: SimConfig  # shape-pinned bucket config
     lb: SwitchLB
-    cells: list[_Cell]
     sim: Simulator
+    masked: bool  # rows carry heterogeneous horizons
+    variant_order: list  # one (lb, kwargs) key per SwitchLB branch
+    padded_wls: dict  # cell name -> group-padded Workload
+    chunk_fns: dict = dataclasses.field(default_factory=dict)
+    quiescent_fn: Any = None
+
+
+@dataclasses.dataclass
+class _Bucket:
+    plan: BucketPlan
+    program: _Program
+    cells: list[_Cell]
     n_rows: int
     # stacked per-row inputs
     keys: jax.Array  # (R, key)
     scn: ScenarioArrays  # leaves (R, ...)
     branch_idx: np.ndarray  # (R,)
+    horizons: np.ndarray  # (R,) per-row tick horizon
     # filled by run()
     final_state: Any = None  # host-side SimState, leaves (R, ...)
     traces: Any = None  # host-side TickTrace, leaves (ticks, R, ...) or None
     exec_wall_s: float = 0.0
     compile_wall_s: float = 0.0
     ticks_run: int = 0  # == ticks unless early exit fired sooner
+
+    # compat accessors (benchmarks read these off result buckets)
+    @property
+    def key(self) -> tuple:
+        return self.plan.key
+
+    @property
+    def ticks(self) -> int:
+        return self.plan.ticks
+
+    @property
+    def cfg(self) -> SimConfig:
+        return self.program.cfg
+
+    @property
+    def lb(self) -> SwitchLB:
+        return self.program.lb
+
+    @property
+    def sim(self) -> Simulator:
+        return self.program.sim
 
 
 class SweepResult:
@@ -195,6 +608,7 @@ class SweepResult:
     def __init__(self, engine: "SweepEngine"):
         self._engine = engine
         self.buckets = engine.buckets
+        self.plan = engine.plan
         self.exec_wall_s = sum(b.exec_wall_s for b in self.buckets)
         self.compile_wall_s = sum(b.compile_wall_s for b in self.buckets)
 
@@ -214,7 +628,12 @@ class SweepResult:
         b, c = self._find(name)
         assert b.traces is not None, "run with collect='full' to keep traces"
         row = c.rows[seed_idx]
-        return jax.tree_util.tree_map(lambda x: x[:, row], b.traces)
+        # rows of a horizon-merged bucket freeze at their own horizon; the
+        # trace past it is that frozen state re-observed, so expose only
+        # the cell's own window.
+        return jax.tree_util.tree_map(
+            lambda x: x[: c.case.ticks, row], b.traces
+        )
 
     def summaries(self) -> dict[str, list[RunSummary]]:
         """Per-cell summaries (one per seed), sliced from the single
@@ -238,8 +657,8 @@ class SweepResult:
 
 
 class SweepEngine:
-    """Buckets a list of SweepCases and runs each bucket as one compiled,
-    row-sharded, donated-carry scan."""
+    """Packs a list of SweepCases into cost-aware buckets and runs each as
+    one compiled, row-sharded, donated-carry scan."""
 
     def __init__(
         self,
@@ -247,6 +666,7 @@ class SweepEngine:
         cases: Sequence[SweepCase],
         devices: int | str | None = "auto",
         min_conn_bucket: int = 8,
+        packer: PackerConfig | None = None,
     ):
         self.cfg = cfg
         self.cases = list(cases)
@@ -257,7 +677,19 @@ class SweepEngine:
             self.mesh = None
         else:
             self.mesh = sweep_mesh(int(devices))
+        self.n_devices = (
+            self.mesh.shape[SWEEP_AXIS] if self.mesh is not None else 1
+        )
         self.min_conn_bucket = min_conn_bucket
+        self.packer = packer or PackerConfig()
+        self._default_watch_arr = self._default_watch()
+        self.plan = pack(
+            cfg,
+            [self._quantize(c) for c in self.cases],
+            self.packer,
+            self.n_devices,
+        )
+        self.programs: dict[int, _Program] = {}
         self.buckets = self._build_buckets()
 
     # ------------------------------------------------------------------
@@ -269,77 +701,124 @@ class SweepEngine:
             topo.t0_up_queues(0)[: self.cfg.n_watch_queues], np.int32
         )
 
+    def _watch_for(self, case: SweepCase) -> np.ndarray:
+        if case.watch_queues is None:
+            return self._default_watch_arr
+        return np.asarray(case.watch_queues, np.int32)
+
+    def _live_failures(self, case: SweepCase) -> FailureSchedule:
+        return truncate_dead(
+            case.failures or FailureSchedule.none(), case.ticks
+        )
+
+    def _quantize(self, case: SweepCase) -> CellShape:
+        cfg = self.cfg
+        variant = make_lb(case.lb, **_canon_lb_kwargs(case, cfg))
+        wl = case.workload
+        msg_max = int(wl.msg_pkts.max()) if wl.n_conns else 1
+        return CellShape(
+            name=case.name,
+            ticks=case.ticks,
+            adaptive=variant.switch_adaptive,
+            nc=_pow2(max(wl.n_conns, self.min_conn_bucket)),
+            msg=int(min(cfg.max_msg_pkts, max(_pow2(max(msg_max, 2)), 2))),
+            f=_pow2(max(len(self._live_failures(case)), 1)),
+            w=_pow2(max(len(self._watch_for(case)), 1)),
+            rows=len(case.seeds),
+            nc_exact=max(wl.n_conns, 1),
+        )
+
+    # ------------------------------------------------------------------
     def _build_buckets(self) -> list[_Bucket]:
         cfg = self.cfg
-        default_watch = self._default_watch()
-        groups: dict[tuple, list[tuple[SweepCase, Any]]] = {}
-        for case in self.cases:
-            variant = make_lb(case.lb, **_canon_lb_kwargs(case, cfg))
-            wl = case.workload
-            msg_max = int(wl.msg_pkts.max()) if wl.n_conns else 1
-            nc_b = _pow2(max(wl.n_conns, self.min_conn_bucket))
-            msg_b = int(
-                min(cfg.max_msg_pkts, max(_pow2(max(msg_max, 2)), 2))
+        by_name = {c.name: c for c in self.cases}
+        # group-level shape/variant context (shared by all sub-buckets)
+        group_cases: dict[int, list[SweepCase]] = {}
+        for bp in self.plan.buckets:
+            group_cases.setdefault(bp.group, []).extend(
+                by_name[n] for n in bp.cells
             )
-            n_fail = len(case.failures.queue) if case.failures else 0
-            f_b = _pow2(max(n_fail, 1))
-            watch = (
-                default_watch
-                if case.watch_queues is None
-                else np.asarray(case.watch_queues, np.int32)
+        for gid, members in group_cases.items():
+            self.programs[gid] = self._build_program(
+                gid,
+                next(bp for bp in self.plan.buckets if bp.group == gid),
+                members,
             )
-            w_b = _pow2(max(len(watch), 1))
-            key = (case.ticks, variant.switch_adaptive, nc_b, msg_b, f_b, w_b)
-            groups.setdefault(key, []).append((case, variant, watch))
-        buckets = []
-        for key, members in groups.items():
-            buckets.append(self._build_bucket(key, members))
-        return buckets
+        return [self._build_bucket(bp, by_name) for bp in self.plan.buckets]
 
-    def _build_bucket(self, key: tuple, members) -> _Bucket:
-        ticks, _adaptive, nc_b, msg_b, f_b, w_b = key
+    def _build_program(
+        self, gid: int, bp: BucketPlan, members: list[SweepCase]
+    ) -> _Program:
+        ticks_b, _adaptive, nc_b, msg_b, f_b, _w_b = bp.key
         cfg = self.cfg
 
         # one SwitchLB branch per distinct (lb name, kwargs) spec
         variant_order: list[tuple] = []
         variants = []
-        for case, variant, _watch in members:
+        for case in members:
             vk = _variant_key(case, cfg)
             if vk not in variant_order:
                 variant_order.append(vk)
-                variants.append(variant)
-
-        cells: list[_Cell] = []
-        for case, _variant, watch in members:
-            cells.append(
-                _Cell(
-                    case=case,
-                    padded_wl=_pad_workload(case.workload, nc_b, cfg.n_hosts),
-                    padded_fs=_pad_failures(case.failures, f_b),
-                    padded_watch=_pad_watch(watch, w_b),
-                    branch=variant_order.index(_variant_key(case, cfg)),
+                variants.append(
+                    make_lb(case.lb, **_canon_lb_kwargs(case, cfg))
                 )
-            )
 
         # pin the derived static sizes the padded tables would otherwise
         # perturb, so serial references share bit-identical shapes
         cph_b = 1
-        for c in cells:
-            counts = np.bincount(c.padded_wl.src, minlength=cfg.n_hosts)
+        padded_wls = {}
+        for case in members:
+            pwl = _pad_workload(case.workload, nc_b, cfg.n_hosts)
+            padded_wls[case.name] = pwl
+            counts = np.bincount(pwl.src, minlength=cfg.n_hosts)
             cph_b = max(cph_b, int(counts.max()))
-        cfg_b = cfg.replace(msg_slots=msg_b, conns_per_host=cph_b)
-
-        lb = SwitchLB(variants)
-        sim = Simulator(
-            cfg_b,
-            cells[0].padded_wl,
-            lb,
-            failures=cells[0].padded_fs,
-            watch_queues=cells[0].padded_watch,
-            seed=int(cells[0].case.seeds[0]),
+        cfg_b = cfg.replace(
+            msg_slots=msg_b, conns_per_host=cph_b, failure_slots=f_b
         )
 
-        # rows = cells × seeds, padded to a multiple of the mesh size by
+        lb = SwitchLB(variants)
+        first = members[0]
+        sim = Simulator(
+            cfg_b,
+            padded_wls[first.name],
+            lb,
+            failures=self._live_failures(first).pad_to(f_b),
+            watch_queues=_pad_watch(self._watch_for(first), bp.key[5]),
+            seed=int(first.seeds[0]),
+        )
+        return _Program(
+            group=gid,
+            cfg=cfg_b,
+            lb=lb,
+            sim=sim,
+            masked=any(case.ticks < ticks_b for case in members),
+            variant_order=variant_order,
+            padded_wls=padded_wls,
+        )
+
+    def _build_bucket(
+        self, bp: BucketPlan, by_name: dict[str, SweepCase]
+    ) -> _Bucket:
+        f_b, w_b = bp.key[4], bp.key[5]
+        prog = self.programs[bp.group]
+        cfg = self.cfg
+
+        cells: list[_Cell] = []
+        for name in bp.cells:
+            case = by_name[name]
+            cells.append(
+                _Cell(
+                    case=case,
+                    padded_wl=prog.padded_wls[name],
+                    padded_fs=self._live_failures(case).pad_to(f_b),
+                    padded_watch=_pad_watch(self._watch_for(case), w_b),
+                    branch=prog.variant_order.index(
+                        _variant_key(case, cfg)
+                    ),
+                )
+            )
+
+        # rows = cells × seeds, padded to the planned row count by
         # repeating row 0 (discarded on output)
         row_cells: list[tuple[_Cell, int]] = []
         for c in cells:
@@ -347,8 +826,10 @@ class SweepEngine:
                 c.rows.append(len(row_cells))
                 row_cells.append((c, int(s)))
         n_rows = len(row_cells)
-        n_padded = pad_rows(n_rows, self.mesh)
-        row_cells += [row_cells[0]] * (n_padded - n_rows)
+        assert n_rows == bp.n_rows, (n_rows, bp)
+        row_cells += [row_cells[0]] * (bp.n_padded_rows - n_rows)
+
+        cph_b = prog.cfg.conns_per_host
 
         def stack(field_of):
             return jnp.asarray(np.stack([field_of(c, s) for c, s in row_cells]))
@@ -370,16 +851,20 @@ class SweepEngine:
         )
         keys = jnp.stack([jax.random.PRNGKey(s) for _, s in row_cells])
         branch_idx = np.asarray([c.branch for c, _ in row_cells], np.int32)
+        horizons = np.asarray(
+            [c.case.ticks for c, _ in row_cells], np.int32
+        )
         return _Bucket(
-            key=key, ticks=ticks, cfg=cfg_b, lb=lb, cells=cells, sim=sim,
-            n_rows=n_rows, keys=keys, scn=scn, branch_idx=branch_idx,
+            plan=bp, program=prog, cells=cells, n_rows=n_rows,
+            keys=keys, scn=scn, branch_idx=branch_idx, horizons=horizons,
         )
 
     # ------------------------------------------------------------------
     def serial_sim(self, name: str, seed: int | None = None) -> Simulator:
         """The serial reference for a cell: a plain Simulator built on the
         same padded scenario and shape-pinned config the sweep row ran —
-        ``serial_sim(name).run(ticks)`` is bit-identical to the sweep row."""
+        ``serial_sim(name).run(case.ticks)`` is bit-identical to the sweep
+        row (which froze at exactly that horizon in a merged bucket)."""
         for b in self.buckets:
             for c in b.cells:
                 if c.case.name == name:
@@ -404,16 +889,31 @@ class SweepEngine:
             lb_state=(jnp.asarray(bucket.branch_idx), variant_states)
         )
 
-    def _make_chunk_fn(self, bucket: _Bucket, n: int, collect: str):
+    def _make_chunk_fn(self, prog: _Program, n: int, collect: str):
         """Compiled runner for one chunk of ``n`` ticks: carries donated
-        states, returns (states, traces-or-None)."""
-        sim = bucket.sim
+        states, returns (states, traces-or-None).  Shared by every bucket
+        of the program's split group (same shapes, same padded rows)."""
+        sim = prog.sim
         vstep = jax.vmap(sim.step_scenario, in_axes=(0, None, 0, 0))
         full = collect == "full"
+        masked = prog.masked
 
-        def body(states, keys, scn, t0):
+        def body(states, keys, scn, horizon, t0):
             def tick(carry, t):
                 new_carry, tr = vstep(carry, t, keys, scn)
+                if masked:
+                    # freeze rows past their own horizon: bit-identical to
+                    # stopping that row's serial run at `horizon` ticks
+                    live = t < horizon  # (R,)
+                    new_carry = jax.tree_util.tree_map(
+                        lambda new, old: jnp.where(
+                            live.reshape((-1,) + (1,) * (new.ndim - 1)),
+                            new,
+                            old,
+                        ),
+                        new_carry,
+                        carry,
+                    )
                 return new_carry, (tr if full else None)
 
             ticks = t0 + jnp.arange(n, dtype=jnp.int32)
@@ -423,36 +923,41 @@ class SweepEngine:
             body = compat.shard_map(
                 body,
                 self.mesh,
-                in_specs=(P(SWEEP_AXIS), P(SWEEP_AXIS), P(SWEEP_AXIS), P()),
+                in_specs=(
+                    P(SWEEP_AXIS), P(SWEEP_AXIS), P(SWEEP_AXIS),
+                    P(SWEEP_AXIS), P(),
+                ),
                 out_specs=(P(SWEEP_AXIS), P(None, SWEEP_AXIS) if full else P()),
                 check_vma=False,
             )
         return jax.jit(body, donate_argnums=(0,))
 
-    def _make_quiescent_fn(self, bucket: _Bucket):
+    def _make_quiescent_fn(self, prog: _Program):
         """Per-row fixed-point detector.  A row is quiescent when no packet
         slot is allocated (covers FLYING/QUEUED/ACK/NACK/LOST_WAIT — every
         live state holds a slot until consumed) and no connection that can
-        still start within the horizon has work left.  Once both hold,
+        still start within the row's horizon has work left — or when the
+        row is already past its horizon (frozen).  Once all rows hold,
         every later tick is a no-op for packet/conn/stat state, so the
         remaining scan chunks can be skipped without changing any reported
         result (only time-keeping LB internals, e.g. PLB epoch clocks,
         would have kept advancing).
         """
-        NP = bucket.sim.NP
+        NP = prog.sim.NP
 
-        def f(states: SimState, scn: ScenarioArrays, end_tick):
+        def f(states: SimState, scn: ScenarioArrays, horizon, offset):
             no_pkts = states.fl_count == NP  # (R,)
             dep = jnp.clip(scn.conn_dep, 0, scn.conn_src.shape[-1] - 1)
             dep_ok = (scn.conn_dep < 0) | jnp.take_along_axis(
                 states.c_done, dep, axis=-1
             )
-            startable = (scn.conn_start < end_tick) & dep_ok
+            startable = (scn.conn_start < horizon[:, None]) & dep_ok
             has_work = (states.c_rtx_count > 0) | (
                 states.c_next_new < scn.conn_msg
             )
             active = startable & ~states.c_done & has_work
-            return jnp.all(no_pkts & ~jnp.any(active, axis=-1))
+            quiet = no_pkts & ~jnp.any(active, axis=-1)
+            return jnp.all(quiet | (offset >= horizon))
 
         return jax.jit(f)
 
@@ -487,6 +992,7 @@ class SweepEngine:
         self, bucket: _Bucket, collect: str, chunk: int | None,
         early_exit: bool = False,
     ):
+        prog = bucket.program
         ticks = bucket.ticks
         if chunk is None:
             # early exit needs chunk boundaries to act on
@@ -498,13 +1004,20 @@ class SweepEngine:
 
         t_c0 = time.time()
         states = self._init_states(bucket)
-        # AOT-compile each distinct chunk length (usually 1-2) untimed
-        compiled: dict[int, Any] = {}
+        horizons = jnp.asarray(bucket.horizons)
         t0 = jnp.zeros((), jnp.int32)
+        # AOT-compile each distinct chunk length (usually 1-2) untimed;
+        # sub-buckets of a split group share the compiled executables.
         for n in sorted(set(sizes)):
-            fn = self._make_chunk_fn(bucket, n, collect)
-            compiled[n] = fn.lower(states, bucket.keys, bucket.scn, t0).compile()
-        quiescent = self._make_quiescent_fn(bucket) if early_exit else None
+            ck = (n, collect)
+            if ck not in prog.chunk_fns:
+                fn = self._make_chunk_fn(prog, n, collect)
+                prog.chunk_fns[ck] = fn.lower(
+                    states, bucket.keys, bucket.scn, horizons, t0
+                ).compile()
+        if early_exit and prog.quiescent_fn is None:
+            prog.quiescent_fn = self._make_quiescent_fn(prog)
+        quiescent = prog.quiescent_fn if early_exit else None
         jax.block_until_ready(states.c_done)
         bucket.compile_wall_s = time.time() - t_c0
 
@@ -512,8 +1025,9 @@ class SweepEngine:
         offset = 0
         t_e0 = time.time()
         for n in sizes:
-            states, traces = compiled[n](
-                states, bucket.keys, bucket.scn, jnp.asarray(offset, jnp.int32)
+            states, traces = prog.chunk_fns[(n, collect)](
+                states, bucket.keys, bucket.scn, horizons,
+                jnp.asarray(offset, jnp.int32),
             )
             offset += n
             if collect == "full":
@@ -521,7 +1035,10 @@ class SweepEngine:
                 # than `chunk` ticks of trace
                 trace_chunks.append(jax.device_get(traces))
             if quiescent is not None and offset < ticks and bool(
-                quiescent(states, bucket.scn, jnp.asarray(ticks, jnp.int32))
+                quiescent(
+                    states, bucket.scn, horizons,
+                    jnp.asarray(offset, jnp.int32),
+                )
             ):
                 break
         jax.block_until_ready(states.c_done)

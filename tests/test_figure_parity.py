@@ -1,0 +1,104 @@
+"""Golden sweep-vs-serial parity for the migrated figure grids.
+
+Every grid figure now rides the figure→sweep-batch path
+(benchmarks.common.figure_grid → repro.netsim.sweep): this suite rebuilds
+each figure's BENCH_SMOKE cell list at the CI-scale FATTREE_32_CI config
+with proportionally shrunk tick horizons (heterogeneity preserved, so the
+horizon-merge machinery is exercised) and runs it exactly like the
+benchmark harness (``collect="none"`` + quiescence early exit).  Every cell
+must be bit-identical to a serial ``Simulator.run`` on its padded reference
+(``serial_sim``), and every figure must plan into at most 4 bucket scans —
+the acceptance shape for fig04/fig07/fig08.
+
+fig02's cell family is covered by tests/test_sweep.py (same shapes); this
+file owns the figures migrated on top of the cost-aware packer: fig03,
+fig04, fig05, fig06, fig07, fig08.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+import benchmarks.fig03_asym_micro as fig03
+import benchmarks.fig04_asym_macro as fig04
+import benchmarks.fig05_background as fig05
+import benchmarks.fig06_failures_micro as fig06
+import benchmarks.fig07_failures_macro as fig07
+import benchmarks.fig08_extreme as fig08
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.netsim import SweepEngine
+
+CFG = FATTREE_32_CI
+
+
+def _shrink(cases, factor=16, floor=300):
+    """Scale each cell's horizon down for CI (relative heterogeneity is
+    preserved so multi-horizon figures still bucket/merge like the full
+    runs) and pin the seed axis to the golden seed."""
+    return [
+        dataclasses.replace(c, ticks=max(floor, c.ticks // factor),
+                            seeds=(0,))
+        for c in cases
+    ]
+
+
+def _run_and_check(cases, max_buckets=4):
+    """The figure_grid execution path (collect='none', early exit) with a
+    bit-exactness check of every cell against its serial reference."""
+    eng = SweepEngine(CFG, cases)
+    assert len(eng.buckets) <= max_buckets, eng.plan.describe()
+    res = eng.run(collect="none", early_exit=True)
+    for c in cases:
+        ref = eng.serial_sim(c.name)
+        st, _ = ref.run(c.ticks)
+        jax.block_until_ready(st.c_done)
+        sw = res.state_for(c.name)
+        for field in ("c_done_tick", "c_delivered", "s_stats", "q_served"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st, field)), getattr(sw, field),
+                err_msg=f"{c.name}:{field}",
+            )
+    return eng, res
+
+
+def test_fig04_smoke_parity():
+    """Asymmetry macro grid: 2 workloads x 3 LBs over degraded uplinks in
+    one bucket scan, every cell bit-identical to its serial reference."""
+    eng, _ = _run_and_check(_shrink(fig04.cases(CFG, smoke=True)))
+    # the synthetic block shares one compiled scan
+    assert eng.plan.n_groups <= 2, eng.plan.describe()
+
+
+def test_fig07_smoke_parity():
+    """Failure macro grid: permutation + ring-AllReduce blocks (different
+    conn counts AND horizons) in <= 4 scans, bit-exact per cell."""
+    _run_and_check(_shrink(fig07.cases(CFG, smoke=True)))
+
+
+def test_fig08_smoke_parity():
+    """Extreme-failure grid: the failure-fraction axis (F shapes 2^k) must
+    fuse into ONE bucket under the default waste budget, bit-exact."""
+    eng, _ = _run_and_check(_shrink(fig08.cases(CFG, smoke=True)))
+    assert len(eng.buckets) == 1, eng.plan.describe()
+    assert eng.plan.merge_waste <= 0.05
+
+
+def test_fig03_smoke_parity():
+    """Asymmetric micro: watch-list cells (degraded uplink share metric)
+    ride one bucket; q_served parity guarantees the derived share."""
+    eng, _ = _run_and_check(_shrink(fig03.cases(CFG, smoke=True)))
+    assert len(eng.buckets) == 1
+
+
+def test_fig05_smoke_parity():
+    """Mixed-cohort cells (registry-backed MixedLB) share one lax.switch
+    scan; c_done_tick parity guarantees the derived cohort FCTs."""
+    eng, _ = _run_and_check(_shrink(fig05.cases(CFG, smoke=True)))
+    assert len(eng.buckets) == 1
+
+
+def test_fig06_smoke_parity():
+    """Transient-failure micro grid stays a single bucket with bit-exact
+    cells after the packer rewrite."""
+    eng, _ = _run_and_check(_shrink(fig06.cases(CFG, smoke=True)))
+    assert len(eng.buckets) == 1

@@ -2,17 +2,30 @@
 to serial ``Simulator.run`` on the padded serial reference (`serial_sim`),
 per cell and per seed — across buckets, SwitchLB branches, failure padding,
 chunked trace streaming, and quiescence early exit.  Plus conservation
-invariants for the AI-collective workloads."""
+invariants for the AI-collective workloads, property tests for the
+cost-aware bucket packer (``pack``), and failure-schedule padding /
+truncation edge cases (golden figure-grid parity lives in
+tests/test_figure_parity.py)."""
 import jax
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis; shim keeps tests live
+    from _hypothesis_fallback import given, settings, st
+
 from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.core import make_lb
 from repro.netsim import (
-    SweepCase, SweepEngine, Topology, failures, workloads,
+    CellShape, FailureSchedule, PackerConfig, Simulator, SweepCase,
+    SweepEngine, Topology, failures, pack, workloads,
 )
 
 CFG = FATTREE_32_CI
+# pure shape quantization (no cost-aware merging): these tests assert on
+# *distinct* shape buckets; the packer itself is covered further down.
+NO_MERGE = PackerConfig(merge=False)
 
 
 def _case(name, wl, lb, ticks, fs=None, seeds=(0,), **lb_kwargs):
@@ -51,7 +64,7 @@ def test_sweep_parity_across_buckets_and_lbs():
         _case("perm/reps", wl_p, "reps", 500),
         _case("incast/reps", wl_i, "reps", 500),
     ]
-    eng = SweepEngine(CFG, cases)
+    eng = SweepEngine(CFG, cases, packer=NO_MERGE)
     assert len(eng.buckets) >= 2, "expected distinct shape buckets"
     res = eng.run(collect="full", chunk=200)
     for c in cases:
@@ -130,7 +143,7 @@ def test_collectives_conservation_and_sweep_parity():
         "alltoall": workloads.alltoall(8, 4, window=2),
     }
     cases = [_case(f"coll/{k}", wl, "reps", ticks) for k, wl in wls.items()]
-    eng = SweepEngine(CFG, cases)
+    eng = SweepEngine(CFG, cases, packer=NO_MERGE)
     assert len(eng.buckets) >= 2
     res = eng.run(collect="none")
     sums = res.summaries()
@@ -162,3 +175,241 @@ def test_sweep_engine_rejects_full_traces_with_early_exit():
     eng = SweepEngine(CFG, [_case("x", wl, "ops", 100)])
     with pytest.raises(AssertionError):
         eng.run(collect="full", early_exit=True)
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware bucket packer: pure-plan property tests (no jax execution).
+# ---------------------------------------------------------------------------
+
+GRID = st.lists(
+    st.tuples(
+        st.integers(1, 20),  # ticks / 100
+        st.booleans(),  # adaptive
+        st.integers(0, 5),  # log2(nc / 8)
+        st.integers(1, 8),  # log2 msg
+        st.integers(0, 6),  # log2 f
+        st.integers(0, 4),  # log2 w
+        st.integers(1, 5),  # rows (seeds)
+    ),
+    min_size=1,
+    max_size=24,
+)
+PACKER_SPEC = st.tuples(
+    st.integers(4, 64),  # max_rows_per_bucket
+    st.integers(0, 3),  # waste budget index
+    st.booleans(),  # merge on/off
+)
+BUDGETS = [0.0, 0.1, 0.25, 1.0]
+
+
+@settings(max_examples=80, deadline=None)
+@given(GRID, PACKER_SPEC, st.integers(0, 2))
+def test_packer_plan_properties(grid, packer_spec, ndev_log2):
+    """Random cell grids: the plan covers every cell exactly once, no
+    bucket exceeds the (device-rounded, atomic-cell) split threshold,
+    per-bucket merge waste stays under budget, and device row-assignment
+    is exactly balanced with shared padded shapes per split group."""
+    max_rows, b_i, merge = packer_spec
+    pc = PackerConfig(
+        max_rows_per_bucket=max_rows, waste_budget=BUDGETS[b_i], merge=merge
+    )
+    n_devices = 2**ndev_log2
+    shapes = [
+        CellShape(
+            name=f"c{i}", ticks=100 * t, adaptive=ad, nc=8 << k_nc,
+            msg=2 << k_msg, f=1 << k_f, w=1 << k_w, rows=rows,
+            nc_exact=8 << k_nc,
+        )
+        for i, (t, ad, k_nc, k_msg, k_f, k_w, rows) in enumerate(grid)
+    ]
+    plan = pack(FATTREE_32_CI, shapes, pc, n_devices)
+
+    # coverage: every cell in exactly one bucket, all rows accounted for
+    seen = [n for b in plan.buckets for n in b.cells]
+    assert sorted(seen) == sorted(s.name for s in shapes)
+    assert plan.n_rows == sum(s.rows for s in shapes)
+
+    by_name = {s.name: s for s in shapes}
+    groups: dict = {}
+    for b in plan.buckets:
+        groups.setdefault(b.group, []).append(b)
+        members = [by_name[n] for n in b.cells]
+        # members fit the bucket shape; adaptive never mixes
+        assert len({m.adaptive for m in members}) == 1
+        for m in members:
+            t, _ad, nc, msg, f, w = b.key
+            assert m.ticks <= t and m.nc_exact <= nc
+            assert m.msg <= msg and m.f <= f and m.w <= w
+        # device alignment: equal rows on every device
+        assert b.n_padded_rows % n_devices == 0
+        assert b.n_padded_rows >= b.n_rows
+        dr = b.device_rows
+        assert len(dr) == n_devices and max(dr) == min(dr)
+
+    # padding waste within budget at the split-group level (where the
+    # merge decision was taken)
+    for gid, waste in plan.group_merge_waste().items():
+        assert waste <= pc.waste_budget + 1e-9, (gid, waste)
+
+    for bs in groups.values():
+        gmax = max(by_name[n].rows for b in bs for n in b.cells)
+        cap = -(-max(pc.max_rows_per_bucket, gmax) // n_devices) * n_devices
+        for b in bs:
+            # split threshold (device-rounded; single cells stay atomic)
+            assert b.n_rows <= cap, (b, cap)
+            assert b.n_padded_rows <= cap, (b, cap)
+        if len(bs) > 1:
+            # sub-buckets share one compiled program: same padded rows
+            assert len({b.n_padded_rows for b in bs}) == 1
+
+    # deterministic: replanning yields the identical plan
+    assert pack(FATTREE_32_CI, shapes, pc, n_devices) == plan
+
+
+def test_packer_merges_failure_axis_and_rejects_costly_merges():
+    """fig08's shape family (same grid, F varies) fuses into one bucket;
+    a conn-count mismatch with real padding cost does not."""
+    f_axis = [
+        CellShape(f"f{f}", 1000, False, 64, 256, f, 16, 1, nc_exact=64)
+        for f in (8, 16, 32)
+    ]
+    plan = pack(FATTREE_32_CI, f_axis, PackerConfig(), 1)
+    assert len(plan.buckets) == 1
+    assert plan.buckets[0].key[4] == 32
+    assert plan.buckets[0].merge_waste <= 0.01
+
+    nc_axis = [
+        CellShape("big", 4000, False, 64, 256, 1, 16, 3, nc_exact=64),
+        CellShape("small", 4000, False, 8, 128, 1, 16, 3, nc_exact=8),
+    ]
+    plan2 = pack(FATTREE_32_CI, nc_axis, PackerConfig(waste_budget=0.25), 1)
+    assert len(plan2.buckets) == 2
+
+
+# ---------------------------------------------------------------------------
+# Failure-schedule padding / truncation semantics.
+# ---------------------------------------------------------------------------
+
+
+def test_failure_schedule_pad_truncate_validate():
+    """pad_to only appends inert rows, truncate_dead only drops provably
+    dead ones (never clipping an end tick), and the engine rejects the
+    clipped-row shape that would resurrect a link at the clip boundary."""
+    fs = failures.link_down([3, 4], 100, 400)
+    padded = fs.pad_to(8)
+    assert len(padded) == 8
+    padded.validate()
+    for t in (0, 99, 100, 399, 400):
+        live = (np.asarray(fs.start) <= t) & (t < np.asarray(fs.end))
+        live_p = (np.asarray(padded.start) <= t) & (t < np.asarray(padded.end))
+        assert live.sum() == live_p.sum(), t  # pad never changes active-set
+    with pytest.raises(AssertionError):
+        padded.pad_to(4)  # padding never silently drops rows
+
+    mixed = FailureSchedule.concat(
+        failures.link_down([1], 50, failures.FOREVER),  # live, permanent
+        failures.link_down([2], 1000, 2000),  # dead before horizon 600
+    )
+    live = failures.truncate_dead(mixed, 600)
+    assert len(live) == 1 and int(live.queue[0]) == 1
+    assert int(live.end[0]) == failures.FOREVER  # end is never clipped
+
+    clipped = FailureSchedule(
+        queue=np.asarray([1], np.int32), start=np.asarray([5], np.int32),
+        end=np.asarray([5], np.int32), kind=np.asarray([0], np.int32),
+    )
+    with pytest.raises(AssertionError):
+        Simulator(
+            FATTREE_32_CI, workloads.permutation(32, 16, seed=0),
+            make_lb("ops", evs_size=FATTREE_32_CI.evs_size),
+            failures=clipped,
+        )
+
+
+def test_failure_edge_cases_sweep_vs_serial():
+    """Empty schedule, events past the horizon, overlapping down+degraded
+    windows on one queue, and incremental failures at max uplinks: the
+    padded sweep rows agree bit-exactly with the serial path (both the
+    pinned serial reference and a raw unpinned Simulator)."""
+    topo = Topology.build(CFG)
+    q0 = int(topo.t0_up_queues(0)[0])
+    q1 = int(topo.t0_up_queues(1)[0])
+    wl = workloads.permutation(32, 48, seed=2)
+    past = FailureSchedule.concat(
+        failures.link_down([q0], 100, 250),
+        failures.link_down([q1], 5000, failures.FOREVER),  # past horizon
+    )
+    overlap = FailureSchedule.concat(
+        failures.link_down([q0], 100, 300),
+        failures.link_degraded([q0], 200, 450),
+    )
+    incr = failures.incremental_uplink_failures(
+        CFG, 0, CFG.uplinks_per_tor, 60, 40
+    )
+    assert len(incr) == CFG.uplinks_per_tor  # max uplinks of the TOR
+    cases = [
+        _case("e/none", wl, "ops", 500),
+        _case("e/past", wl, "ops", 500, fs=past),
+        _case("e/overlap", wl, "ops", 500, fs=overlap),
+        _case("e/incr", wl, "reps", 500, fs=incr, freezing_timeout=250),
+    ]
+    eng = SweepEngine(CFG, cases)
+    res = eng.run(collect="none")
+    for c in cases:
+        _assert_cell_matches_serial(eng, res, c.name, 500, traces=False)
+    # raw (unpinned) serial agreement: NC/cph/msg pins are no-ops here, so
+    # the sweep row must equal a plain PR 2-style Simulator.run too
+    for name, lb, fs, kw in (
+        ("e/past", "ops", past, {}),
+        ("e/incr", "reps", incr, {"freezing_timeout": 250}),
+    ):
+        raw = Simulator(
+            CFG, wl, make_lb(lb, evs_size=CFG.evs_size, **kw), failures=fs
+        )
+        st, _ = raw.run(500)
+        jax.block_until_ready(st.c_done)
+        sw = res.state_for(name)
+        np.testing.assert_array_equal(
+            np.asarray(st.c_done_tick), sw.c_done_tick[: wl.n_conns]
+        )
+        np.testing.assert_array_equal(np.asarray(st.s_stats), sw.s_stats)
+    # all TOR-0 uplinks eventually down: TOR-0 traffic must suffer
+    s_incr = res.summaries()["e/incr"][0]
+    assert s_incr.drops_fail > 0 or s_incr.completed < wl.n_conns
+
+
+def test_horizon_merge_never_resurrects_failures():
+    """Regression: a short cell with a *permanent* failure fused into a
+    longer bucket must freeze at its own horizon — the link may never come
+    back up inside the cell's observable window, and the row's final state
+    equals the serial run stopped exactly there (clip-style truncation of
+    the schedule would break both)."""
+    topo = Topology.build(CFG)
+    fs = failures.link_down(list(topo.t0_up_queues(0)[:2]), 50, failures.FOREVER)
+    wl = workloads.permutation(32, 48, seed=1)
+    cases = [
+        _case("short/ops", wl, "ops", 300, fs=fs),
+        _case("long/reps", wl, "reps", 900),
+    ]
+    eng = SweepEngine(CFG, cases, packer=PackerConfig(waste_budget=2.0))
+    assert len(eng.buckets) == 1, eng.plan.describe()
+    assert eng.buckets[0].program.masked  # heterogeneous horizons
+    res = eng.run(collect="none")
+    for name, ticks in (("short/ops", 300), ("long/reps", 900)):
+        ref = eng.serial_sim(name)
+        st, _ = ref.run(ticks)
+        jax.block_until_ready(st.c_done)
+        sw = res.state_for(name)
+        for field in ("c_done_tick", "s_stats", "q_served"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st, field)), getattr(sw, field),
+                err_msg=f"{name}:{field}",
+            )
+    # chunked early exit composes with per-row horizons
+    res2 = eng.run(collect="none", early_exit=True, chunk=100)
+    ref = eng.serial_sim("short/ops")
+    st, _ = ref.run(300)
+    jax.block_until_ready(st.c_done)
+    np.testing.assert_array_equal(
+        np.asarray(st.s_stats), res2.state_for("short/ops").s_stats
+    )
