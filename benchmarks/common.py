@@ -30,6 +30,14 @@ FULL = bool(int(os.environ.get("BENCH_FULL", "0")))
 SEEDS = max(1, int(os.environ.get("BENCH_SEEDS", "1")))
 # BENCH_SMOKE=1 shrinks figure mains to a CI-smoke subset (see fig modules).
 SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+# BENCH_COLLECT picks the sweep collection mode for figure grids (also the
+# `--collect` flag of benchmarks.run): "summary" (the default: on-device
+# telemetry sketch channels — figure metrics come from sketches, O(bins)
+# host bytes per row, early-exit compatible), "none" (state summaries
+# only), or "full" (raw trace streams, kept as the parity reference;
+# disables quiescence early exit).
+COLLECT = os.environ.get("BENCH_COLLECT", "summary")
+assert COLLECT in ("none", "summary", "full"), COLLECT
 
 
 def ci_cfg(**kw) -> SimConfig:
@@ -105,18 +113,21 @@ def sweep_case(name, wl, lbn, ticks, cfg, failures=None, watch=None, **lb_kwargs
     )
 
 
-def run_sweep(cfg, cases, packer=None):
+def run_sweep(cfg, cases, packer=None, collect=None):
     """Submit a whole figure as one sweep: a few compiled bucket scans
     instead of one trace+compile+run per (workload, lb) cell.  Compile is
     excluded from exec walls (AOT per bucket, same protocol as run_one).
-    Buckets stop at quiescence (early_exit) — reported metrics are
-    bit-identical to the full horizon, see netsim/sweep.py."""
+    ``collect`` defaults to BENCH_COLLECT; "none" and "summary" stop at
+    quiescence (early_exit) — reported metrics are bit-identical to the
+    full horizon, see netsim/sweep.py — while "full" keeps raw trace
+    streams and must scan every tick."""
+    collect = collect or COLLECT
     eng = SweepEngine(cfg, cases, packer=packer)
-    res = eng.run(collect="none", early_exit=True)
+    res = eng.run(collect=collect, early_exit=collect != "full")
     return eng, res
 
 
-def sweep_rows(rows, res, fmt=None, derive=None):
+def sweep_rows(rows, res, fmt=None, derive=None, collect=None):
     """Emit one row per sweep cell (seed-0 metrics == the serial run).
 
     ``fmt(name, summary) -> str`` picks the derived string per cell
@@ -125,7 +136,9 @@ def sweep_rows(rows, res, fmt=None, derive=None):
     served shares, fig05's cohort FCTs).  Wall attribution: a cell's
     us_per_call is its bucket's exec wall split evenly over the bucket's
     cells; ticks_per_sec stays the fleet-aggregate definition, here
-    bucket-aggregate (rows x ticks over bucket wall).
+    bucket-aggregate (rows x ticks over bucket wall).  ``collect`` stamps
+    the rows with the mode the sweep actually ran under (callers that
+    override the BENCH_COLLECT global must pass it).
     """
     sums = res.summaries()
     for b in res.buckets:
@@ -145,11 +158,13 @@ def sweep_rows(rows, res, fmt=None, derive=None):
                 n_runs=len(c.case.seeds),
                 ticks_per_sec=tps, bucket_rows=b.n_rows,
                 bucket_wall_s=b.exec_wall_s,
+                collect=collect or COLLECT,
             )
     return sums
 
 
-def figure_grid(rows, fig, cfg, cases, fmt=None, derive=None, packer=None):
+def figure_grid(rows, fig, cfg, cases, fmt=None, derive=None, packer=None,
+                collect=None):
     """Run a declarative figure grid (list of SweepCases) as one sweep
     submission and emit its rows plus a ``{fig}/sweep_total`` row.
 
@@ -159,19 +174,48 @@ def figure_grid(rows, fig, cfg, cases, fmt=None, derive=None, packer=None):
     records the plan shape (cells/buckets/compiled programs/merge waste)
     next to aggregate throughput so CI can gate it (±20% median-normalized
     vs the committed BENCH_netsim.json).
+
+    Each bucket additionally emits a ``{fig}/bucket/*`` row pairing its
+    PackPlan key with the *measured* wall clock — bucket_ticks_per_sec and
+    measured_row_tick_us next to the packer's est_row_tick_cost — the
+    measured tick-cost feedback the packer's cost model can be calibrated
+    against (kept out of the CI ticks_per_sec gate: single-bucket walls are
+    noisier than figure aggregates).
     """
-    eng, res = run_sweep(cfg, cases, packer=packer)
-    sweep_rows(rows, res, fmt=fmt, derive=derive)
+    collect = collect or COLLECT
+    eng, res = run_sweep(cfg, cases, packer=packer, collect=collect)
+    sweep_rows(rows, res, fmt=fmt, derive=derive, collect=collect)
     plan = eng.plan
+    for i, b in enumerate(res.buckets):
+        t, ad, nc, msg, f, w = b.plan.key
+        wall = max(b.exec_wall_s, 1e-9)
+        rows.add(
+            f"{fig}/bucket/g{b.plan.group}.{i}", b.exec_wall_s * 1e6,
+            f"key=t{t}.ad{int(ad)}.nc{nc}.msg{msg}.f{f}.w{w};"
+            f"rows={b.n_rows}+{b.plan.pad_rows}pad;cells={len(b.cells)};"
+            f"ticks_run={b.ticks_run}",
+            bucket_key=list(b.plan.key),
+            bucket_group=b.plan.group,
+            ticks_run=b.ticks_run,
+            bucket_rows=b.n_rows,
+            padded_rows=b.plan.n_padded_rows,
+            bucket_ticks_per_sec=b.ticks_run * b.n_rows / wall,
+            measured_row_tick_us=(
+                wall * 1e6 / max(b.ticks_run * b.plan.n_padded_rows, 1)
+            ),
+            est_row_tick_cost=b.plan.est_row_cost / max(b.plan.ticks, 1),
+            collect=collect,
+        )
     agg_ticks = sum(b.ticks_run * b.n_rows for b in res.buckets)
     rows.add(
         f"{fig}/sweep_total", res.exec_wall_s * 1e6,
         f"cells={len(cases)};buckets={len(res.buckets)};"
         f"programs={plan.n_groups};rows={plan.n_rows};"
-        f"merge_waste={plan.merge_waste:.3f}",
+        f"merge_waste={plan.merge_waste:.3f};collect={collect}",
         ticks_per_sec=agg_ticks / max(res.exec_wall_s, 1e-9),
         compile_wall_s=res.compile_wall_s,
         buckets=len(res.buckets),
+        collect=collect,
     )
     return eng, res
 
@@ -197,6 +241,7 @@ class Rows:
             {
                 "name": name, "us_per_call": us, "derived": derived,
                 "seeds": SEEDS, "full_scale": FULL, "smoke": SMOKE,
+                "collect": COLLECT,
                 **extra,
             }
         )

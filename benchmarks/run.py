@@ -7,7 +7,14 @@ applicable) so perf trajectory is tracked across PRs.
 BENCH_FULL=1 switches to paper-scale constants.  Select subsets with
 BENCH_ONLY=fig02,fig13.  BENCH_SMOKE=1 shrinks figure mains to CI-smoke
 subsets; BENCH_SEEDS=N runs netsim scenarios as N-seed vmapped fleets.
+``--collect {none,summary,full}`` (or BENCH_COLLECT) picks the sweep
+collection mode figure grids run under: "summary" (default) folds
+on-device telemetry sketch channels into the scans
+(repro.netsim.telemetry) and builds figure metrics from the sketches,
+"none" keeps state-built summaries only, "full" streams raw traces as a
+parity reference and forgoes quiescence early exit.
 """
+import argparse
 import json
 import os
 import platform
@@ -39,8 +46,29 @@ MODULES = [
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_netsim.json")
 
 
-def main() -> None:
-    from benchmarks.common import FULL, SEEDS, SMOKE, Rows
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--collect",
+        choices=["none", "summary", "full"],
+        default=os.environ.get("BENCH_COLLECT", "summary"),
+        help="sweep collection mode for figure grids (default: "
+        "BENCH_COLLECT or 'summary')",
+    )
+    args = ap.parse_args(argv)
+    if args.collect not in ("none", "summary", "full"):
+        # argparse validates `choices` only for flag-provided values, not
+        # for the BENCH_COLLECT-derived default
+        ap.error(f"invalid BENCH_COLLECT {args.collect!r} "
+                 "(choose from none, summary, full)")
+    # benchmarks.common reads the env at import; set it before importing so
+    # the flag plumbs through figure_grid and into every row's context stamp.
+    # Programmatic callers may have imported benchmarks.common already — its
+    # COLLECT global is read at call time, so patch it too.
+    os.environ["BENCH_COLLECT"] = args.collect
+    if "benchmarks.common" in sys.modules:
+        sys.modules["benchmarks.common"].COLLECT = args.collect
+    from benchmarks.common import COLLECT, FULL, SEEDS, SMOKE, Rows
 
     only = os.environ.get("BENCH_ONLY")
     selected = MODULES
@@ -75,7 +103,21 @@ def main() -> None:
         try:
             with open(JSON_PATH) as f:
                 prev = json.load(f)
-            records = {**prev.get("rows", {}), **records}
+            # {fig}/bucket/* row names encode the PackPlan's bucketing, so a
+            # replan (packer/grid change) can retire names a plain key merge
+            # would carry forever: drop every stale bucket row of a figure
+            # this run re-planned (its fresh bucket rows are in `records`).
+            replanned = {
+                n.split("/bucket/")[0] for n in records if "/bucket/" in n
+            }
+            prev_rows = {
+                k: v
+                for k, v in prev.get("rows", {}).items()
+                if not (
+                    "/bucket/" in k and k.split("/bucket/")[0] in replanned
+                )
+            }
+            records = {**prev_rows, **records}
             modules = sorted(set(prev.get("meta", {}).get("modules", [])) | set(selected))
         except (json.JSONDecodeError, OSError):
             pass
@@ -95,6 +137,7 @@ def main() -> None:
             "full_scale": _row_consensus("full_scale", FULL),
             "smoke": _row_consensus("smoke", SMOKE),
             "seeds": _row_consensus("seeds", SEEDS),
+            "collect": _row_consensus("collect", COLLECT),
             "modules": modules,
             # figures that ran as sweep batches (figure_grid emits one
             # aggregate row per figure; CI gates these)

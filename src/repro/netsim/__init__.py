@@ -1,24 +1,34 @@
-from repro.netsim import failures, metrics, workloads
+from repro.netsim import failures, metrics, telemetry, workloads
 from repro.netsim.config import TICK_NS, SimConfig, ns_to_ticks, us_to_ticks
 from repro.netsim.engine import (
-    FailureSchedule, ScenarioArrays, SimState, Simulator, Workload,
+    FailureSchedule, Probe, ScenarioArrays, SimState, Simulator, Workload,
 )
-from repro.netsim.fleet import FleetRunner
-from repro.netsim.metrics import RunSummary, summarize
+from repro.netsim.fleet import FleetRunner, FleetTelemetry
+from repro.netsim.metrics import RunSummary, summarize, summarize_sketch
 from repro.netsim.mixed import MixedLB
 from repro.netsim.sweep import (
     BucketPlan, CellShape, PackerConfig, PackPlan, SweepCase, SweepEngine,
     SweepResult, est_row_tick_cost, pack,
 )
+from repro.netsim.telemetry import (
+    CounterTotals, Histogram, RecoveryTracker, RunningScalars,
+    TelemetryProgram, TelemetrySpec, WindowedSeries, sketch_bin_index,
+    sketch_percentile,
+)
 from repro.netsim.topology import Topology, ecmp_hash, mix32
 
 __all__ = [
-    "failures", "metrics", "workloads",
+    "failures", "metrics", "telemetry", "workloads",
     "TICK_NS", "SimConfig", "ns_to_ticks", "us_to_ticks",
-    "FailureSchedule", "ScenarioArrays", "SimState", "Simulator", "Workload",
-    "FleetRunner", "RunSummary", "summarize", "MixedLB",
+    "FailureSchedule", "Probe", "ScenarioArrays", "SimState", "Simulator",
+    "Workload",
+    "FleetRunner", "FleetTelemetry", "RunSummary", "summarize",
+    "summarize_sketch", "MixedLB",
     "SweepCase", "SweepEngine", "SweepResult",
     "BucketPlan", "CellShape", "PackerConfig", "PackPlan",
     "est_row_tick_cost", "pack",
+    "CounterTotals", "Histogram", "RecoveryTracker", "RunningScalars",
+    "TelemetryProgram", "TelemetrySpec", "WindowedSeries",
+    "sketch_bin_index", "sketch_percentile",
     "Topology", "ecmp_hash", "mix32",
 ]

@@ -312,6 +312,29 @@ class TickTrace(NamedTuple):
     watch_served: jax.Array  # (W,) int32 0/1
 
 
+class Probe(NamedTuple):
+    """Per-tick observables the telemetry channels reduce over
+    (repro.netsim.telemetry).
+
+    Unlike ``TickTrace`` (a raw stream destined for the host), a ``Probe``
+    never leaves the device: it is consumed on the spot by the pure
+    ``(carry, probe) -> carry`` channel reducers folded inside the scanned
+    tick loop.  Every field is a *delta or instantaneous* view of the tick,
+    so a quiescent tick (no packets, no startable work) produces an
+    all-zero probe and channel updates become no-ops — which is what makes
+    summary collection compatible with quiescence early exit.
+    """
+
+    now: jax.Array  # () int32 — the tick just executed
+    q_len: jax.Array  # (NQ,) int32 occupancy after the tick
+    served: jax.Array  # (NQ,) int32 0/1 — dequeued this tick
+    watch_qlen: jax.Array  # (W,) int32 occupancy of watched queues
+    watch_served: jax.Array  # (W,) int32 0/1 for watched queues
+    stats_delta: jax.Array  # (N_STATS,) int32 counter increments this tick
+    done_now: jax.Array  # (NC,) bool — conns that completed this tick
+    fct: jax.Array  # (NC,) int32 — done tick - start where done_now, else 0
+
+
 class Simulator:
     """Builds and runs one simulation scenario.
 
@@ -942,6 +965,48 @@ class Simulator:
             watch_served=serve[scn.watch].astype(jnp.int32),
         )
         return new_state, trace
+
+    # ------------------------------------------------------------------
+    def probe(
+        self,
+        prev: SimState,
+        new: SimState,
+        tick: jax.Array,
+        scn: ScenarioArrays,
+    ) -> Probe:
+        """Derive the tick's ``Probe`` from the states around it.
+
+        Pure in (prev, new, tick, scn) like ``step_scenario`` itself, so the
+        sweep engine can vmap it over heterogeneous rows.  Deltas telescope:
+        summing ``stats_delta`` over any tick range reproduces the final
+        ``s_stats`` of that range bit-exactly.
+        """
+        now = tick.astype(jnp.int32)
+        done_now = new.c_done & ~prev.c_done
+        served = new.q_served - prev.q_served
+        return Probe(
+            now=now,
+            q_len=new.q_len,
+            served=served,
+            watch_qlen=new.q_len[scn.watch],
+            watch_served=served[scn.watch],
+            stats_delta=new.s_stats - prev.s_stats,
+            done_now=done_now,
+            fct=jnp.where(done_now, now - scn.conn_start, 0).astype(jnp.int32),
+        )
+
+    def step_probe(
+        self,
+        state: SimState,
+        tick: jax.Array,
+        base_key: jax.Array,
+        scn: ScenarioArrays,
+    ) -> tuple[SimState, Probe]:
+        """One tick that emits a ``Probe`` instead of a host-bound trace —
+        the summary-collection analogue of ``step_scenario`` (the unused
+        ``TickTrace`` is dead code XLA eliminates)."""
+        new, _ = self.step_scenario(state, tick, base_key, scn)
+        return new, self.probe(state, new, tick, scn)
 
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=(0, 1))

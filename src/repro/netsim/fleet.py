@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from repro.core.load_balancers import LoadBalancer
 from repro.netsim.config import SimConfig
 from repro.netsim.engine import FailureSchedule, Simulator, SimState, Workload
-from repro.netsim.metrics import RunSummary, summarize
+from repro.netsim.metrics import RunSummary, summarize, summarize_sketch
+from repro.netsim.telemetry import TelemetrySpec
 
 
 class FleetRunner:
@@ -50,6 +51,10 @@ class FleetRunner:
             cfg, workload, lb, failures=failures, watch_queues=watch_queues,
             seed=self.seeds[0],
         )
+        # (spec, n_ticks) -> TelemetryProgram: _run_summary treats the
+        # program as a static (identity-hashed) jit arg, so reusing one
+        # instance per spec keeps repeated run_summary calls on one compile
+        self._tel_progs: dict = {}
 
     @property
     def n_runs(self) -> int:
@@ -82,6 +87,48 @@ class FleetRunner:
         return self._run(n_ticks, self.base_keys(), states)
 
     # ------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=(0, 1, 2))
+    def _run_summary(
+        self, n_ticks: int, prog, keys: jax.Array, states: SimState,
+        tel: jax.Array,
+    ):
+        step = jax.vmap(self.sim.step_probe, in_axes=(0, None, 0, None))
+        update = jax.vmap(prog.update)
+
+        def tick(carry, t):
+            st, tl = carry
+            new_st, probe = step(st, t, keys, self.sim.scn)
+            return (new_st, update(tl, probe)), None
+
+        ticks = jnp.arange(n_ticks, dtype=jnp.int32)
+        (states, tel), _ = jax.lax.scan(tick, (states, tel), ticks)
+        return states, tel
+
+    def run_summary(
+        self,
+        n_ticks: int,
+        spec: TelemetrySpec | None = None,
+        states: SimState | None = None,
+    ) -> tuple[SimState, "FleetTelemetry"]:
+        """The single-scenario summary path: advance the fleet with the
+        spec's sketch channels reduced on device (``collect="summary"`` of
+        the sweep engine, same ``TelemetrySpec`` grammar).  Returns the
+        stacked final states plus a ``FleetTelemetry`` view — no per-tick
+        trace ever exists, so host traffic is O(seeds × bins)."""
+        spec = spec or TelemetrySpec.default()
+        key = (spec, int(n_ticks))
+        if key not in self._tel_progs:
+            self._tel_progs[key] = spec.build(self.sim, n_ticks)
+        prog = self._tel_progs[key]
+        if states is None:
+            states = self.init_states()
+        tel0 = jnp.tile(prog.init()[None], (self.n_runs, 1))
+        states, tel = self._run_summary(
+            n_ticks, prog, self.base_keys(), states, tel0
+        )
+        return states, FleetTelemetry(self, prog, jax.device_get(tel), n_ticks)
+
+    # ------------------------------------------------------------------
     def state_at(self, states: SimState, i: int) -> SimState:
         """Slice run i's SimState out of the stacked fleet state."""
         return jax.tree_util.tree_map(lambda x: x[i], states)
@@ -98,4 +145,35 @@ class FleetRunner:
                 name=name,
             )
             for i in range(self.n_runs)
+        ]
+
+
+class FleetTelemetry:
+    """Host-side view of a fleet's stacked telemetry sketches: one finalized
+    channel dict per seed, plus sketch-built ``RunSummary`` rows (counters,
+    completions, runtime and mean FCT bit-identical to the state path)."""
+
+    def __init__(self, fleet: FleetRunner, prog, tel, n_ticks: int):
+        self.fleet = fleet
+        self.prog = prog
+        self.tel = tel  # (n_runs, size) int32
+        self.n_ticks = n_ticks
+
+    @property
+    def nbytes_per_run(self) -> int:
+        return self.prog.nbytes
+
+    def result(self, i: int = 0) -> dict:
+        return self.prog.finalize_row(self.tel[i], self.n_ticks)
+
+    def summaries(self, name: str | None = None) -> list[RunSummary]:
+        sim = self.fleet.sim
+        return [
+            summarize_sketch(
+                self.result(i),
+                name=name or sim.wl.name,
+                lb_name=sim.lb.name,
+                n_conns=sim.wl.n_conns,
+            )
+            for i in range(self.fleet.n_runs)
         ]

@@ -1,4 +1,14 @@
-"""Result summarization for simulation runs."""
+"""Result summarization for simulation runs.
+
+Two paths build a ``RunSummary``:
+
+* ``summarize``        — from a run's final ``SimState`` (host-side).
+* ``summarize_sketch`` — from on-device telemetry sketches
+  (``repro.netsim.telemetry``, ``collect="summary"``): counters, completion
+  counts, runtime and mean FCT are **bit-identical** to the state path
+  (running sums/maxes are exact); p99 FCT comes from the log-spaced
+  histogram and is exact to bin resolution.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -74,4 +84,54 @@ def summarize(
         ecn_marks=int(state.s_ecn_marks),
         unprocessed_events=int(state.s_unprocessed),
         alloc_fails=int(state.s_alloc_fail),
+    )
+
+
+def summarize_sketch(
+    tel: dict,
+    name: str,
+    lb_name: str,
+    n_conns: int,
+) -> RunSummary:
+    """Build a ``RunSummary`` from finalized telemetry channels
+    (``TelemetryProgram.finalize_row`` output).
+
+    Requires the ``counters``, ``scalars`` and ``fct_hist`` channels (all in
+    ``TelemetrySpec.default()``).  Counter totals telescope to the final
+    ``s_stats`` and the scalar channel tracks exact sums/maxes, so every
+    field except ``p99_fct_ticks`` is bit-identical to ``summarize`` on the
+    run's final state; p99 is the sketch percentile (bin resolution).
+    """
+    from repro.netsim.telemetry import sketch_percentile
+
+    missing = {"counters", "scalars", "fct_hist"} - set(tel)
+    if missing:
+        raise ValueError(
+            f"summarize_sketch needs channels {sorted(missing)}; "
+            "include them in the TelemetrySpec (TelemetrySpec.default() does)"
+        )
+    c, s, h = tel["counters"], tel["scalars"], tel["fct_hist"]
+    completed = s["fct_count"]
+    runtime = s["done_tick_max"]
+    return RunSummary(
+        name=name,
+        lb=lb_name,
+        n_conns=n_conns,
+        completed=completed,
+        runtime_ticks=runtime,
+        runtime_us=runtime * TICK_NS / 1000.0,
+        mean_fct_ticks=s["mean_fct_ticks"],
+        p99_fct_ticks=(
+            sketch_percentile(h["counts"], h["edges"], 99, zeros=h["zeros"])
+            if completed
+            else float("nan")
+        ),
+        drops_cong=c["drops_cong"],
+        drops_fail=c["drops_fail"],
+        timeouts=c["timeouts"],
+        delivered=c["delivered"],
+        injected=c["injected"],
+        ecn_marks=c["ecn_marks"],
+        unprocessed_events=c["unprocessed"],
+        alloc_fails=c["alloc_fails"],
     )

@@ -60,6 +60,14 @@ This module batches *heterogeneous* cells instead:
      emission entirely (the fast path benchmarks use), and quiescence
      early exit skips post-fixed-point chunks without changing any
      reported metric.
+  8. **Telemetry sketch channels** — ``collect="summary"`` folds a
+     ``TelemetrySpec`` (repro.netsim.telemetry) into the scan: each row
+     carries ONE stacked int32 sketch vector (FCT/qlen histograms,
+     windowed link utilization, recovery trackers, exact counters) updated
+     by pure ``(carry, probe) -> carry`` reducers.  Host traffic drops
+     from O(rows × ticks) to O(rows × bins), and — because reducers are
+     no-ops on quiescent ticks — summary collection composes with
+     ``early_exit=True``, which raw trace streaming cannot.
 
 Example (one compiled call per shape bucket, not per cell):
 
@@ -88,7 +96,8 @@ from repro.netsim.engine import (
     FailureSchedule, ScenarioArrays, Simulator, SimState, Workload,
 )
 from repro.netsim.failures import truncate_dead
-from repro.netsim.metrics import RunSummary, summarize
+from repro.netsim.metrics import RunSummary, summarize, summarize_sketch
+from repro.netsim.telemetry import TelemetrySpec
 from repro.utils import compat
 
 # padded conns start here: far beyond any sweep horizon, still well inside
@@ -555,11 +564,13 @@ class _Program:
     cfg: SimConfig  # shape-pinned bucket config
     lb: SwitchLB
     sim: Simulator
+    sim_ticks: int  # the group's bucket horizon (max member horizon)
     masked: bool  # rows carry heterogeneous horizons
     variant_order: list  # one (lb, kwargs) key per SwitchLB branch
     padded_wls: dict  # cell name -> group-padded Workload
     chunk_fns: dict = dataclasses.field(default_factory=dict)
     quiescent_fn: Any = None
+    tel_progs: dict = dataclasses.field(default_factory=dict)  # spec -> prog
 
 
 @dataclasses.dataclass
@@ -576,6 +587,8 @@ class _Bucket:
     # filled by run()
     final_state: Any = None  # host-side SimState, leaves (R, ...)
     traces: Any = None  # host-side TickTrace, leaves (ticks, R, ...) or None
+    telemetry: Any = None  # host-side (R, size) int32 sketch carries or None
+    tel_prog: Any = None  # TelemetryProgram that owns `telemetry`'s layout
     exec_wall_s: float = 0.0
     compile_wall_s: float = 0.0
     ticks_run: int = 0  # == ticks unless early exit fired sooner
@@ -635,24 +648,74 @@ class SweepResult:
             lambda x: x[: c.case.ticks, row], b.traces
         )
 
-    def summaries(self) -> dict[str, list[RunSummary]]:
-        """Per-cell summaries (one per seed), sliced from the single
-        host-side copy of each bucket's stacked final state."""
+    def telemetry_for(self, name: str, seed_idx: int = 0) -> dict:
+        """Finalized sketch channels for one cell row — requires the sweep
+        to have run with ``collect="summary"``.  Finalization uses the
+        cell's *own* horizon (rows of a merged bucket froze there)."""
+        b, c = self._find(name)
+        if b.telemetry is None:
+            raise ValueError(
+                "no telemetry sketches were collected for this sweep; "
+                "run with collect='summary'"
+            )
+        return b.tel_prog.finalize_row(
+            b.telemetry[c.rows[seed_idx]], c.case.ticks
+        )
+
+    def summaries(self, source: str = "auto") -> dict[str, list[RunSummary]]:
+        """Per-cell summaries (one per seed).
+
+        ``source="state"`` builds them from each bucket's host-side final
+        state; ``"sketch"`` from the telemetry sketches (summary mode) —
+        bit-identical counters/completions/runtime/mean, p99 to bin
+        resolution; ``"auto"`` prefers sketches when they were collected
+        with the channels a RunSummary needs (custom specs without them
+        fall back to the state path, which is always available).
+        """
+        from repro.netsim.telemetry import SUMMARY_CHANNEL_KEYS
+
+        assert source in ("auto", "state", "sketch"), source
         out: dict[str, list[RunSummary]] = {}
         for b in self.buckets:
+            sketch = (
+                b.telemetry is not None
+                and SUMMARY_CHANNEL_KEYS <= b.tel_prog.channel_keys
+                if source == "auto"
+                else source == "sketch"
+            )
             for c in b.cells:
                 variant = b.lb.variants[c.branch]
-                out[c.case.name] = [
-                    summarize(
-                        b.sim,
-                        jax.tree_util.tree_map(lambda x, r=row: x[r], b.final_state),
-                        name=c.case.name,
-                        lb_name=variant.name,
-                        n_conns=c.case.workload.n_conns,
-                        conn_start=c.padded_wl.start,
-                    )
-                    for row in c.rows
-                ]
+                if sketch:
+                    if b.telemetry is None:
+                        raise ValueError(
+                            "no telemetry sketches were collected; run "
+                            "with collect='summary' for sketch summaries"
+                        )
+                    out[c.case.name] = [
+                        summarize_sketch(
+                            b.tel_prog.finalize_row(
+                                b.telemetry[row], c.case.ticks
+                            ),
+                            name=c.case.name,
+                            lb_name=variant.name,
+                            n_conns=c.case.workload.n_conns,
+                        )
+                        for row in c.rows
+                    ]
+                else:
+                    out[c.case.name] = [
+                        summarize(
+                            b.sim,
+                            jax.tree_util.tree_map(
+                                lambda x, r=row: x[r], b.final_state
+                            ),
+                            name=c.case.name,
+                            lb_name=variant.name,
+                            n_conns=c.case.workload.n_conns,
+                            conn_start=c.padded_wl.start,
+                        )
+                        for row in c.rows
+                    ]
         return out
 
 
@@ -791,6 +854,7 @@ class SweepEngine:
             cfg=cfg_b,
             lb=lb,
             sim=sim,
+            sim_ticks=ticks_b,
             masked=any(case.ticks < ticks_b for case in members),
             variant_order=variant_order,
             padded_wls=padded_wls,
@@ -889,35 +953,57 @@ class SweepEngine:
             lb_state=(jnp.asarray(bucket.branch_idx), variant_states)
         )
 
-    def _make_chunk_fn(self, prog: _Program, n: int, collect: str):
-        """Compiled runner for one chunk of ``n`` ticks: carries donated
-        states, returns (states, traces-or-None).  Shared by every bucket
-        of the program's split group (same shapes, same padded rows)."""
-        sim = prog.sim
-        vstep = jax.vmap(sim.step_scenario, in_axes=(0, None, 0, 0))
-        full = collect == "full"
-        masked = prog.masked
+    def _tel_prog(self, prog: _Program, spec: TelemetrySpec):
+        """The program's TelemetryProgram for a spec (built once; shapes and
+        window strides derive from the group's bucket horizon)."""
+        if spec not in prog.tel_progs:
+            prog.tel_progs[spec] = spec.build(prog.sim, prog.sim_ticks)
+        return prog.tel_progs[spec]
 
-        def body(states, keys, scn, horizon, t0):
+    def _make_chunk_fn(
+        self, prog: _Program, n: int, collect: str,
+        spec: TelemetrySpec | None = None,
+    ):
+        """Compiled runner for one chunk of ``n`` ticks: carries donated
+        states (plus the stacked telemetry sketches in summary mode),
+        returns (carry, traces-or-None).  Shared by every bucket of the
+        program's split group (same shapes, same padded rows)."""
+        sim = prog.sim
+        full = collect == "full"
+        summary = collect == "summary"
+        masked = prog.masked
+        if summary:
+            vstep = jax.vmap(sim.step_probe, in_axes=(0, None, 0, 0))
+            tel_update = jax.vmap(self._tel_prog(prog, spec).update)
+        else:
+            vstep = jax.vmap(sim.step_scenario, in_axes=(0, None, 0, 0))
+
+        def freeze(live, new, old):
+            # freeze rows past their own horizon: bit-identical to stopping
+            # that row's serial run at `horizon` ticks
+            return jax.tree_util.tree_map(
+                lambda nw, od: jnp.where(
+                    live.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, od
+                ),
+                new,
+                old,
+            )
+
+        def body(carry, keys, scn, horizon, t0):
             def tick(carry, t):
-                new_carry, tr = vstep(carry, t, keys, scn)
+                if summary:
+                    states, tel = carry
+                    new_states, probe = vstep(states, t, keys, scn)
+                    new_carry = (new_states, tel_update(tel, probe))
+                    tr = None
+                else:
+                    new_carry, tr = vstep(carry, t, keys, scn)
                 if masked:
-                    # freeze rows past their own horizon: bit-identical to
-                    # stopping that row's serial run at `horizon` ticks
-                    live = t < horizon  # (R,)
-                    new_carry = jax.tree_util.tree_map(
-                        lambda new, old: jnp.where(
-                            live.reshape((-1,) + (1,) * (new.ndim - 1)),
-                            new,
-                            old,
-                        ),
-                        new_carry,
-                        carry,
-                    )
+                    new_carry = freeze(t < horizon, new_carry, carry)
                 return new_carry, (tr if full else None)
 
             ticks = t0 + jnp.arange(n, dtype=jnp.int32)
-            return jax.lax.scan(tick, states, ticks)
+            return jax.lax.scan(tick, carry, ticks)
 
         if self.mesh is not None:
             body = compat.shard_map(
@@ -966,34 +1052,59 @@ class SweepEngine:
         collect: str = "none",
         chunk: int | None = None,
         early_exit: bool = False,
+        telemetry: TelemetrySpec | None = None,
     ) -> SweepResult:
-        """Execute every bucket.  ``collect``:
+        """Execute every bucket.  The three-mode ``collect`` contract:
 
-        * ``"none"``  — no per-tick traces (fastest; summaries only);
-        * ``"full"``  — full TickTrace streams, fetched chunk-by-chunk.
+        * ``"none"``    — no per-tick output (fastest; state summaries
+          only).  Early-exit compatible.
+        * ``"summary"`` — on-device sketch channels (``telemetry`` spec,
+          default ``TelemetrySpec.default()``) reduced inside the scan;
+          O(bins) host bytes per row.  Early-exit compatible: reducers are
+          no-ops on quiescent ticks, so skipping them is bit-invisible.
+        * ``"full"``    — raw TickTrace streams fetched chunk-by-chunk;
+          O(ticks) host bytes per row.  Incompatible with ``early_exit``.
 
         ``chunk`` bounds how many ticks of trace live on device at once
         (defaults to the whole run in one chunk).  ``early_exit`` stops a
         bucket at the first chunk boundary where every row has reached its
         fixed point (see _make_quiescent_fn); all reported metrics are
-        bit-identical to running the full horizon.  Requires
-        ``collect="none"`` (skipped ticks would otherwise be missing from
-        the trace streams, even though their values are constant).
+        bit-identical to running the full horizon.
         """
-        assert collect in ("none", "full"), collect
-        assert not (early_exit and collect == "full"), (
-            "early_exit would truncate trace streams; use collect='none'"
+        if collect not in ("none", "summary", "full"):
+            raise ValueError(
+                f"collect must be 'none', 'summary' or 'full', got "
+                f"{collect!r}"
+            )
+        if early_exit and collect == "full":
+            raise ValueError(
+                "early_exit=True cannot be combined with collect='full': "
+                "raw trace streams would be truncated at the quiescence "
+                "point.  Use collect='summary' (on-device sketch channels "
+                "keep figure fidelity and are early-exit safe) or "
+                "collect='none', or run the full horizon with "
+                "early_exit=False."
+            )
+        if telemetry is not None and collect != "summary":
+            raise ValueError(
+                "a telemetry spec only applies to collect='summary'"
+            )
+        spec = (
+            (telemetry or TelemetrySpec.default())
+            if collect == "summary"
+            else None
         )
         for bucket in self.buckets:
-            self._run_bucket(bucket, collect, chunk, early_exit)
+            self._run_bucket(bucket, collect, chunk, early_exit, spec)
         return SweepResult(self)
 
     def _run_bucket(
         self, bucket: _Bucket, collect: str, chunk: int | None,
-        early_exit: bool = False,
+        early_exit: bool = False, spec: TelemetrySpec | None = None,
     ):
         prog = bucket.program
         ticks = bucket.ticks
+        summary = collect == "summary"
         if chunk is None:
             # early exit needs chunk boundaries to act on
             chunk = max(64, ticks // 8) if early_exit else ticks
@@ -1003,30 +1114,36 @@ class SweepEngine:
             sizes.append(ticks % chunk)
 
         t_c0 = time.time()
-        states = self._init_states(bucket)
+        carry = self._init_states(bucket)
+        if summary:
+            tel_prog = self._tel_prog(prog, spec)
+            tel0 = jnp.tile(
+                tel_prog.init()[None], (bucket.plan.n_padded_rows, 1)
+            )
+            carry = (carry, tel0)
         horizons = jnp.asarray(bucket.horizons)
         t0 = jnp.zeros((), jnp.int32)
         # AOT-compile each distinct chunk length (usually 1-2) untimed;
         # sub-buckets of a split group share the compiled executables.
         for n in sorted(set(sizes)):
-            ck = (n, collect)
+            ck = (n, collect, spec)
             if ck not in prog.chunk_fns:
-                fn = self._make_chunk_fn(prog, n, collect)
+                fn = self._make_chunk_fn(prog, n, collect, spec)
                 prog.chunk_fns[ck] = fn.lower(
-                    states, bucket.keys, bucket.scn, horizons, t0
+                    carry, bucket.keys, bucket.scn, horizons, t0
                 ).compile()
         if early_exit and prog.quiescent_fn is None:
             prog.quiescent_fn = self._make_quiescent_fn(prog)
         quiescent = prog.quiescent_fn if early_exit else None
-        jax.block_until_ready(states.c_done)
+        jax.block_until_ready(jax.tree_util.tree_leaves(carry)[0])
         bucket.compile_wall_s = time.time() - t_c0
 
         trace_chunks = []
         offset = 0
         t_e0 = time.time()
         for n in sizes:
-            states, traces = prog.chunk_fns[(n, collect)](
-                states, bucket.keys, bucket.scn, horizons,
+            carry, traces = prog.chunk_fns[(n, collect, spec)](
+                carry, bucket.keys, bucket.scn, horizons,
                 jnp.asarray(offset, jnp.int32),
             )
             offset += n
@@ -1034,6 +1151,7 @@ class SweepEngine:
                 # stream this chunk to host so the device never holds more
                 # than `chunk` ticks of trace
                 trace_chunks.append(jax.device_get(traces))
+            states = carry[0] if summary else carry
             if quiescent is not None and offset < ticks and bool(
                 quiescent(
                     states, bucket.scn, horizons,
@@ -1041,15 +1159,20 @@ class SweepEngine:
                 )
             ):
                 break
+        states = carry[0] if summary else carry
         jax.block_until_ready(states.c_done)
         bucket.exec_wall_s = time.time() - t_e0
         bucket.ticks_run = offset
 
-        host_state = jax.device_get(states)  # one transfer for the bucket
+        host = jax.device_get(carry)  # one transfer for the bucket
         keep = bucket.n_rows
+        host_state = host[0] if summary else host
         bucket.final_state = jax.tree_util.tree_map(
             lambda x: x[:keep], host_state
         )
+        if summary:
+            bucket.telemetry = host[1][:keep]
+            bucket.tel_prog = tel_prog
         if collect == "full":
             bucket.traces = jax.tree_util.tree_map(
                 lambda *xs: np.concatenate(xs, axis=0)[:, :keep], *trace_chunks

@@ -1,0 +1,576 @@
+"""On-device telemetry: streaming sketch channels for summary collection.
+
+The paper's headline claims are distributional — FCT tails, queue-occupancy
+evolution, sub-100µs failure re-routing — but streaming every raw per-tick
+trace row to the host (``collect="full"``) costs O(rows × ticks) transfer
+bandwidth and is incompatible with quiescence early exit.  This module
+replaces the raw stream with **sketches**: each channel is a pure
+``(carry, probe) -> carry`` reducer folded inside the scanned tick loop, so
+a sweep row's telemetry leaves the device once, as O(bins) integers.
+
+Channels (all ``int32``, all composable via ``TelemetrySpec``):
+
+* ``CounterTotals``   — running sums of the per-tick stat deltas.  Deltas
+  telescope, so the totals equal the final ``SimState.s_stats``
+  **bit-exactly** (tested) — summary-mode ``RunSummary`` counters are not
+  approximations.
+* ``RunningScalars``  — exact count/sum/min/max of FCTs, max completion
+  tick, max/sum queue occupancy.  Mean FCT from sum/count is bit-identical
+  to the host-side mean over raw completion ticks.
+* ``Histogram``       — fixed-width log- (or linear-) spaced histogram of
+  FCT or queue-length observations: percentiles to bin resolution
+  (``sketch_percentile``).  Zero-valued qlen observations are *not*
+  accumulated; ``finalize`` reconstructs the zero count from the horizon,
+  which keeps post-quiescent ticks no-ops (see below).
+* ``WindowedSeries``  — per-window sums at a configurable stride: watched
+  per-link service counts (utilization), watched queue occupancy, and the
+  full stat-delta vector (ECN marks / drops / deliveries per window).
+* ``RecoveryTracker`` — failure-recovery latency: first failure-drop tick,
+  first timeout after it (REPS freezing entry), and first successful
+  delivery after it (the re-route proxy for the paper's <100µs claim).
+
+**Early-exit compatibility.**  Every reducer is a no-op on a quiescent
+tick: histograms only count events / nonzero occupancies, windowed sums add
+zeros, trackers take mins over no events, scalars max/sum zeros.  Skipping
+post-fixed-point ticks therefore leaves every channel carry bit-identical
+to scanning the full horizon (tests/test_telemetry.py) — summary collection
+composes with ``early_exit=True``, which ``collect="full"`` cannot.
+
+**Single stacked carry.**  ``TelemetrySpec.build`` compiles the channel set
+into a ``TelemetryProgram`` whose per-row carry is ONE flat ``(size,)``
+int32 vector with a static slot layout: one pytree leaf per row batch, one
+host transfer per bucket, and the sweep engine's per-row horizon freeze is
+a single ``where``.
+
+Example::
+
+    spec = TelemetrySpec.default(n_windows=32)
+    states, tel = FleetRunner(cfg, wl, lb, seeds=range(8)).run_summary(
+        4000, spec)
+    tel.result(0)["fct_hist"]           # counts + edges, seed 0
+    tel.summaries()[0].p99_fct_ticks    # sketch p99 (bin resolution)
+
+    res = SweepEngine(cfg, cases).run(collect="summary", early_exit=True)
+    res.telemetry_for("fig02/tornado/reps")["recovery"]["recovery_us"]
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim.config import TICK_NS
+from repro.netsim.engine import (
+    BIG, N_STATS, ST_DELIVERED, ST_DROPS_CONG, ST_DROPS_FAIL, ST_ECN,
+    ST_INJECTED, ST_TIMEOUTS, Probe,
+)
+
+STAT_NAMES = (
+    "drops_cong", "drops_fail", "timeouts", "delivered",
+    "ecn_marks", "injected", "unprocessed", "alloc_fails",
+)
+
+# the channels metrics.summarize_sketch needs to build a RunSummary; specs
+# missing any of them still run, but summary builders fall back to (or
+# assert for) the state path.
+SUMMARY_CHANNEL_KEYS = frozenset({"counters", "scalars", "fct_hist"})
+
+
+# ---------------------------------------------------------------------------
+# Channels.  Each is a frozen (hashable) dataclass of declarative knobs; the
+# static per-program context — shapes, bin edges, strides — is materialized
+# by ``build(sim, ticks)`` and threaded back into the pure methods.
+#   slots(built)            -> {field: shape}          (all int32)
+#   init(built)             -> {field: np.ndarray}
+#   update(built, v, probe) -> {field: jnp.Array}      (pure reducer step)
+#   finalize(built, v, horizon) -> {metric: value}     (host-side numpy)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterTotals:
+    """Running sums of ``probe.stats_delta`` — equals final ``s_stats``."""
+
+    @property
+    def key(self) -> str:
+        return "counters"
+
+    def build(self, sim, ticks: int) -> dict:
+        return {}
+
+    def slots(self, built) -> dict:
+        return {"totals": (N_STATS,)}
+
+    def init(self, built) -> dict:
+        return {"totals": np.zeros((N_STATS,), np.int32)}
+
+    def update(self, built, v: dict, probe: Probe) -> dict:
+        return {"totals": v["totals"] + probe.stats_delta}
+
+    def finalize(self, built, v: dict, horizon: int) -> dict:
+        totals = np.asarray(v["totals"])
+        out = {name: int(totals[i]) for i, name in enumerate(STAT_NAMES)}
+        out["totals"] = totals
+        return out
+
+
+# The stacked carry is int32, but run-long value sums (FCT, queue
+# occupancy) can exceed 2^31 at paper scale (NQ × occupancy × ticks).  Wide
+# sums therefore split into (hi, lo) words: lo holds the low SUM_SHIFT bits
+# and hi counts 2^SUM_SHIFT units, giving exact totals up to ~2^51.  The
+# per-tick increment must stay below 2^31 - 2^SUM_SHIFT — true by
+# construction (one tick observes ≤ NQ × capacity occupancy, and ≤ NQ
+# completions of FCT ≤ horizon each).
+SUM_SHIFT = 20
+
+
+def _acc_wide(hi, lo, delta):
+    lo = lo + delta
+    return hi + (lo >> SUM_SHIFT), lo & ((1 << SUM_SHIFT) - 1)
+
+
+def _wide_total(hi, lo) -> int:
+    return (int(hi) << SUM_SHIFT) + int(lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunningScalars:
+    """Exact running scalars: FCT count/sum/min/max, completion-tick max,
+    queue-occupancy max/sum.  Mean FCT = sum/count reproduces the host-side
+    mean bit-for-bit; mean qlen divides by horizon × NQ at finalize so an
+    early-exited run reports the same value as the full horizon.  The two
+    run-long sums use (hi, lo) split accumulators so they stay exact far
+    past int32 range."""
+
+    @property
+    def key(self) -> str:
+        return "scalars"
+
+    def build(self, sim, ticks: int) -> dict:
+        return {"nq": sim.NQ}
+
+    def slots(self, built) -> dict:
+        return {
+            "fct_count": (), "fct_sum_hi": (), "fct_sum_lo": (),
+            "fct_min": (), "fct_max": (), "done_tick_max": (),
+            "qlen_max": (), "qlen_sum_hi": (), "qlen_sum_lo": (),
+        }
+
+    def init(self, built) -> dict:
+        z = np.zeros((), np.int32)
+        return {
+            "fct_count": z, "fct_sum_hi": z, "fct_sum_lo": z,
+            "fct_min": np.asarray(BIG, np.int32),
+            "fct_max": np.asarray(-1, np.int32),
+            "done_tick_max": np.asarray(-1, np.int32),
+            "qlen_max": z, "qlen_sum_hi": z, "qlen_sum_lo": z,
+        }
+
+    def update(self, built, v: dict, probe: Probe) -> dict:
+        d = probe.done_now
+        fct_hi, fct_lo = _acc_wide(
+            v["fct_sum_hi"], v["fct_sum_lo"], jnp.sum(probe.fct)
+        )  # fct is 0 where ~done
+        q_hi, q_lo = _acc_wide(
+            v["qlen_sum_hi"], v["qlen_sum_lo"], jnp.sum(probe.q_len)
+        )
+        return {
+            "fct_count": v["fct_count"] + jnp.sum(d, dtype=jnp.int32),
+            "fct_sum_hi": fct_hi, "fct_sum_lo": fct_lo,
+            "fct_min": jnp.minimum(
+                v["fct_min"], jnp.min(jnp.where(d, probe.fct, BIG))
+            ),
+            "fct_max": jnp.maximum(
+                v["fct_max"], jnp.max(jnp.where(d, probe.fct, -1))
+            ),
+            "done_tick_max": jnp.maximum(
+                v["done_tick_max"], jnp.max(jnp.where(d, probe.now, -1))
+            ),
+            "qlen_max": jnp.maximum(v["qlen_max"], jnp.max(probe.q_len)),
+            "qlen_sum_hi": q_hi, "qlen_sum_lo": q_lo,
+        }
+
+    def finalize(self, built, v: dict, horizon: int) -> dict:
+        count = int(v["fct_count"])
+        fct_sum = _wide_total(v["fct_sum_hi"], v["fct_sum_lo"])
+        qlen_sum = _wide_total(v["qlen_sum_hi"], v["qlen_sum_lo"])
+        return {
+            "fct_count": count,
+            "fct_sum": fct_sum,
+            "fct_min": int(v["fct_min"]) if count else -1,
+            "fct_max": int(v["fct_max"]),
+            "mean_fct_ticks": (
+                float(fct_sum) / count if count else float("nan")
+            ),
+            "done_tick_max": int(v["done_tick_max"]),
+            "qlen_max": int(v["qlen_max"]),
+            "mean_qlen": float(qlen_sum) / (horizon * built["nq"]),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class Histogram:
+    """Fixed-width histogram of an on-device value stream.
+
+    ``source="fct"`` bins completion times as they happen (event-driven);
+    ``source="qlen"`` bins every queue's occupancy every tick.  Zero values
+    are never accumulated — for qlen the zero count is reconstructed at
+    ``finalize`` as ``horizon × NQ - sum(counts)``, which (a) makes the
+    carry invariant to skipped post-quiescent ticks and (b) costs nothing.
+    ``hi=None`` derives the top edge from the program (the scan horizon for
+    FCT, the queue capacity for qlen).
+    """
+
+    source: str = "fct"  # "fct" | "qlen"
+    n_bins: int = 64
+    lo: int = 1
+    hi: int | None = None
+    spacing: str = "log"  # "log" | "linear"
+    name: str | None = None
+
+    @property
+    def key(self) -> str:
+        return self.name or f"{self.source}_hist"
+
+    def build(self, sim, ticks: int) -> dict:
+        assert self.source in ("fct", "qlen"), self.source
+        assert self.spacing in ("log", "linear"), self.spacing
+        hi = self.hi
+        if hi is None:
+            hi = ticks if self.source == "fct" else sim.cfg.queue_capacity
+        hi = max(int(hi), self.lo + 1)
+        if self.spacing == "log":
+            edges = np.geomspace(float(self.lo), float(hi), self.n_bins + 1)
+        else:
+            edges = np.linspace(float(self.lo), float(hi), self.n_bins + 1)
+        return {
+            "edges": edges.astype(np.float32),
+            # streams observed per tick (zero-count reconstruction); 0 for
+            # event-driven sources (no implicit zero observations)
+            "n_streams": sim.NQ if self.source == "qlen" else 0,
+        }
+
+    def slots(self, built) -> dict:
+        # (hi, lo) split like RunningScalars: a qlen bin can receive up to
+        # horizon × NQ increments, past int32 at million-tick horizons.
+        # The carry is normalized every tick (lo always < 2^SUM_SHIFT on
+        # entry), so a skipped post-quiescent tick is a bitwise no-op.
+        return {"counts_hi": (self.n_bins,), "counts_lo": (self.n_bins,)}
+
+    def init(self, built) -> dict:
+        return {
+            "counts_hi": np.zeros((self.n_bins,), np.int32),
+            "counts_lo": np.zeros((self.n_bins,), np.int32),
+        }
+
+    def update(self, built, v: dict, probe: Probe) -> dict:
+        if self.source == "fct":
+            vals, mask = probe.fct, probe.done_now
+        else:
+            vals, mask = probe.q_len, probe.q_len > 0
+        idx = jnp.clip(
+            jnp.searchsorted(
+                jnp.asarray(built["edges"]), vals.astype(jnp.float32),
+                side="right",
+            )
+            - 1,
+            0,
+            self.n_bins - 1,
+        )
+        lo = v["counts_lo"].at[jnp.where(mask, idx, self.n_bins)].add(
+            1, mode="drop"
+        )
+        hi, lo = v["counts_hi"] + (lo >> SUM_SHIFT), lo & ((1 << SUM_SHIFT) - 1)
+        return {"counts_hi": hi, "counts_lo": lo}
+
+    def finalize(self, built, v: dict, horizon: int) -> dict:
+        counts = (
+            np.asarray(v["counts_hi"], np.int64) << SUM_SHIFT
+        ) + np.asarray(v["counts_lo"], np.int64)
+        zeros = 0
+        if built["n_streams"]:
+            zeros = int(horizon) * built["n_streams"] - int(counts.sum())
+        return {
+            "counts": counts,
+            "edges": np.asarray(built["edges"], np.float64),
+            "zeros": zeros,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowedSeries:
+    """Windowed time-series at a configurable stride: per-watched-link
+    service counts (utilization), watched queue occupancy sums, and the
+    stat-delta vector per window.  ``stride=None`` derives
+    ``ceil(ticks / n_windows)`` from the program horizon; rows frozen (or
+    early-exited) before a window simply leave it zero, exactly like the
+    full run would."""
+
+    stride: int | None = None
+    n_windows: int = 24
+
+    @property
+    def key(self) -> str:
+        return "windows"
+
+    def build(self, sim, ticks: int) -> dict:
+        stride = self.stride or max(1, -(-ticks // self.n_windows))
+        return {
+            "stride": int(stride),
+            "nw": -(-ticks // int(stride)),
+            "w": int(sim.watch.shape[0]),
+        }
+
+    def slots(self, built) -> dict:
+        nw, w = built["nw"], built["w"]
+        return {
+            "util": (nw, w), "qlen_sum": (nw, w), "stats": (nw, N_STATS),
+        }
+
+    def init(self, built) -> dict:
+        return {k: np.zeros(s, np.int32) for k, s in self.slots(built).items()}
+
+    def update(self, built, v: dict, probe: Probe) -> dict:
+        w = jnp.minimum(probe.now // built["stride"], built["nw"] - 1)
+        return {
+            "util": v["util"].at[w].add(probe.watch_served),
+            "qlen_sum": v["qlen_sum"].at[w].add(probe.watch_qlen),
+            "stats": v["stats"].at[w].add(probe.stats_delta),
+        }
+
+    def finalize(self, built, v: dict, horizon: int) -> dict:
+        stride = built["stride"]
+        nw = min(built["nw"], -(-int(horizon) // stride))
+        ticks_per = np.minimum(
+            stride, int(horizon) - stride * np.arange(nw)
+        ).astype(np.float64)
+        util = np.asarray(v["util"])[:nw]
+        return {
+            "stride": stride,
+            "ticks_per_window": ticks_per,
+            "util": util,
+            "util_frac": util / ticks_per[:, None],
+            "mean_qlen": np.asarray(v["qlen_sum"])[:nw] / ticks_per[:, None],
+            "stats": np.asarray(v["stats"])[:nw],
+            "ecn": np.asarray(v["stats"])[:nw, ST_ECN],
+            "drops": (
+                np.asarray(v["stats"])[:nw, ST_DROPS_CONG]
+                + np.asarray(v["stats"])[:nw, ST_DROPS_FAIL]
+            ),
+            "delivered": np.asarray(v["stats"])[:nw, ST_DELIVERED],
+            "injected": np.asarray(v["stats"])[:nw, ST_INJECTED],
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryTracker:
+    """Failure-recovery latency: the first failure-drop tick, the first
+    sender timeout after it (REPS freezing entry), and the first successful
+    delivery after it — ``recovery_ticks`` is the paper's first-drop →
+    first-successful-reroute latency (<100µs claim).  Deliveries in the
+    same tick as the first drop don't count: within-tick stage order puts
+    service before arrivals, so they cannot have been re-routed."""
+
+    @property
+    def key(self) -> str:
+        return "recovery"
+
+    def build(self, sim, ticks: int) -> dict:
+        return {}
+
+    def slots(self, built) -> dict:
+        return {"first_drop": (), "first_timeout": (), "first_redeliver": ()}
+
+    def init(self, built) -> dict:
+        b = np.asarray(BIG, np.int32)
+        return {"first_drop": b, "first_timeout": b, "first_redeliver": b}
+
+    def update(self, built, v: dict, probe: Probe) -> dict:
+        now, sd = probe.now, probe.stats_delta
+        first_drop = jnp.minimum(
+            v["first_drop"], jnp.where(sd[ST_DROPS_FAIL] > 0, now, BIG)
+        )
+        after = now > first_drop
+        return {
+            "first_drop": first_drop,
+            "first_timeout": jnp.minimum(
+                v["first_timeout"],
+                jnp.where((sd[ST_TIMEOUTS] > 0) & after, now, BIG),
+            ),
+            "first_redeliver": jnp.minimum(
+                v["first_redeliver"],
+                jnp.where((sd[ST_DELIVERED] > 0) & after, now, BIG),
+            ),
+        }
+
+    def finalize(self, built, v: dict, horizon: int) -> dict:
+        def t(x):
+            x = int(x)
+            return -1 if x >= BIG else x
+
+        drop, timeout, rer = (
+            t(v["first_drop"]), t(v["first_timeout"]), t(v["first_redeliver"])
+        )
+        rec = rer - drop if (drop >= 0 and rer >= 0) else -1
+        return {
+            "first_drop_tick": drop,
+            "first_timeout_tick": timeout,
+            "first_redeliver_tick": rer,
+            "recovery_ticks": rec,
+            "recovery_us": rec * TICK_NS / 1000.0 if rec >= 0 else float("nan"),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Spec + compiled program.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """A declarative, hashable channel set.  ``build(sim, ticks)`` compiles
+    it against one simulator program (shapes, horizon) into a
+    ``TelemetryProgram``; the same spec can be built against many programs
+    (one per sweep bucket group)."""
+
+    channels: tuple = ()
+
+    @staticmethod
+    def default(
+        fct_bins: int = 64,
+        qlen_bins: int = 32,
+        n_windows: int = 24,
+        stride: int | None = None,
+    ) -> "TelemetrySpec":
+        return TelemetrySpec(
+            channels=(
+                CounterTotals(),
+                RunningScalars(),
+                Histogram(source="fct", n_bins=fct_bins),
+                Histogram(source="qlen", n_bins=qlen_bins),
+                WindowedSeries(stride=stride, n_windows=n_windows),
+                RecoveryTracker(),
+            )
+        )
+
+    def build(self, sim, ticks: int) -> "TelemetryProgram":
+        return TelemetryProgram(self, sim, ticks)
+
+
+class TelemetryProgram:
+    """A spec compiled against one simulator program: a static slot layout
+    packing every channel carry into ONE flat ``(size,)`` int32 vector per
+    row.  ``update`` is the pure reducer the scan body folds; ``finalize_row``
+    unpacks a host-side row into per-channel results."""
+
+    def __init__(self, spec: TelemetrySpec, sim, ticks: int):
+        self.spec = spec
+        self.ticks = int(ticks)
+        if not spec.channels:
+            raise ValueError(
+                "empty TelemetrySpec: add channels, or start from "
+                "TelemetrySpec.default()"
+            )
+        keys = [ch.key for ch in spec.channels]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"duplicate telemetry channel keys: {keys}")
+        self._built = [(ch, ch.build(sim, ticks)) for ch in spec.channels]
+        self._layout: list[tuple[Any, Any, str, int, tuple, int]] = []
+        off = 0
+        for ch, built in self._built:
+            for field, shape in ch.slots(built).items():
+                size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+                self._layout.append((ch, built, field, off, tuple(shape), size))
+                off += size
+        self.size = off
+
+    @property
+    def nbytes(self) -> int:
+        """Host-transfer bytes per row — the O(bins) in the bandwidth model
+        (vs O(ticks) per row for ``collect="full"`` trace streams)."""
+        return self.size * 4
+
+    @property
+    def channel_keys(self) -> frozenset:
+        return frozenset(ch.key for ch, _ in self._built)
+
+    def init(self) -> jnp.ndarray:
+        flat = np.zeros((self.size,), np.int32)
+        for ch, built, field, off, shape, size in self._layout:
+            flat[off : off + size] = np.asarray(
+                ch.init(built)[field], np.int32
+            ).reshape(-1)
+        return jnp.asarray(flat)
+
+    def _views(self, flat) -> dict:
+        views: dict[int, dict] = {}
+        for ch, built, field, off, shape, size in self._layout:
+            views.setdefault(id(ch), {})[field] = (
+                flat[off : off + size].reshape(shape)
+            )
+        return views
+
+    def update(self, flat: jnp.ndarray, probe: Probe) -> jnp.ndarray:
+        """One reducer step over the stacked carry (pure; vmap over rows)."""
+        views = self._views(flat)
+        new: dict[int, dict] = {}
+        for ch, built in self._built:
+            new[id(ch)] = ch.update(built, views[id(ch)], probe)
+        parts = []
+        for ch, built, field, off, shape, size in self._layout:
+            parts.append(
+                jnp.asarray(new[id(ch)][field], jnp.int32).reshape(-1)
+            )
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def finalize_row(self, flat: np.ndarray, horizon: int) -> dict:
+        """Unpack one host-side row into ``{channel.key: {metric: value}}``.
+        ``horizon`` is the row's own tick horizon (not the bucket's) — it
+        drives zero-count reconstruction and window trimming."""
+        flat = np.asarray(flat)
+        assert flat.shape == (self.size,), (flat.shape, self.size)
+        views = self._views(flat)
+        return {
+            ch.key: ch.finalize(built, views[id(ch)], int(horizon))
+            for ch, built in self._built
+        }
+
+
+# ---------------------------------------------------------------------------
+# Sketch statistics.
+# ---------------------------------------------------------------------------
+
+
+def sketch_percentile(
+    counts: np.ndarray, edges: np.ndarray, q: float, zeros: int = 0
+) -> float:
+    """Percentile from a histogram sketch, exact to bin resolution.
+
+    Uses the nearest-rank-above order statistic (numpy's
+    ``method="higher"``): the returned value is the *lower edge* of the bin
+    holding that order stat, so it sits within one bin width of the exact
+    host-side percentile — and is exact for unit-width linear bins.
+    ``zeros`` counts observations below ``edges[0]`` that were never
+    accumulated (the qlen channel's reconstructed zero count).
+    """
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum()) + int(zeros)
+    if total == 0:
+        return float("nan")
+    rank = math.ceil(q / 100.0 * (total - 1))  # 0-indexed order stat
+    if rank < zeros:
+        return 0.0
+    cum = np.cumsum(counts)
+    b = int(np.searchsorted(cum, rank - zeros + 1, side="left"))
+    b = min(b, len(counts) - 1)
+    return float(edges[b])
+
+
+def sketch_bin_index(edges: np.ndarray, value: float) -> int:
+    """The bin a value falls into under the channel's binning rule (clipped
+    at both ends) — for "within one bin" assertions across modes."""
+    idx = int(np.searchsorted(np.asarray(edges), value, side="right")) - 1
+    return max(0, min(idx, len(edges) - 2))

@@ -170,11 +170,28 @@ def test_collectives_conservation_and_sweep_parity():
             assert injected == delivered + drops, (k, injected, delivered, drops)
 
 
-def test_sweep_engine_rejects_full_traces_with_early_exit():
+def test_sweep_collect_contract():
+    """The three-mode collect contract: unknown modes and the
+    full-traces-with-early-exit combination raise actionable ValueErrors
+    (pointing at collect='summary'), a telemetry spec is rejected outside
+    summary mode, and a custom spec without the RunSummary channels still
+    runs — summaries() auto-falls back to the state path."""
+    from repro.netsim import TelemetrySpec, WindowedSeries
+
     wl = workloads.permutation(32, 32, seed=4)
     eng = SweepEngine(CFG, [_case("x", wl, "ops", 100)])
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="summary"):
         eng.run(collect="full", early_exit=True)
+    with pytest.raises(ValueError, match="collect"):
+        eng.run(collect="traces")
+    with pytest.raises(ValueError, match="summary"):
+        eng.run(collect="none", telemetry=TelemetrySpec.default())
+    res = eng.run(
+        collect="summary",
+        telemetry=TelemetrySpec(channels=(WindowedSeries(),)),
+    )
+    assert "windows" in res.telemetry_for("x")
+    assert res.summaries()["x"][0].n_conns == wl.n_conns  # state fallback
 
 
 # ---------------------------------------------------------------------------
