@@ -38,6 +38,21 @@ SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
 # disables quiescence early exit).
 COLLECT = os.environ.get("BENCH_COLLECT", "summary")
 assert COLLECT in ("none", "summary", "full"), COLLECT
+# BENCH_KERNELS pins the engine's segment-rank/segment-sum backend for the
+# sweep grids (SimConfig.kernels_backend): "auto" (default — jnp off-TPU),
+# "jnp", or "pallas".  Forcing "pallas" off-TPU runs the tiled kernels
+# under interpret=True; figure_grid then emits ONLY an informational
+# `{fig}/sweep_total_pallas_interpret` row (keyed ticks_per_sec_info so no
+# CI gate compares interpret-mode throughput against compiled baselines).
+KERNELS = os.environ.get("BENCH_KERNELS", "auto")
+assert KERNELS in ("auto", "jnp", "pallas"), KERNELS
+# BENCH_MEASURED_COSTS=1 feeds the committed BENCH_netsim.json bucket rows
+# (measured_row_tick_us) back into the packer's cost model in place of the
+# footprint estimate (sweep.pack measured_costs).  Off by default for the
+# gated smoke grids: a replan can re-bucket cells, and bucket membership is
+# RNG-visible through shrink-to-fit conn padding (threefry draws are not
+# prefix-stable), which would churn committed derived metrics.
+MEASURED = bool(int(os.environ.get("BENCH_MEASURED_COSTS", "0")))
 
 
 def ci_cfg(**kw) -> SimConfig:
@@ -113,16 +128,34 @@ def sweep_case(name, wl, lbn, ticks, cfg, failures=None, watch=None, **lb_kwargs
     )
 
 
-def run_sweep(cfg, cases, packer=None, collect=None):
+def measured_costs() -> dict:
+    """The packer's measured-cost feedback, harvested from the committed
+    BENCH_netsim.json bucket rows when BENCH_MEASURED_COSTS=1 (else {} —
+    the packer falls back to the footprint estimate)."""
+    if not MEASURED:
+        return {}
+    from repro.netsim.sweep import measured_costs_from_bench
+
+    return measured_costs_from_bench(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "BENCH_netsim.json")
+    )
+
+
+def run_sweep(cfg, cases, packer=None, collect=None, kernels=None):
     """Submit a whole figure as one sweep: a few compiled bucket scans
     instead of one trace+compile+run per (workload, lb) cell.  Compile is
     excluded from exec walls (AOT per bucket, same protocol as run_one).
     ``collect`` defaults to BENCH_COLLECT; "none" and "summary" stop at
     quiescence (early_exit) — reported metrics are bit-identical to the
     full horizon, see netsim/sweep.py — while "full" keeps raw trace
-    streams and must scan every tick."""
+    streams and must scan every tick.  ``kernels`` defaults to
+    BENCH_KERNELS (engine hot-spot backend; bit-identical either way)."""
     collect = collect or COLLECT
-    eng = SweepEngine(cfg, cases, packer=packer)
+    eng = SweepEngine(
+        cfg, cases, packer=packer, kernels_backend=kernels or KERNELS,
+        measured_costs=measured_costs(),
+    )
     res = eng.run(collect=collect, early_exit=collect != "full")
     return eng, res
 
@@ -178,12 +211,35 @@ def figure_grid(rows, fig, cfg, cases, fmt=None, derive=None, packer=None,
     Each bucket additionally emits a ``{fig}/bucket/*`` row pairing its
     PackPlan key with the *measured* wall clock — bucket_ticks_per_sec and
     measured_row_tick_us next to the packer's est_row_tick_cost — the
-    measured tick-cost feedback the packer's cost model can be calibrated
-    against (kept out of the CI ticks_per_sec gate: single-bucket walls are
-    noisier than figure aggregates).
+    measured tick-cost feedback ``sweep.pack(measured_costs=...)`` consumes
+    on BENCH_MEASURED_COSTS=1 runs (kept out of the CI ticks_per_sec gate:
+    single-bucket walls are noisier than figure aggregates).
+
+    With BENCH_KERNELS=pallas off-TPU the grid runs the tiled Pallas
+    kernels in interpret mode: bit-identical metrics, but throughput is an
+    emulation artifact — so the grid emits ONLY one informational
+    ``{fig}/sweep_total_pallas_interpret`` row (ticks_per_sec_info key),
+    leaving every gated row untouched.
     """
+    from repro.distrib.sharding import mesh_platform
+
     collect = collect or COLLECT
     eng, res = run_sweep(cfg, cases, packer=packer, collect=collect)
+    # one shared platform rule with the engine's backend resolution — a
+    # pallas sweep off-TPU ran interpret=True and must only emit info rows
+    interpret_info = (
+        eng.kernels_backend == "pallas" and mesh_platform(eng.mesh) != "tpu"
+    )
+    if interpret_info:
+        agg_ticks = sum(b.ticks_run * b.n_rows for b in res.buckets)
+        rows.add(
+            f"{fig}/sweep_total_pallas_interpret", res.exec_wall_s * 1e6,
+            f"cells={len(cases)};buckets={len(res.buckets)};"
+            f"collect={collect};kernels=pallas-interpret",
+            ticks_per_sec_info=agg_ticks / max(res.exec_wall_s, 1e-9),
+            collect=collect,
+        )
+        return eng, res
     sweep_rows(rows, res, fmt=fmt, derive=derive, collect=collect)
     plan = eng.plan
     for i, b in enumerate(res.buckets):

@@ -149,3 +149,24 @@ def pad_rows(n_rows: int, mesh: Optional[Mesh]) -> int:
         return n_rows
     n_dev = mesh.shape[SWEEP_AXIS]
     return ((n_rows + n_dev - 1) // n_dev) * n_dev
+
+
+def mesh_platform(mesh: Optional[Mesh]) -> str:
+    """Platform ("cpu" / "tpu" / "gpu") of the devices a sweep runs on:
+    the mesh's devices when one is active, the default backend otherwise."""
+    if mesh is not None:
+        return mesh.devices.flat[0].platform
+    return jax.default_backend()
+
+
+def resolve_kernels_backend(backend: str, mesh: Optional[Mesh] = None) -> str:
+    """THE resolution rule for ``SimConfig.kernels_backend="auto"`` —
+    every consumer (Simulator at trace time, FleetRunner at construction,
+    SweepEngine against its row mesh) routes through here so the choice
+    can never diverge between layers: compiled Pallas kernels on TPU
+    devices, the jnp formulations elsewhere (forcing ``"pallas"`` off-TPU
+    runs the kernels under ``interpret=True``)."""
+    assert backend in ("auto", "jnp", "pallas"), backend
+    if backend == "auto":
+        return "pallas" if mesh_platform(mesh) == "tpu" else "jnp"
+    return backend

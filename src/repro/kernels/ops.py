@@ -12,6 +12,8 @@ import jax
 from repro.kernels import ecmp_hash as _eh
 from repro.kernels import queue_tick as _qt
 from repro.kernels import reps_update as _ru
+from repro.kernels import seg_rank as _sr
+from repro.kernels import seg_sum as _ss
 
 
 def _interpret() -> bool:
@@ -31,3 +33,15 @@ def reps_tick(*args, **kwargs):
 def queue_tick(*args, **kwargs):
     """One switch tick: serve + enqueue + RED; see repro.kernels.queue_tick."""
     return _qt.queue_tick_pallas(*args, interpret=_interpret(), **kwargs)
+
+
+def seg_rank(seg, n_segments):
+    """(K,) int32 -> stable FIFO rank within each segment; see
+    repro.kernels.seg_rank (batched over sweep rows via vmap)."""
+    return _sr.seg_rank_pallas(seg, n_segments, interpret=_interpret())
+
+
+def seg_sum(seg, vals, n_segments):
+    """(K,), (F, K) int32 -> (F, n_segments) stacked segment sums; see
+    repro.kernels.seg_sum (batched over sweep rows via vmap)."""
+    return _ss.seg_sum_pallas(seg, vals, n_segments, interpret=_interpret())

@@ -94,6 +94,33 @@ def reps_tick_ref(
 
 
 # ---------------------------------------------------------------------------
+def seg_rank_ref(seg, n_segments):
+    """Stable FIFO rank within each segment: rank_i = #{j < i : seg_j ==
+    seg_i}, computed with the O(K^2) pairwise compare+reduce.  Out-of-range
+    ids (>= n_segments) still rank against their own kind here — the kernel
+    returns 0 for them instead, so compare only in-range lanes (callers
+    never consume out-of-range ranks)."""
+    del n_segments  # rank is well-defined without the bound
+    seg = jnp.asarray(seg, jnp.int32)
+    K = seg.shape[0]
+    earlier = jnp.tril(jnp.ones((K, K), jnp.bool_), k=-1)
+    same = seg[None, :] == seg[:, None]
+    return jnp.sum(same & earlier, axis=1, dtype=jnp.int32)
+
+
+def seg_sum_ref(seg, vals, n_segments):
+    """Dense one-hot masked reduction: out[f, s] = sum_k vals[f, k] *
+    (seg[k] == s).  Ids >= n_segments fall outside every bucket."""
+    seg = jnp.asarray(seg, jnp.int32)
+    vals = jnp.asarray(vals, jnp.int32)
+    oh = seg[:, None] == jnp.arange(n_segments, dtype=jnp.int32)[None, :]
+    return jnp.sum(
+        jnp.where(oh[None, :, :], vals[:, :, None], 0), axis=1,
+        dtype=jnp.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
 def queue_tick_ref(target, u, qlen, serve, capacity, kmin, kmax, tile=128):
     """Serve-then-enqueue with FIFO ranking, tail drop and RED marking.
 

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: batched multi-field segment sum.
+
+``out[f, s] = sum_k vals[f, k] * (seg[k] == s)`` — the per-connection /
+per-round event aggregation the netsim tick is built on (inflight and
+retransmit accounting, NACK counts, delivery/coalescing bookkeeping,
+injection window updates: engine.py §1/§2/§3/§5).  The engine's jnp
+formulation is a stacked scatter-add; the seed formulation this replaces
+was a dense ``(K, S)`` one-hot masked reduction per field.
+
+Kernel shape: the ``(F, S)`` accumulator block stays resident in VMEM
+(scan carry, like ``queue_tick``'s occupancy row) while the K event axis
+streams through in ``K_TILE`` chunks; each chunk reduces its one-hot
+``(T, S)`` against all F value rows — lane-parallel over the S segment
+lanes, sequential-grid-accumulated over K tiles, so arbitrarily large
+event batches never materialize a ``(K, S)`` intermediate.
+
+Batching: written per row; under ``jax.vmap`` (the sweep/fleet
+(scenario, seed) row axis) the ``pallas_call`` batching rule prepends a
+row grid dimension — one launch per bucket tick, not one per row.
+
+Out-of-range segment ids (``seg >= S``) contribute to no bucket — the
+engine's sentinel convention (events of padded rows aggregate to the
+``NC`` sentinel column, which callers slice off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_TILE = 128
+
+
+def _seg_sum_kernel(
+    seg_ref,  # (K_TILE, 1) int32 segment id (or >= S: no-op)
+    vals_ref,  # (F, K_TILE) int32
+    o_sum_ref,  # (F, S) int32 accumulator (carried across K tiles)
+):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_sum_ref[...] = jnp.zeros_like(o_sum_ref)
+
+    S = o_sum_ref.shape[1]
+    F = o_sum_ref.shape[0]
+    seg = seg_ref[...]  # (T, 1)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], S), 1) == seg
+    )  # (T, S) bool; all-false rows for out-of-range ids
+    vals = vals_ref[...]  # (F, T)
+    acc = o_sum_ref[...]
+    # per-field masked reduce keeps the live intermediate at (T, S) — F is
+    # a handful of stacked counters, S is the segment axis on the lanes
+    for f in range(F):
+        acc = acc.at[f].add(
+            jnp.sum(jnp.where(onehot, vals[f][:, None], 0), axis=0)
+        )
+    o_sum_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_segments", "interpret")
+)
+def seg_sum_pallas(
+    seg: jax.Array,  # (K,) int32; entries >= n_segments are dropped
+    vals: jax.Array,  # (F, K) int32 stacked fields
+    n_segments: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Segment-sum ``F`` stacked int32 fields into ``n_segments`` buckets.
+
+    Returns ``(F, n_segments)`` int32.  Integer addition is associative and
+    commutative, so the result is bit-identical to the dense one-hot
+    reduction (``repro.kernels.ref.seg_sum_ref``) and to the engine's jnp
+    scatter-add for any accumulation order.
+    """
+    K = seg.shape[0]
+    F = vals.shape[0]
+    S = int(n_segments)
+    KP = pl.cdiv(K, K_TILE) * K_TILE
+    seg_p = jnp.full((KP,), S, jnp.int32).at[:K].set(seg.astype(jnp.int32))
+    vals_p = jnp.zeros((F, KP), jnp.int32).at[:, :K].set(
+        vals.astype(jnp.int32)
+    )
+    grid = (KP // K_TILE,)
+    out = pl.pallas_call(
+        _seg_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((F, K_TILE), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((F, S), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, S), jnp.int32),
+        interpret=interpret,
+    )(seg_p.reshape(KP, 1), vals_p)
+    return out

@@ -8,7 +8,7 @@ from repro.netsim.metrics import RunSummary, summarize, summarize_sketch
 from repro.netsim.mixed import MixedLB
 from repro.netsim.sweep import (
     BucketPlan, CellShape, PackerConfig, PackPlan, SweepCase, SweepEngine,
-    SweepResult, est_row_tick_cost, pack,
+    SweepResult, est_row_tick_cost, measured_costs_from_bench, pack,
 )
 from repro.netsim.telemetry import (
     CounterTotals, Histogram, RecoveryTracker, RunningScalars,
@@ -26,7 +26,7 @@ __all__ = [
     "summarize_sketch", "MixedLB",
     "SweepCase", "SweepEngine", "SweepResult",
     "BucketPlan", "CellShape", "PackerConfig", "PackPlan",
-    "est_row_tick_cost", "pack",
+    "est_row_tick_cost", "measured_costs_from_bench", "pack",
     "CounterTotals", "Histogram", "RecoveryTracker", "RunningScalars",
     "TelemetryProgram", "TelemetrySpec", "WindowedSeries",
     "sketch_bin_index", "sketch_percentile",

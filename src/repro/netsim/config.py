@@ -85,10 +85,22 @@ class SimConfig:
     # "pallas" (fused repro.kernels.queue_tick; interpret mode off-TPU), or
     # "auto" (pallas on TPU, jnp elsewhere).
     arrivals_backend: str = "auto"
+    # tick hot-spot kernel backend for the batched segment-rank and
+    # segment-sum primitives (repro.kernels.seg_rank / seg_sum) the engine's
+    # feedback/RTO/delivery/injection accounting is built on: "jnp" (scatter
+    # formulations in the tick body), "pallas" (the tiled kernels; Mosaic on
+    # TPU, interpret mode elsewhere — parity-tested bit-identical), or
+    # "auto" (pallas on TPU, jnp elsewhere).  Because the kernels sit inside
+    # the vmapped ``step_scenario``, the sweep/fleet row axis batches them
+    # into one launch per tick (grid over rows x tiles), not one per row.
+    kernels_backend: str = "auto"
 
     def __post_init__(self):
         assert self.arrivals_backend in ("auto", "jnp", "pallas"), (
             f"unknown arrivals_backend {self.arrivals_backend!r}"
+        )
+        assert self.kernels_backend in ("auto", "jnp", "pallas"), (
+            f"unknown kernels_backend {self.kernels_backend!r}"
         )
 
     # Derived topology ---------------------------------------------------------

@@ -35,10 +35,20 @@ execution model"):
     per-tick cost is dominated by the number of non-fusable gather/scatter/
     sort kernels, not FLOPs, so stages budget one gather + one scatter each
     instead of ~10 per-field ops.
-  * FIFO ranking of same-target arrivals is a segment-cumsum over the
-    one-hot target histogram (no argsort), shared with the per-queue accept
-    counts; the same trick ranks per-connection ACK events once, replacing
-    the per-round scatter-min selection loop.
+  * FIFO ranking of same-target arrivals (and of same-connection ACK
+    events for the exact ``feedback_rounds`` replay) and every
+    per-connection event aggregation (inflight / NACK / delivery /
+    injection accounting) go through two backend-switchable segment
+    primitives — ``_seg_rank_b`` and ``_seg_sum_b``
+    (``SimConfig.kernels_backend``): the jnp formulations are a pairwise
+    compare+reduce rank and stacked scatter-adds (one narrow scatter per
+    stage, replacing the dense one-hot masked reductions that used to
+    dominate the tick); the pallas formulations are the tiled
+    histogram-scan kernels in ``repro.kernels.seg_rank``/``seg_sum``,
+    which batch across the vmapped sweep/fleet row axis via the
+    ``pallas_call`` vmap rule.  The ACK feedback rounds scatter once into a
+    ``(round, conn)`` table instead of building a ``(K, NC)`` selection
+    mask per round.
   * Scalar stat counters live in a single ``(N_STATS,)`` vector updated
     once per tick with a stacked delta.
   * ``_step`` is a pure function of (state, tick, base_key); the
@@ -385,8 +395,23 @@ class Simulator:
         self.NP = cfg.pkt_slots or int(
             2 ** np.ceil(np.log2(NC * cfg.max_cwnd_pkts + 4 * self.NH + 64))
         )
+        # MAX_ARR is RNG-visible (the per-arrival RED uniform draw has
+        # shape (MAX_ARR,), and jax threefry draws are not prefix-stable),
+        # so it keeps the seed engine's generous bound for bit-parity.
         self.MAX_ARR = self.NQ + self.NH
-        self.MAX_EV = self.NQ + 2 * self.NH
+        # MAX_EV / MAX_FREE are pure compaction sizes — no RNG shape
+        # derives from them — so they use tight per-tick bounds (every K
+        # beyond a bound is provably unreachable, making the shrink
+        # bit-invisible while directly narrowing the hot-path rank /
+        # segment-sum / scatter widths):
+        #  * feedback: ACKs are emitted only by final-hop dequeues (the NH
+        #    host downlinks, queues ≥ t0_down_base) with a fixed ack delay
+        #    → ≤ NH due per tick; trim NACKs (≤ MAX_ARR, fixed nack delay)
+        #    exist only when cfg.trimming;
+        #  * frees: feedback slots (≤ MAX_EV) + RTO LOST_WAIT expiries
+        #    (≤ NH) + service frees (≤ NQ serves) + arrival drops
+        #    (≤ MAX_ARR).
+        self.MAX_EV = self.NH + (self.MAX_ARR if cfg.trimming else 0)
         self.MAX_FREE = self.MAX_EV + self.NQ + self.MAX_ARR + self.NH
 
         # host -> local conn table
@@ -541,6 +566,41 @@ class Simulator:
         return jnp.zeros((K,), jnp.int32).at[order].set(pos_in_run)
 
     # ------------------------------------------------------------------
+    # Backend-switchable segment primitives (SimConfig.kernels_backend).
+    # "auto" resolves at trace time: the tiled Pallas kernels on TPU, the
+    # jnp formulations elsewhere.  Both are bit-identical (int32 adds are
+    # order-free; ranks are exact), so flipping the backend never changes
+    # simulation results — tests/test_kernel_parity.py locks this across
+    # multi-bucket sweeps.
+    def _kb(self) -> str:
+        from repro.distrib.sharding import resolve_kernels_backend
+
+        return resolve_kernels_backend(self.cfg.kernels_backend)
+
+    def _seg_rank_b(self, seg: jax.Array, n_segments: int) -> jax.Array:
+        """FIFO rank within segment; ids >= n_segments are sentinels whose
+        ranks are never consumed (the pallas kernel returns 0 for them)."""
+        if self._kb() == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.seg_rank(seg, n_segments)
+        return self._seg_rank(seg)
+
+    def _seg_sum_b(
+        self, seg: jax.Array, vals: jax.Array, n_segments: int
+    ) -> jax.Array:
+        """Stacked (F, K) int32 fields segment-summed to (F, n_segments);
+        ids >= n_segments drop.  One narrow scatter-add on the jnp path —
+        the replacement for the dense per-field one-hot reductions."""
+        if self._kb() == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.seg_sum(seg, vals, n_segments)
+        return jnp.zeros((vals.shape[0], n_segments), jnp.int32).at[
+            :, seg
+        ].add(vals, mode="drop")
+
+    # ------------------------------------------------------------------
     def tick_fn(self, state: SimState, tick: jax.Array) -> tuple[SimState, TickTrace]:
         return self._step(state, tick, self.base_key)
 
@@ -579,7 +639,6 @@ class Simulator:
             c_done_tick, c_rtx_count, c_rtx, c_rcv, c_cwnd, c_alpha,
             h_rr, lb_state, fl, fl_head, fl_count, s_stats,
         ) = state[1:]
-        conn_ids = jnp.arange(NC + 1, dtype=jnp.int32)
 
         # =============== 1. feedback (ACK / NACK) =====================
         p_state = pkt[PS]
@@ -596,46 +655,63 @@ class Simulator:
         e_seq = jnp.where(e_valid, E[PSEQ], 0)
         e_rtt = jnp.where(e_valid, now - E[PSEND], 0)
 
-        oh_e = e_conn[:, None] == conn_ids[None, :]  # (MAX_EV, NC+1)
-
-        # exact inflight accounting over ALL events (dense segment-sum)
-        dec = jnp.where(e_is_nack, 1, e_cnt)
-        c_inflight = c_inflight - jnp.sum(
-            jnp.where(oh_e, dec[:, None], 0), axis=0
-        )[:NC]
-        # NACK: mark retransmission, window -1 MTU (congestion drop signal)
-        already = c_rcv.at[e_conn, e_seq].get(mode="fill", fill_value=True)
-        need_rtx = e_is_nack & ~already
-        prev_rtx = c_rtx.at[e_conn, e_seq].get(mode="fill", fill_value=True)
-        c_rtx = c_rtx.at[e_conn, e_seq].max(need_rtx, mode="drop")
-        c_rtx_count = c_rtx_count + jnp.sum(
-            (need_rtx & ~prev_rtx)[:, None] & oh_e, axis=0, dtype=jnp.int32
-        )[:NC]
-        nacks_per_conn = jnp.sum(
-            e_is_nack[:, None] & oh_e, axis=0, dtype=jnp.int32
-        )[:NC]
-        c_cwnd = jnp.clip(
-            c_cwnd - nacks_per_conn.astype(jnp.float32),
-            1.0,
-            float(cfg.max_cwnd_pkts),
-        )
+        # ONE stacked segment-sum covers the whole feedback stage.  Index =
+        # (ACK round, conn): an ACK's round is its FIFO rank among
+        # same-connection ACKs (slot order, unique per conn — computed once
+        # by the segment-rank primitive, no per-round scatter-min
+        # selection); non-ACK/pad events land via their real conn (rank
+        # within the NC sentinel segment picks an arbitrary row, summed
+        # out) so the round-summed leading fields still aggregate ALL
+        # events, while the ACK-masked trailing fields keep the per-round
+        # table clean.  Without trimming no packet can ever be IN_NACK
+        # (only the arrivals trim branch creates them), so the NACK
+        # bookkeeping — rtx marking, the cwnd decrement, two table fields
+        # and a bitmap scatter — is statically compiled out.
+        R_fb = cfg.feedback_rounds
+        ack_seg = jnp.where(e_is_ack, e_conn, NC)
+        e_rank = self._seg_rank_b(ack_seg, NC + 1)
+        ridx = jnp.minimum(e_rank, R_fb) * (NC + 1) + e_conn
+        fields = [
+            jnp.where(e_is_nack, 1, e_cnt) if cfg.trimming else e_cnt,  # dec
+            e_is_ack.astype(jnp.int32),
+            jnp.where(e_is_ack, e_ev, 0),
+            (e_ecn & e_is_ack).astype(jnp.int32),
+            jnp.where(e_is_ack, e_rtt, 0),
+        ]
+        if cfg.trimming:
+            already = c_rcv.at[e_conn, e_seq].get(mode="fill", fill_value=True)
+            need_rtx = e_is_nack & ~already
+            prev_rtx = c_rtx.at[e_conn, e_seq].get(mode="fill", fill_value=True)
+            c_rtx = c_rtx.at[e_conn, e_seq].max(need_rtx, mode="drop")
+            fields += [
+                (need_rtx & ~prev_rtx).astype(jnp.int32),
+                e_is_nack.astype(jnp.int32),
+            ]
+        tbl = self._seg_sum_b(
+            ridx, jnp.stack(fields), (R_fb + 1) * (NC + 1)
+        ).reshape(len(fields), R_fb + 1, NC + 1)
+        fb = jnp.sum(tbl, axis=1)  # rank-independent totals per conn
+        c_inflight = c_inflight - fb[0, :NC]
+        if cfg.trimming:
+            c_rtx_count = c_rtx_count + fb[5, :NC]
+            nacks_per_conn = fb[6, :NC]
+            c_cwnd = jnp.clip(
+                c_cwnd - nacks_per_conn.astype(jnp.float32),
+                1.0,
+                float(cfg.max_cwnd_pkts),
+            )
 
         # LB + CC updates: up to `feedback_rounds` exact rounds of one ACK
-        # event per connection.  Each ACK's round is its FIFO rank among
-        # same-connection ACKs (slot order) — computed once, no per-round
-        # scatter-min selection.
-        ack_seg = jnp.where(e_is_ack, e_conn, NC)
-        e_rank = self._seg_rank(ack_seg)
-        for r in range(cfg.feedback_rounds):
-            sel = (e_is_ack & (e_rank == r))[:, None] & oh_e  # (MAX_EV, NC+1)
-            conn_mask = jnp.any(sel, axis=0)[:NC]
-            conn_ev = jnp.sum(jnp.where(sel, e_ev[:, None], 0), axis=0)[:NC]
-            conn_ecn = jnp.any(sel & e_ecn[:, None], axis=0)[:NC]
-            conn_rtt = jnp.sum(jnp.where(sel, e_rtt[:, None], 0), axis=0)[:NC]
+        # event per connection — round r's per-conn event is table row r.
+        for r in range(R_fb):
+            conn_mask = tbl[1, r, :NC] > 0
+            conn_ev = tbl[2, r, :NC]
+            conn_ecn = tbl[3, r, :NC] > 0
+            conn_rtt = tbl[4, r, :NC]
             c_cwnd, c_alpha = self._cc_on_ack(c_cwnd, c_alpha, conn_mask, conn_ecn, conn_rtt)
             lb_state = self.lb.on_ack(lb_state, conn_mask, conn_ev, conn_ecn, now)
         unprocessed = jnp.sum(
-            (e_is_ack & (e_rank >= cfg.feedback_rounds)).astype(jnp.int32)
+            (e_is_ack & (e_rank >= R_fb)).astype(jnp.int32)
         )
 
         # free all feedback slots
@@ -666,13 +742,16 @@ class Simulator:
         rto_need = r_valid & ~rcv_already
         prev_rtx_p = c_rtx.at[r_conn, r_seq].get(mode="fill", fill_value=True)
         c_rtx = c_rtx.at[jnp.where(rto_need, r_conn, NC), r_seq].max(rto_need, mode="drop")
-        oh_r = r_conn[:, None] == conn_ids[None, :]  # (NH, NC+1)
-        c_rtx_count = c_rtx_count + jnp.sum(
-            (rto_need & ~prev_rtx_p)[:, None] & oh_r, axis=0, dtype=jnp.int32
-        )[:NC]
-        rto_per_conn = jnp.sum(
-            r_valid[:, None] & oh_r, axis=0, dtype=jnp.int32
-        )[:NC]
+        rsum_rto = self._seg_sum_b(
+            r_conn,
+            jnp.stack([
+                (rto_need & ~prev_rtx_p).astype(jnp.int32),
+                r_valid.astype(jnp.int32),
+            ]),
+            NC + 1,
+        )
+        c_rtx_count = c_rtx_count + rsum_rto[0, :NC]
+        rto_per_conn = rsum_rto[1, :NC]
         c_inflight = c_inflight - rto_per_conn
         c_cwnd = jnp.clip(
             c_cwnd - rto_per_conn.astype(jnp.float32), 1.0, float(cfg.max_cwnd_pkts)
@@ -720,20 +799,24 @@ class Simulator:
         # deliveries (≤ 1 per connection per tick — host downlink serves 1)
         dconn = jnp.where(is_final, D[PCONN], NC)
         dseq = jnp.where(is_final, D[PSEQ], 0)
-        oh_d = dconn[:, None] == conn_ids[None, :]  # (NQ, NC+1)
+        # deliveries only happen at the final-hop queues — the STATIC tail
+        # [t0_down_base, NQ) of the queue axis (NH host downlinks) — so the
+        # delivery-side scatters restrict to that slice: the dropped rows
+        # are all sentinel/False no-ops, and scatter cost is rows × K
+        fin = slice(topo.t0_down_base, NQ)
         was_done = c_done.at[dconn].get(mode="fill", fill_value=True)
         newly = is_final & ~c_rcv.at[dconn, dseq].get(mode="fill", fill_value=True)
-        c_rcv = c_rcv.at[dconn, dseq].max(is_final, mode="drop")
-        c_delivered = c_delivered + jnp.sum(
-            newly[:, None] & oh_d, axis=0, dtype=jnp.int32
-        )[:NC]
+        c_rcv = c_rcv.at[dconn[fin], dseq[fin]].max(is_final[fin], mode="drop")
         delivered_d = jnp.sum(newly.astype(jnp.int32))
         deliver_ackable = is_final & ~d_orph & ~was_done
         msg_of = scn.conn_msg.at[dconn].get(mode="fill", fill_value=BIG)
-        # ≤1 delivery per conn per tick ⇒ the post-update gathered values are
-        # the pre-update gathers plus this queue's own contribution.
+        # ≤1 delivery per conn per tick ⇒ the post-update per-conn counters
+        # equal the pre-update gathers plus this queue's own contribution —
+        # so `emit`/`first_done` are computable BEFORE the scatter and the
+        # whole stage needs ONE stacked segment-sum.
         del_of = (
             c_delivered.at[dconn].get(mode="fill", fill_value=0)
+            + newly.astype(jnp.int32)
         )
         now_done = del_of >= msg_of
         rxp = (
@@ -741,16 +824,23 @@ class Simulator:
             + deliver_ackable.astype(jnp.int32)
         )
         emit = deliver_ackable & ((rxp >= cfg.ack_coalesce) | now_done)
+        first_done = is_final & now_done & ~was_done
+        dsum = self._seg_sum_b(
+            dconn[fin],
+            jnp.stack([
+                newly.astype(jnp.int32)[fin],
+                deliver_ackable.astype(jnp.int32)[fin],
+                emit.astype(jnp.int32)[fin],
+                first_done.astype(jnp.int32)[fin],
+            ]),
+            NC + 1,
+        )
+        c_delivered = c_delivered + dsum[0, :NC]
         c_rx_pending = jnp.where(
-            jnp.any(emit[:, None] & oh_d, axis=0)[:NC],
-            0,
-            c_rx_pending + jnp.sum(
-                deliver_ackable[:, None] & oh_d, axis=0, dtype=jnp.int32
-            )[:NC],
+            dsum[2, :NC] > 0, 0, c_rx_pending + dsum[1, :NC]
         )
         # completion bookkeeping
-        first_done = is_final & now_done & ~was_done
-        first_done_c = jnp.any(first_done[:, None] & oh_d, axis=0)[:NC]
+        first_done_c = dsum[3, :NC] > 0
         c_done = c_done | first_done_c
         c_done_tick = jnp.where(first_done_c, now, c_done_tick)
 
@@ -816,7 +906,7 @@ class Simulator:
             q_len = new_qlen
         else:
             # FIFO rank among same-target arrivals (stable in slot order)
-            rank = self._seg_rank(target)
+            rank = self._seg_rank_b(target, NQ + 1)
             qlen_t = q_len.at[target].get(mode="fill", fill_value=0)
             accept = a_valid & (rank < QCAP - qlen_t)
             pos = qlen_t + rank
@@ -883,8 +973,6 @@ class Simulator:
             sendh, hc[jnp.arange(NH), pick_local], NC
         )  # NC sentinel
         h_rr = jnp.where(sendh, (pick_local + 1) % self.CPH, h_rr)
-        oh_i = pick_conn[:, None] == conn_ids[None, :]  # (NH, NC+1)
-        send_mask = jnp.any(sendh[:, None] & oh_i, axis=0)[:NC]
         # seq selection: retransmissions first
         pick_cc = jnp.clip(pick_conn, 0, NC - 1)
         use_rtx = c_rtx_count[pick_cc] > 0
@@ -895,15 +983,21 @@ class Simulator:
         c_rtx = c_rtx.at[jnp.where(sendh & use_rtx, pick_conn, NC), rtx_seq].set(
             False, mode="drop"
         )
-        c_rtx_count = c_rtx_count - jnp.sum(
-            (sendh & use_rtx)[:, None] & oh_i, axis=0, dtype=jnp.int32
-        )[:NC]
-        c_next_new = c_next_new + jnp.sum(
-            (sendh & ~use_rtx)[:, None] & oh_i, axis=0, dtype=jnp.int32
-        )[:NC]
-        c_inflight = c_inflight + jnp.sum(
-            sendh[:, None] & oh_i, axis=0, dtype=jnp.int32
-        )[:NC]
+        # each host picks <= 1 conn and a conn lives on one host, so
+        # per-conn injection counts are 0/1: one stacked segment-sum covers
+        # the send mask, rtx/new splits and the inflight increment
+        isum = self._seg_sum_b(
+            pick_conn,
+            jnp.stack([
+                sendh.astype(jnp.int32),
+                (sendh & use_rtx).astype(jnp.int32),
+            ]),
+            NC + 1,
+        )
+        send_mask = isum[0, :NC] > 0
+        c_rtx_count = c_rtx_count - isum[1, :NC]
+        c_next_new = c_next_new + (isum[0] - isum[1])[:NC]
+        c_inflight = c_inflight + isum[0, :NC]
         injected_d = n_alloc
 
         # the load balancer stamps the EV (REPS Algorithm 2)
@@ -913,7 +1007,6 @@ class Simulator:
         pkt_ev = evs[pick_cc]
 
         wslot = jnp.where(sendh, slot_p, NP)
-        # one (PF, NH) block scatter writes the whole new-packet rows
         W = jnp.stack([
             jnp.full((NH,), FLYING, jnp.int32),  # PS
             pick_conn,  # PCONN
@@ -927,6 +1020,7 @@ class Simulator:
             jnp.zeros((NH,), jnp.int32),  # PORPH
             jnp.zeros((NH,), jnp.int32),  # PACK
         ])
+        # one (PF, NH) block scatter writes the whole new-packet rows
         pkt = pkt.at[:, wslot].set(W, mode="drop")
 
         # =============== 6. free-list push ==============================
@@ -935,10 +1029,23 @@ class Simulator:
         # conflict with the push below.
         f_idx2 = self._compact(freed, self.MAX_FREE)
         f_val = f_idx2 < NP
-        frank = jnp.cumsum(f_val.astype(jnp.int32)) - 1
         n_freed = jnp.sum(f_val.astype(jnp.int32))
-        fpos = (fl_head + fl_count + frank) % NP
-        fl = fl.at[jnp.where(f_val, fpos, NP)].set(f_idx2, mode="drop")
+        if self.MAX_FREE <= NP:
+            # the push targets a contiguous (mod NP) ring segment, so it is
+            # a rotate + static-slice blend + rotate back — a scatter here
+            # would serialize over MAX_FREE rows per sweep lane on CPU/TPU
+            start = (fl_head + fl_count) % NP
+            rot = jnp.roll(fl, -start)
+            head = jnp.where(
+                jnp.arange(self.MAX_FREE, dtype=jnp.int32) < n_freed,
+                f_idx2,
+                rot[: self.MAX_FREE],
+            )
+            fl = jnp.roll(rot.at[: self.MAX_FREE].set(head), start)
+        else:  # tiny pkt_slots pin: fall back to the positional scatter
+            frank = jnp.cumsum(f_val.astype(jnp.int32)) - 1
+            fpos = (fl_head + fl_count + frank) % NP
+            fl = fl.at[jnp.where(f_val, fpos, NP)].set(f_idx2, mode="drop")
         fl_count = fl_count + n_freed
 
         # =============== 7. fused stats update ==========================

@@ -34,7 +34,16 @@ from repro.netsim.telemetry import TelemetrySpec
 
 
 class FleetRunner:
-    """Runs one scenario structure under a batch of seeds in lock-step."""
+    """Runs one scenario structure under a batch of seeds in lock-step.
+
+    ``kernels_backend`` (optional) pins the engine's segment-rank /
+    segment-sum hot-spot backend for this fleet — same contract as
+    ``SweepEngine(kernels_backend=...)`` / ``SimConfig.kernels_backend``:
+    the Pallas kernels sit inside the vmapped tick, so the per-seed row
+    axis batches them into one launch per tick; ``None`` keeps the
+    config's own setting.  Backends are bit-identical, so flipping it
+    never changes any row's results.
+    """
 
     def __init__(
         self,
@@ -44,9 +53,16 @@ class FleetRunner:
         failures: FailureSchedule | None = None,
         watch_queues=None,
         seeds: Sequence[int] = (0,),
+        kernels_backend: str | None = None,
     ):
         self.seeds = tuple(int(s) for s in seeds)
         assert self.seeds, "need at least one seed"
+        if kernels_backend is not None:
+            from repro.distrib.sharding import resolve_kernels_backend
+
+            cfg = cfg.replace(
+                kernels_backend=resolve_kernels_backend(kernels_backend)
+            )
         self.sim = Simulator(
             cfg, workload, lb, failures=failures, watch_queues=watch_queues,
             seed=self.seeds[0],

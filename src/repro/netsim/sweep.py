@@ -90,7 +90,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.load_balancers import SwitchLB, make_lb
-from repro.distrib.sharding import SWEEP_AXIS, sweep_mesh
+from repro.distrib.sharding import (
+    SWEEP_AXIS, resolve_kernels_backend, sweep_mesh,
+)
 from repro.netsim.config import SimConfig
 from repro.netsim.engine import (
     FailureSchedule, ScenarioArrays, Simulator, SimState, Workload,
@@ -194,17 +196,87 @@ def est_row_tick_cost(
     counts array footprint touched per tick rather than FLOPs: the packed
     packet table (NP slots, pow2 of conns × max cwnd + host slack), the
     per-conn message bitmaps (NC × MSG, touched via event scatters at ~1/8
-    density), the feedback/delivery one-hots (MAX_EV ≈ 3·NH events × NC+1
-    segments), and the linear schedule/watch rows.  Only *relative* cost
-    matters — the packer compares merged vs native sums of this estimate.
+    density), the feedback/delivery segment tables (MAX_EV ≈ 3·NH events ×
+    NC+1 segments), and the linear schedule/watch rows.  Only *relative*
+    cost matters — the packer compares merged vs native sums of this
+    estimate (or of the measured-cost model, see ``measured_costs_from_bench``).
     """
     np_slots = _pow2(nc * cfg.max_cwnd_pkts + 4 * cfg.n_hosts + 64)
     max_ev = 3 * cfg.n_hosts
     return float(np_slots + nc * msg / 8.0 + max_ev * (nc + 1) / 8.0 + f + w)
 
 
-def _cell_cost(cfg: SimConfig, s: CellShape) -> float:
-    return s.rows * s.ticks * est_row_tick_cost(cfg, s.nc, s.msg, s.f, s.w)
+def measured_costs_from_bench(path_or_rows) -> dict:
+    """Harvest the packer's measured-cost feedback from a benchmark file.
+
+    Args:
+        path_or_rows: path to a ``BENCH_netsim.json`` (or its already-loaded
+            ``rows`` dict).  The PackPlan-keyed ``{fig}/bucket/*`` rows that
+            ``benchmarks/common.figure_grid`` emits carry ``bucket_key =
+            [ticks, adaptive, nc, msg, f, w]`` next to the *measured*
+            ``measured_row_tick_us`` wall-clock of that bucket's scan.
+
+    Returns:
+        ``{(adaptive, pow2(nc), msg, f, w): mean measured_row_tick_us}`` —
+        the per-row-tick cost is horizon-independent, so ``ticks`` is
+        dropped; ``nc`` quantizes to the pow2 grouping grid because bucket
+        keys record the shrink-to-fit *exact* conn count while the packer's
+        merge decisions compare pow2-quantized shapes.  Multiple samples of
+        one shape (several figures / sub-buckets) average.  Missing or
+        malformed files yield ``{}`` (the packer then falls back to
+        ``est_row_tick_cost`` everywhere).
+    """
+    rows = path_or_rows
+    if not isinstance(rows, dict):
+        import json
+
+        try:
+            with open(path_or_rows) as fh:
+                rows = json.load(fh).get("rows", {})
+        except (OSError, ValueError, AttributeError):
+            return {}
+    acc: dict[tuple, list] = {}
+    if not isinstance(rows, dict):
+        return {}
+    for name, rec in rows.items():
+        if "/bucket/" not in str(name) or not isinstance(rec, dict):
+            continue
+        key = rec.get("bucket_key")
+        us = rec.get("measured_row_tick_us")
+        try:
+            _t, ad, nc, msg, f, w = key
+            k = (bool(ad), _pow2(nc), int(msg), int(f), int(w))
+            us = float(us)
+        except (TypeError, ValueError):  # malformed row: skip, don't abort
+            continue
+        if us > 0:
+            acc.setdefault(k, []).append(us)
+    return {k: sum(v) / len(v) for k, v in acc.items()}
+
+
+def _cost_model(cfg: SimConfig, measured: dict | None):
+    """Per-row-tick cost function for ``pack``: measured µs where a shape
+    was benchmarked, the footprint estimate *calibrated to µs* elsewhere
+    (scale = median measured/estimate ratio over the measured keys, so
+    mixing the two inside one merge comparison stays unit-consistent).
+    Deterministic: pure arithmetic over the sorted measured dict."""
+    if not measured:
+        return lambda ad, nc, msg, f, w: est_row_tick_cost(cfg, nc, msg, f, w)
+    ratios = sorted(
+        us / max(est_row_tick_cost(cfg, *k[1:]), 1e-9)
+        for k, us in measured.items()
+    )
+    scale = ratios[len(ratios) // 2]
+
+    def cost(ad, nc, msg, f, w):
+        hit = measured.get((ad, nc, msg, f, w))
+        if hit is None:
+            hit = measured.get((ad, _pow2(nc), msg, f, w))
+        if hit is not None:
+            return hit
+        return scale * est_row_tick_cost(cfg, nc, msg, f, w)
+
+    return cost
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,7 +329,21 @@ class BucketPlan:
 
 @dataclasses.dataclass(frozen=True)
 class PackPlan:
-    """The packer's full output — inspect via ``SweepEngine.plan``."""
+    """The packer's full output — inspect via ``SweepEngine.plan``.
+
+    A pure host-side dataclass tree (no jax arrays): ``buckets`` is the
+    ordered tuple of :class:`BucketPlan` rows the engine will materialize,
+    ``n_devices`` the mesh width every bucket's rows were padded for, and
+    ``packer`` the :class:`PackerConfig` that produced the plan.
+
+    Invariants (property-tested): cells covered exactly once across
+    ``buckets``; per split-group aggregate ``merge_waste`` ≤ the packer's
+    budget (``group_merge_waste()``); every ``n_padded_rows`` divisible by
+    ``n_devices``.  Plans are deterministic in (cfg, shapes, packer,
+    n_devices, measured_costs) — replanning with identical inputs yields
+    an identical (``==``) plan, which is what lets benchmark files key
+    rows by plan shape.  ``describe()`` renders the human-readable form.
+    """
 
     buckets: tuple[BucketPlan, ...]
     n_devices: int
@@ -348,23 +434,61 @@ def pack(
     shapes: Sequence[CellShape],
     packer: PackerConfig = PackerConfig(),
     n_devices: int = 1,
+    measured_costs: dict | None = None,
 ) -> PackPlan:
     """Plan buckets for quantized cell shapes (pure; deterministic).
 
-    Guarantees (property-tested):
+    Args:
+        cfg: the sweep's base :class:`SimConfig` (only static sizing fields
+            feed the cost model).
+        shapes: one :class:`CellShape` per cell — quantized padded shapes
+            plus the cell's seed-row count.  Names must be unique.
+        packer: merge/split knobs, see :class:`PackerConfig`.
+        n_devices: sweep mesh size; bucket rows pad to a multiple of it.
+        measured_costs: optional ``{(adaptive, nc, msg, f, w): µs}`` map of
+            *measured* per-row-tick wall-clock (the PackPlan-keyed
+            ``{fig}/bucket/*`` rows of ``BENCH_netsim.json`` — build it with
+            :func:`measured_costs_from_bench`).  Where a candidate shape was
+            benchmarked its measured cost replaces the footprint estimate in
+            every merge comparison; unbenchmarked shapes fall back to the
+            estimate calibrated to µs (median measured/estimate ratio), so
+            the two are unit-compatible.  ``None``/``{}`` = pure estimate.
+
+    Returns:
+        A :class:`PackPlan` — a pure dataclass tree (no jax arrays) that
+        ``SweepEngine`` materializes and that tests/benchmarks assert on.
+
+    Invariants (property-tested in tests/test_sweep.py):
       * every cell lands in exactly one bucket;
       * ``n_rows <= max(max_rows_per_bucket, largest cell) + n_devices - 1``
         for every bucket (cells are atomic; capacities are device-rounded);
       * aggregate ``merge_waste <= waste_budget`` for every split group
         (``PackPlan.group_merge_waste`` — the merge decision's level; a
-        single sub-bucket of a heterogeneous group can sit above it);
+        single sub-bucket of a heterogeneous group can sit above it) under
+        whichever cost model (estimated or measured) planned it;
       * ``n_padded_rows`` is a multiple of ``n_devices`` and every device
-        is assigned exactly ``n_padded_rows / n_devices`` rows.
+        is assigned exactly ``n_padded_rows / n_devices`` rows;
+      * planning is deterministic: identical inputs (including the
+        ``measured_costs`` dict) reproduce the identical plan.
+
+    Note on bit-parity: the plan decides each bucket's padded conn count
+    (shrink-to-fit to its members' max *exact* conn count).  Conn padding
+    is RNG-visible to spraying load balancers — jax threefry draws are
+    **not prefix-stable** (a ``(480,)`` uniform draw shares no prefix with
+    a ``(512,)`` draw), so two plans that bucket a cell differently can
+    both be *self*-consistent yet produce different per-cell streams.
+    Every plan is bit-identical to its own ``serial_sim`` reference; only
+    cells whose exact conn count equals their bucket's fit size are
+    additionally bit-identical to a *raw* unpadded run.
     """
     assert n_devices >= 1
     assert shapes, "need at least one cell"
     names = [s.name for s in shapes]
     assert len(set(names)) == len(names), "cell names must be unique"
+    cost_fn = _cost_model(cfg, measured_costs)
+
+    def _cell_cost(s: CellShape) -> float:
+        return s.rows * s.ticks * cost_fn(s.adaptive, s.nc, s.msg, s.f, s.w)
 
     # 1. exact-shape grouping (insertion order kept for determinism)
     by_key: dict[tuple, _Group] = {}
@@ -373,11 +497,11 @@ def pack(
     groups = list(by_key.values())
 
     def native(g: _Group) -> float:
-        return sum(_cell_cost(cfg, s) for s in g.shapes)
+        return sum(_cell_cost(s) for s in g.shapes)
 
     def est(key: tuple, rows: int) -> float:
-        t, _ad, nc, msg, f, w = key
-        return rows * t * est_row_tick_cost(cfg, nc, msg, f, w)
+        t, ad, nc, msg, f, w = key
+        return rows * t * cost_fn(ad, nc, msg, f, w)
 
     # 2. greedy lowest-waste pairwise merging under the budget.  Group
     #    key/rows/native are additive under merge, so they are memoized and
@@ -445,7 +569,7 @@ def pack(
         shared_pad = (
             _pad_to(max(fill), n_devices) if len(bins) > 1 else None
         )
-        row_cost = key[0] * est_row_tick_cost(cfg, *key[2:])
+        row_cost = key[0] * cost_fn(key[1], *key[2:])
         for cells, used in zip(bins, fill):
             buckets.append(
                 BucketPlan(
@@ -460,7 +584,7 @@ def pack(
                     ),
                     n_devices=n_devices,
                     est_row_cost=row_cost,
-                    native_cost=sum(_cell_cost(cfg, s) for s in cells),
+                    native_cost=sum(_cell_cost(s) for s in cells),
                 )
             )
     return PackPlan(
@@ -649,9 +773,26 @@ class SweepResult:
         )
 
     def telemetry_for(self, name: str, seed_idx: int = 0) -> dict:
-        """Finalized sketch channels for one cell row — requires the sweep
-        to have run with ``collect="summary"``.  Finalization uses the
-        cell's *own* horizon (rows of a merged bucket froze there)."""
+        """Finalized sketch channels for one cell row.
+
+        Args:
+            name: the cell's ``SweepCase.name``.
+            seed_idx: index into the cell's ``seeds`` tuple (not the seed
+                value itself).
+
+        Returns:
+            ``{channel key: finalized dict}`` as produced by each channel's
+            ``finalize`` — e.g. ``["fct"]["counts"]``,
+            ``["recovery"]["recovery_us"]`` for the default spec.
+            Finalization uses the cell's *own* horizon (rows of a
+            horizon-merged bucket froze bit-exactly there), so the result
+            is identical whether or not the cell shared its bucket.
+
+        Raises:
+            ValueError: if the sweep did not run with
+                ``collect="summary"`` (no sketches were carried).
+            KeyError: unknown cell name.
+        """
         b, c = self._find(name)
         if b.telemetry is None:
             raise ValueError(
@@ -721,7 +862,17 @@ class SweepResult:
 
 class SweepEngine:
     """Packs a list of SweepCases into cost-aware buckets and runs each as
-    one compiled, row-sharded, donated-carry scan."""
+    one compiled, row-sharded, donated-carry scan.
+
+    ``kernels_backend`` pins the engine's segment-rank/segment-sum hot-spot
+    backend (``SimConfig.kernels_backend``) for every bucket program:
+    ``None`` keeps the config's own setting, ``"auto"`` resolves against
+    the sweep mesh's platform (compiled Pallas kernels on TPU, the jnp
+    formulations elsewhere), ``"pallas"`` forces the kernels — compiled on
+    TPU, ``interpret=True`` elsewhere (slow; the bit-parity reference CI
+    runs).  ``measured_costs`` feeds the packer's measured-cost model, see
+    ``pack``/``measured_costs_from_bench``.
+    """
 
     def __init__(
         self,
@@ -730,6 +881,8 @@ class SweepEngine:
         devices: int | str | None = "auto",
         min_conn_bucket: int = 8,
         packer: PackerConfig | None = None,
+        kernels_backend: str | None = None,
+        measured_costs: dict | None = None,
     ):
         self.cfg = cfg
         self.cases = list(cases)
@@ -743,6 +896,14 @@ class SweepEngine:
         self.n_devices = (
             self.mesh.shape[SWEEP_AXIS] if self.mesh is not None else 1
         )
+        # resolve the backend (incl. the config's own "auto") against the
+        # row mesh's platform, ONE shared rule for every layer
+        resolved = resolve_kernels_backend(
+            kernels_backend or cfg.kernels_backend, self.mesh
+        )
+        if resolved != cfg.kernels_backend:
+            self.cfg = cfg = cfg.replace(kernels_backend=resolved)
+        self.kernels_backend = resolved
         self.min_conn_bucket = min_conn_bucket
         self.packer = packer or PackerConfig()
         self._default_watch_arr = self._default_watch()
@@ -751,6 +912,7 @@ class SweepEngine:
             [self._quantize(c) for c in self.cases],
             self.packer,
             self.n_devices,
+            measured_costs=measured_costs,
         )
         self.programs: dict[int, _Program] = {}
         self.buckets = self._build_buckets()

@@ -280,9 +280,17 @@ class Histogram:
             0,
             self.n_bins - 1,
         )
-        lo = v["counts_lo"].at[jnp.where(mask, idx, self.n_bins)].add(
-            1, mode="drop"
+        # dense one-hot bincount: a scatter-add here would serialize over
+        # rows × K on the CPU/TPU backends (engine.py hot-path notes); the
+        # (K, n_bins) masked reduce is vectorized and bit-identical
+        binned = jnp.sum(
+            (
+                (idx[:, None] == jnp.arange(self.n_bins, dtype=idx.dtype))
+                & mask[:, None]
+            ).astype(jnp.int32),
+            axis=0,
         )
+        lo = v["counts_lo"] + binned
         hi, lo = v["counts_hi"] + (lo >> SUM_SHIFT), lo & ((1 << SUM_SHIFT) - 1)
         return {"counts_hi": hi, "counts_lo": lo}
 
@@ -335,10 +343,18 @@ class WindowedSeries:
 
     def update(self, built, v: dict, probe: Probe) -> dict:
         w = jnp.minimum(probe.now // built["stride"], built["nw"] - 1)
+        # dense one-hot row add — a scalar-index scatter here would cost a
+        # serialized scatter thunk per row per tick on CPU/TPU (engine.py
+        # hot-path notes); adds are 0 off-window and on quiescent ticks,
+        # so the update stays a bitwise no-op where it must be
+        row = (
+            jnp.arange(built["nw"], dtype=jnp.int32) == w
+        )[:, None]  # (nw, 1)
         return {
-            "util": v["util"].at[w].add(probe.watch_served),
-            "qlen_sum": v["qlen_sum"].at[w].add(probe.watch_qlen),
-            "stats": v["stats"].at[w].add(probe.stats_delta),
+            "util": v["util"] + jnp.where(row, probe.watch_served[None, :], 0),
+            "qlen_sum": v["qlen_sum"]
+            + jnp.where(row, probe.watch_qlen[None, :], 0),
+            "stats": v["stats"] + jnp.where(row, probe.stats_delta[None, :], 0),
         }
 
     def finalize(self, built, v: dict, horizon: int) -> dict:
@@ -431,10 +447,25 @@ class RecoveryTracker:
 
 @dataclasses.dataclass(frozen=True)
 class TelemetrySpec:
-    """A declarative, hashable channel set.  ``build(sim, ticks)`` compiles
-    it against one simulator program (shapes, horizon) into a
-    ``TelemetryProgram``; the same spec can be built against many programs
-    (one per sweep bucket group)."""
+    """A declarative, hashable channel set.
+
+    ``channels`` is a tuple of frozen channel dataclasses (``CounterTotals``,
+    ``RunningScalars``, ``Histogram``, ``WindowedSeries``,
+    ``RecoveryTracker``, or user-defined objects with the same
+    build/slots/init/update/finalize protocol); channel ``key``s must be
+    unique within a spec.  ``build(sim, ticks)`` compiles the set against
+    one simulator program (shapes, horizon) into a ``TelemetryProgram``;
+    the same spec can be built against many programs (one per sweep bucket
+    group), and specs are hashable so engines can cache programs per spec.
+
+    Invariants: every channel update is a pure ``(carry, probe) -> carry``
+    reducer that is a bitwise no-op on an all-zero (quiescent-tick) probe —
+    that property is what makes ``collect="summary"`` compatible with
+    quiescence early exit and per-row horizon freezing.  ``default()`` is
+    the spec whose sketches rebuild a ``RunSummary`` bit-identically
+    (counters, completions, runtime, mean FCT; percentiles to bin
+    resolution) — see ``SUMMARY_CHANNEL_KEYS``.
+    """
 
     channels: tuple = ()
 

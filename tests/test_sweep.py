@@ -303,6 +303,76 @@ def test_packer_merges_failure_axis_and_rejects_costly_merges():
     assert len(plan2.buckets) == 2
 
 
+def test_packer_measured_costs_replan_deterministic():
+    """pack(measured_costs=...) — the measured-cost model (ROADMAP's
+    feedback loop): empty == pure estimate, replans are deterministic, and
+    measured numbers that contradict the footprint estimate flip the merge
+    decision while the waste budget stays enforced under the measured
+    model."""
+    from repro.netsim.sweep import est_row_tick_cost, measured_costs_from_bench
+
+    shapes = [
+        CellShape("a", 1000, False, 32, 128, 1, 16, 2, nc_exact=32),
+        CellShape("b", 1000, False, 64, 128, 1, 16, 2, nc_exact=60),
+    ]
+    base = pack(FATTREE_32_CI, shapes, PackerConfig(), 1)
+    assert pack(FATTREE_32_CI, shapes, PackerConfig(), 1,
+                measured_costs={}) == base
+    assert pack(FATTREE_32_CI, shapes, PackerConfig(), 1,
+                measured_costs=None) == base
+
+    # The footprint estimate refuses this merge (padding 32 -> 64 conns
+    # doubles the packet-table term, beyond the 25% budget).
+    assert len(base.buckets) == 2
+    # Measured truth says both shapes cost the same per row-tick: the
+    # padded union is free under the measured model -> the decision flips.
+    flat = {
+        (False, 32, 128, 1, 16): 500.0,
+        (False, 64, 128, 1, 16): 500.0,
+    }
+    merged = pack(FATTREE_32_CI, shapes, PackerConfig(), 1,
+                  measured_costs=flat)
+    assert len(merged.buckets) == 1
+    assert merged.buckets[0].merge_waste <= PackerConfig().waste_budget + 1e-9
+    assert pack(FATTREE_32_CI, shapes, PackerConfig(), 1,
+                measured_costs=dict(flat)) == merged  # deterministic
+    # Measured truth that agrees with the estimate (the big shape is much
+    # costlier than the padded small one) keeps them split.
+    expensive = {
+        (False, 32, 128, 1, 16): 100.0,
+        (False, 64, 128, 1, 16): 1000.0,
+    }
+    split = pack(FATTREE_32_CI, shapes, PackerConfig(), 1,
+                 measured_costs=expensive)
+    assert len(split.buckets) == 2
+
+    # Harvesting from BENCH rows: bucket rows keyed by PackPlan, exact conn
+    # counts quantize onto the packer's pow2 grid, samples average, and
+    # non-bucket rows / malformed files are ignored.
+    rows = {
+        "figX/bucket/g0.0": {"bucket_key": [1000, 0, 60, 128, 1, 16],
+                             "measured_row_tick_us": 700.0},
+        "figX/bucket/g0.1": {"bucket_key": [1000, 0, 64, 128, 1, 16],
+                             "measured_row_tick_us": 900.0},
+        "figX/sweep_total": {"ticks_per_sec": 1.0},
+        "figY/bucket/bad": {"bucket_key": [1, 2], "measured_row_tick_us": 1},
+        "figY/bucket/null": {"bucket_key": [1000, 0, None, 128, 1, 16],
+                             "measured_row_tick_us": 5.0},
+        "figY/bucket/str": {"bucket_key": "oops",
+                            "measured_row_tick_us": "fast"},
+    }
+    assert measured_costs_from_bench(rows) == {(False, 64, 128, 1, 16): 800.0}
+    assert measured_costs_from_bench("/nonexistent/path.json") == {}
+    # calibration: unmeasured shapes scale the estimate by the median
+    # measured/est ratio, so relative estimate ordering is preserved
+    mc = measured_costs_from_bench(rows)
+    scaled = pack(FATTREE_32_CI, shapes, PackerConfig(), 1, measured_costs=mc)
+    assert {len(b.cells) for b in scaled.buckets} == {
+        len(b.cells) for b in base.buckets
+    }
+    del est_row_tick_cost  # imported for documentation of the model
+
+
 # ---------------------------------------------------------------------------
 # Failure-schedule padding / truncation semantics.
 # ---------------------------------------------------------------------------

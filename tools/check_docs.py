@@ -1,0 +1,117 @@
+"""Docs consistency check (CI `docs` job).
+
+Fails on:
+  * broken intra-repo markdown links (``[text](path)`` where ``path`` is
+    not an http(s)/mailto URL and does not resolve to a file or directory
+    relative to the markdown file, repo-root ``/``-prefixed paths allowed;
+    ``#fragment``-only links are checked against the same file's headings);
+  * figure-table rows (any markdown table whose cells name a
+    ``benchmarks/figNN_*.py`` or ``benchmarks/table*.py`` module) pointing
+    at files that don't exist;
+  * backticked repo paths of the form ``src/...``, ``benchmarks/...``,
+    ``tests/...``, ``docs/...``, ``tools/...`` that don't exist.
+
+Scope: README.md, ROADMAP.md, and every ``docs/*.md``.
+
+Run: ``python tools/check_docs.py`` (exit 1 on any failure).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(
+    r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s+(?:\"[^\"]*\"|'[^']*'))?\s*\)"
+)
+BENCH_RE = re.compile(r"benchmarks/(?:fig|table)\w*\.py")
+PATH_RE = re.compile(
+    r"`((?:src|benchmarks|tests|docs|tools|examples)/[\w./-]+"
+    r"\.(?:py|md|json|yml|yaml|txt|sh))`"
+)
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor: lowercase, drop non-word chars, each space
+    becomes one dash (GitHub does not collapse runs)."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def file_anchors(text: str) -> set[str]:
+    """All anchors GitHub generates for a document's headings, including
+    the ``-1``/``-2`` suffixes it appends to duplicate headings."""
+    anchors: set[str] = set()
+    seen: dict[str, int] = {}
+    for h in HEADING_RE.findall(text):
+        slug = slugify(h)
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(md_path: str) -> list[str]:
+    errors: list[str] = []
+    text = open(md_path, encoding="utf-8").read()
+    rel = os.path.relpath(md_path, ROOT)
+    base = os.path.dirname(md_path)
+    anchors = file_anchors(text)
+
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, frag = target.partition("#")
+        if not path:  # same-file fragment
+            if frag and slugify(frag) not in anchors and frag not in anchors:
+                errors.append(f"{rel}: broken anchor #{frag}")
+            continue
+        resolved = (
+            os.path.join(ROOT, path.lstrip("/"))
+            if path.startswith("/")
+            else os.path.join(base, path)
+        )
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: broken link {target}")
+        elif frag and resolved.endswith(".md"):
+            # cross-file fragment: validate against that file's headings
+            tgt_anchors = file_anchors(
+                open(resolved, encoding="utf-8").read()
+            )
+            if slugify(frag) not in tgt_anchors and frag not in tgt_anchors:
+                errors.append(f"{rel}: broken anchor {target}")
+
+    for mod in set(BENCH_RE.findall(text)):
+        if not os.path.exists(os.path.join(ROOT, mod)):
+            errors.append(f"{rel}: figure table names nonexistent {mod}")
+
+    for p in set(PATH_RE.findall(text)):
+        if not os.path.exists(os.path.join(ROOT, p)):
+            errors.append(f"{rel}: backticked path {p} does not exist")
+
+    return errors
+
+
+def main() -> int:
+    files = [os.path.join(ROOT, "README.md"), os.path.join(ROOT, "ROADMAP.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    errors: list[str] = []
+    for f in files:
+        if os.path.exists(f):
+            errors += check_file(f)
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(
+        f"checked {len(files)} files: "
+        + ("FAIL" if errors else "ok")
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
