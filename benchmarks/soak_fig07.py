@@ -1,0 +1,149 @@
+"""Fig 7-class soak entry: the failure-modes macro grid driven through the
+checkpointed soak runtime (repro.netsim.soak) instead of the batch path.
+
+Not part of the benchmarks/run.py row harness — this is the CLI the CI
+soak-smoke job drives to prove the preemption contract end-to-end on a real
+figure grid:
+
+    # uninterrupted golden
+    python -m benchmarks.soak_fig07 --ckpt /tmp/ck_a --out straight.json
+    # killed mid-run (exits 137 after the boundary checkpoint commits) ...
+    python -m benchmarks.soak_fig07 --ckpt /tmp/ck_b --kill-at 240 || true
+    # ... resumed, must be bit-identical to the golden
+    python -m benchmarks.soak_fig07 --ckpt /tmp/ck_b --resume --out resumed.json
+    diff straight.json resumed.json
+
+The emitted JSON is a canonical byte-stable record of everything a figure
+would read: every cell/seed ``RunSummary`` field verbatim plus a sha256 of
+each cell's raw telemetry sketch carry — if the two files are equal, the
+resumed figures are bit-equal.  ``--inject-spine N`` additionally kills one
+spine mid-run through ``SoakRunner.inject`` (same merge path as a
+pre-declared schedule; tests/test_soak.py asserts that equivalence).
+
+Scaled down from fig07's horizons so the whole kill/resume matrix fits a
+CI minute; BENCH_SEEDS widens the per-cell seed axis as usual.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+from benchmarks.common import ci_cfg, msg, sweep_case
+from repro.netsim import SoakConfig, SoakRunner, SweepEngine, failures, workloads
+
+LBS = ["ops", "reps"]
+MIN_FAILURE_SLOTS = 16  # headroom for --inject-spine deltas
+
+
+def cases(cfg, ticks: int):
+    """The fig07 structure (static partial failures + permutation and ring
+    AllReduce blocks x LB columns) at soak-smoke horizons: the AllReduce
+    block runs 2x the permutation horizon, so the grid exercises
+    horizon-heterogeneous buckets under the soak cursor."""
+    fs = failures.random_down_uplinks(
+        cfg, 0.05, max(ticks // 8, 1), failures.FOREVER, seed=7
+    )
+    n = cfg.n_hosts
+    blocks = [
+        ("permutation", workloads.permutation(n, msg(48, 2048), seed=1), ticks),
+        ("ring_allreduce", workloads.ring_allreduce(16, msg(24, 1024)), 2 * ticks),
+    ]
+    out = []
+    for wname, wl, t in blocks:
+        for lbn in LBS:
+            kw = {"freezing_timeout": 800} if lbn == "reps" else {}
+            out.append(
+                sweep_case(f"fig07soak/{wname}/{lbn}", wl, lbn, t, cfg,
+                           failures=fs, **kw)
+            )
+    return out
+
+
+def record(soak: SoakRunner) -> dict:
+    """Canonical JSON-able record of the finished run: exact RunSummary
+    fields per cell/seed + sha256 of each cell's sketch rows."""
+    res = soak.result()
+    summaries = {
+        name: [dataclasses.asdict(s) for s in ss]
+        for name, ss in sorted(res.summaries().items())
+    }
+    tel_sha = {}
+    for b in res.buckets:
+        for c in b.cells:
+            h = hashlib.sha256()
+            for row in c.rows:
+                h.update(b.telemetry[row].tobytes())
+            tel_sha[c.case.name] = h.hexdigest()
+    return {
+        "cursor": int(soak.cursor),
+        "injections": soak.injections,
+        "summaries": summaries,
+        "telemetry_sha256": dict(sorted(tel_sha.items())),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ckpt", required=True, help="checkpoint root dir")
+    ap.add_argument("--ticks", type=int, default=480,
+                    help="permutation-block horizon (AllReduce runs 2x)")
+    ap.add_argument("--chunk", type=int, default=120,
+                    help="ticks per chunk == checkpoint cadence")
+    ap.add_argument("--kill-at", type=int, default=None,
+                    help="os._exit(137) at the first boundary >= this tick "
+                         "(after its checkpoint commits) — the simulated "
+                         "preemption")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest committed snapshot first")
+    ap.add_argument("--inject-spine", type=int, default=None,
+                    help="inject a spine_down delta mid-run")
+    ap.add_argument("--inject-at", type=int, default=None,
+                    help="cursor tick for --inject-spine (defaults to one "
+                         "chunk in; must be a boundary the run reaches)")
+    ap.add_argument("--out", default=None, help="write the record JSON here")
+    args = ap.parse_args(argv)
+
+    cfg = ci_cfg()
+    engine = SweepEngine(
+        cfg, cases(cfg, args.ticks), min_failure_slots=MIN_FAILURE_SLOTS
+    )
+    soak = SoakRunner(
+        engine, SoakConfig(chunk=args.chunk, ckpt_dir=args.ckpt)
+    )
+    if args.resume:
+        soak.resume()
+        print(f"resumed at cursor {soak.cursor} "
+              f"({len(soak.injections)} injection(s) replayed)")
+
+    inject_at = None
+    if args.inject_spine is not None:
+        inject_at = args.inject_at if args.inject_at is not None else args.chunk
+
+    while not soak.done:
+        if (inject_at is not None and soak.cursor == inject_at
+                and not soak.injections):
+            soak.inject(failures.spine_down(cfg, args.inject_spine,
+                                            start=inject_at))
+            print(f"injected spine_down({args.inject_spine}) at {inject_at}")
+        soak.advance(args.chunk)
+        if args.kill_at is not None and soak.cursor >= args.kill_at:
+            print(f"killed at cursor {soak.cursor} (checkpoint committed)")
+            os._exit(137)  # hard preemption: no atexit, no cleanup
+
+    rec = record(soak)
+    blob = json.dumps(rec, indent=1, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+    for name, sha in rec["telemetry_sha256"].items():
+        done = rec["summaries"][name][0]["completed"]
+        print(f"{name}: completed={done} sketch={sha[:12]}")
+    print(f"cursor={rec['cursor']}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

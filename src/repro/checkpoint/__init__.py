@@ -1,3 +1,9 @@
-from repro.checkpoint.checkpoint import is_committed, latest, restore, save, save_async
+from repro.checkpoint.checkpoint import (
+    SaveHandle, is_committed, latest, prune, read_manifest, restore, save,
+    save_async,
+)
 
-__all__ = ["is_committed", "latest", "restore", "save", "save_async"]
+__all__ = [
+    "SaveHandle", "is_committed", "latest", "prune", "read_manifest",
+    "restore", "save", "save_async",
+]

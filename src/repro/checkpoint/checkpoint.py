@@ -1,19 +1,41 @@
-"""Sharded checkpointing with elastic restore.
+"""Sharded checkpointing with elastic restore and crash-safe commits.
 
-Format: one .npz per pytree (params / opt_state) + a JSON manifest holding
-the tree structure, shapes, dtypes and *logical axes*.  Restore re-shards
-onto whatever mesh/rules are active — the elastic-scaling path (restart on
-a different device count after failures) is therefore just `restore()`
-under the new mesh.
+Format: one .npz per pytree (params / opt_state / soak carries) + a JSON
+manifest holding the tree structure, shapes, dtypes and *logical axes*.
+Restore re-shards onto whatever mesh/rules are active — the elastic-scaling
+path (restart on a different device count after failures) is therefore just
+`restore()` under the new mesh.
+
+Crash-safety contract (the soak runtime's resume path depends on it):
+
+* **Atomic commit.**  ``save`` stages every file (npz trees, manifest,
+  ``COMMITTED`` marker) into a ``<path>.tmp.<pid>`` sibling, fsyncs each
+  file, then ``os.rename``s the staging dir onto ``path`` and fsyncs the
+  parent directory — a reader can never observe a half-written snapshot
+  under ``path``, and a crash at any byte leaves at most a stale ``.tmp``
+  dir (``prune`` sweeps those).
+* **Committed gating.**  ``is_committed`` / ``latest`` only ever surface
+  snapshots whose marker exists *and* whose manifest parses; anything else
+  (interrupted rename targets, manually truncated files) is skipped, not
+  returned.
+* **Transient-IO retry.**  ``save(..., retries=N)`` retries the whole
+  staged commit with exponential backoff on ``OSError`` — the bounded
+  retry loop long-horizon soak runs want for flaky network filesystems.
+* **Async error surfacing.**  ``save_async`` snapshots device arrays to
+  host synchronously, writes in a worker thread, and re-raises any worker
+  exception from ``join()`` — a failed background save can no longer be
+  silently swallowed.
 
 Saves can run asynchronously (background thread over a host snapshot) so
-the train loop isn't blocked on I/O — the standard large-run pattern.
+the train/soak loop isn't blocked on I/O — the standard large-run pattern.
 """
 from __future__ import annotations
 
 import json
 import os
+import shutil
 import threading
+import time
 from typing import Any, Optional
 
 import jax
@@ -23,6 +45,7 @@ import numpy as np
 from repro.distrib.sharding import named_sharding
 
 _SEP = "/"
+_TMP_MARK = ".tmp."
 
 
 def _flatten(tree, is_leaf=None) -> dict[str, Any]:
@@ -39,44 +62,155 @@ def _flatten_axes(tree) -> dict[str, Any]:
     return _flatten(tree, is_leaf=lambda x: isinstance(x, (tuple, list)) or x == ())
 
 
-def save(path: str, step: int, trees: dict[str, Any], axes: Optional[dict] = None):
+def _fsync_path(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _save_once(
+    path: str, step: int, trees: dict[str, Any], axes: Optional[dict],
+    extra: Optional[dict],
+):
+    path = os.path.abspath(path)
+    parent = os.path.dirname(path)
+    os.makedirs(parent, exist_ok=True)
+    tmp = f"{path}{_TMP_MARK}{os.getpid()}"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    try:
+        manifest = {"step": int(step), "trees": {}}
+        for name, tree in trees.items():
+            flat = _flatten(
+                jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+            )
+            fpath = os.path.join(tmp, f"{name}.npz")
+            np.savez(fpath, **flat)
+            _fsync_path(fpath)
+            treedef = jax.tree_util.tree_structure(tree)
+            manifest["trees"][name] = {
+                "treedef": str(treedef),
+                "keys": sorted(flat.keys()),
+            }
+        if axes is not None:
+            manifest["axes"] = jax.tree.map(
+                lambda t: list(t) if isinstance(t, tuple) else t,
+                axes,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        if extra:
+            for k in extra:
+                assert k not in manifest, f"extra manifest key {k!r} collides"
+            manifest.update(extra)
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, default=str)
+            f.flush()
+            os.fsync(f.fileno())
+        # marker written inside the staging dir: the rename below is the
+        # single atomic commit point, the marker just gates readers that
+        # predate atomic staging (and manual copies of snapshot dirs)
+        cpath = os.path.join(tmp, "COMMITTED")
+        with open(cpath, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        _fsync_path(parent)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def save(
+    path: str,
+    step: int,
+    trees: dict[str, Any],
+    axes: Optional[dict] = None,
+    extra: Optional[dict] = None,
+    retries: int = 0,
+    backoff_s: float = 0.05,
+):
     """trees: {"params": ..., "opt_state": ...}; axes: matching logical-axis
-    trees (stored so restore can reshard)."""
-    os.makedirs(path, exist_ok=True)
-    manifest = {"step": int(step), "trees": {}}
-    for name, tree in trees.items():
-        flat = _flatten(jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree))
-        np.savez(os.path.join(path, f"{name}.npz"), **flat)
-        treedef = jax.tree_util.tree_structure(tree)
-        manifest["trees"][name] = {
-            "treedef": str(treedef),
-            "keys": sorted(flat.keys()),
-        }
-    if axes is not None:
-        manifest["axes"] = jax.tree.map(
-            lambda t: list(t) if isinstance(t, tuple) else t,
-            axes,
-            is_leaf=lambda x: isinstance(x, tuple),
-        )
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, default=str)
-    # atomic completion marker
-    with open(os.path.join(path, "COMMITTED"), "w") as f:
-        f.write(str(step))
+    trees (stored so restore can reshard); extra: additional JSON-able
+    manifest fields (e.g. the soak runtime's plan fingerprint + injection
+    log).  ``retries`` > 0 re-attempts the whole atomic commit with
+    exponential backoff on transient ``OSError``s."""
+    for attempt in range(retries + 1):
+        try:
+            _save_once(path, step, trees, axes, extra)
+            return
+        except OSError:
+            if attempt == retries:
+                raise
+            time.sleep(backoff_s * (2 ** attempt))
 
 
-def save_async(path: str, step: int, trees: dict, axes=None) -> threading.Thread:
+class SaveHandle:
+    """Handle on a background save: ``join()`` re-raises any worker
+    exception instead of swallowing it (thread-compatible surface, so
+    existing ``pending.join()`` call sites gain error propagation for
+    free)."""
+
+    def __init__(self, target, args, kwargs):
+        self._exc: BaseException | None = None
+
+        def run():
+            try:
+                target(*args, **kwargs)
+            except BaseException as e:  # surfaced on join, never swallowed
+                self._exc = e
+
+        self._thread = threading.Thread(target=run, daemon=False)
+        self._thread.start()
+
+    def join(self, timeout: float | None = None):
+        self._thread.join(timeout)
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+    @property
+    def exception(self) -> BaseException | None:
+        return self._exc
+
+
+def save_async(
+    path: str, step: int, trees: dict, axes=None, extra: Optional[dict] = None,
+    retries: int = 0, backoff_s: float = 0.05,
+) -> SaveHandle:
+    """Snapshot to host synchronously (cheap, bounded by device->host
+    bandwidth), write in a background thread.  The returned handle's
+    ``join()`` re-raises worker exceptions — callers that previously held a
+    bare ``Thread`` keep working but now see IO failures."""
     snapshot = {
         name: jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         for name, tree in trees.items()
     }
-    t = threading.Thread(target=save, args=(path, step, snapshot, axes))
-    t.start()
-    return t
+    return SaveHandle(
+        save, (path, step, snapshot),
+        {"axes": axes, "extra": extra, "retries": retries,
+         "backoff_s": backoff_s},
+    )
 
 
 def is_committed(path: str) -> bool:
     return os.path.exists(os.path.join(path, "COMMITTED"))
+
+
+def read_manifest(path: str) -> dict:
+    """The snapshot's manifest dict (step, tree layouts, any ``extra``
+    fields recorded at save time).  Raises on uncommitted snapshots."""
+    assert is_committed(path), f"no committed checkpoint at {path}"
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore(path: str, like: dict[str, Any], axes: Optional[dict] = None):
@@ -84,9 +218,7 @@ def restore(path: str, like: dict[str, Any], axes: Optional[dict] = None):
     mesh is active (repro.distrib.sharding.mesh_rules) and `axes` trees are
     given, arrays are device_put with the resolved shardings — this is the
     elastic re-shard path."""
-    assert is_committed(path), f"no committed checkpoint at {path}"
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(path)
     out = {}
     for name, tree in like.items():
         data = np.load(os.path.join(path, f"{name}.npz"))
@@ -112,12 +244,60 @@ def restore(path: str, like: dict[str, Any], axes: Optional[dict] = None):
     return out, manifest["step"]
 
 
+def _snapshot_step(base: str, d: str) -> Optional[int]:
+    """Parse + sanity-check one snapshot dir; None = not a usable snapshot
+    (wrong name shape, uncommitted, or corrupt/unreadable manifest)."""
+    if not d.startswith("step_") or _TMP_MARK in d:
+        return None
+    try:
+        step = int(d.split("_", 1)[1])
+    except ValueError:
+        return None
+    p = os.path.join(base, d)
+    if not is_committed(p):
+        return None
+    try:
+        with open(os.path.join(p, "manifest.json")) as f:
+            json.load(f)
+    except (OSError, ValueError):
+        return None  # committed marker present but manifest unreadable
+    return step
+
+
 def latest(base: str) -> Optional[str]:
+    """Newest *committed, readable* snapshot under ``base`` (or None).
+    Uncommitted dirs, stale ``.tmp.*`` staging dirs and snapshots whose
+    manifest no longer parses are skipped, never returned."""
     if not os.path.isdir(base):
         return None
     steps = []
     for d in os.listdir(base):
-        p = os.path.join(base, d)
-        if d.startswith("step_") and is_committed(p):
-            steps.append((int(d.split("_")[1]), p))
+        step = _snapshot_step(base, d)
+        if step is not None:
+            steps.append((step, os.path.join(base, d)))
     return max(steps)[1] if steps else None
+
+
+def prune(base: str, keep: int) -> list[str]:
+    """Keep the newest ``keep`` committed snapshots under ``base``; delete
+    older ones plus any stale staging (``.tmp.*``) or uncommitted dirs.
+    Returns the deleted paths (for logging)."""
+    assert keep >= 1, "refusing to prune every snapshot"
+    if not os.path.isdir(base):
+        return []
+    committed: list[tuple[int, str]] = []
+    doomed: list[str] = []
+    for d in os.listdir(base):
+        p = os.path.join(base, d)
+        if not os.path.isdir(p):
+            continue
+        step = _snapshot_step(base, d)
+        if step is not None:
+            committed.append((step, p))
+        elif d.startswith("step_") or _TMP_MARK in d:
+            doomed.append(p)  # stale staging / interrupted save
+    committed.sort()
+    doomed.extend(p for _, p in committed[:-keep])
+    for p in doomed:
+        shutil.rmtree(p, ignore_errors=True)
+    return doomed

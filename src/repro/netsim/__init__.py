@@ -6,6 +6,7 @@ from repro.netsim.engine import (
 from repro.netsim.fleet import FleetRunner, FleetTelemetry
 from repro.netsim.metrics import RunSummary, summarize, summarize_sketch
 from repro.netsim.mixed import MixedLB
+from repro.netsim.soak import SoakConfig, SoakRunner
 from repro.netsim.sweep import (
     BucketPlan, CellShape, PackerConfig, PackPlan, SweepCase, SweepEngine,
     SweepResult, est_row_tick_cost, measured_costs_from_bench, pack,
@@ -24,6 +25,7 @@ __all__ = [
     "Workload",
     "FleetRunner", "FleetTelemetry", "RunSummary", "summarize",
     "summarize_sketch", "MixedLB",
+    "SoakConfig", "SoakRunner",
     "SweepCase", "SweepEngine", "SweepResult",
     "BucketPlan", "CellShape", "PackerConfig", "PackPlan",
     "est_row_tick_cost", "measured_costs_from_bench", "pack",

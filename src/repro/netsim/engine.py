@@ -182,6 +182,89 @@ class FailureSchedule:
                 "failure row targets a queue outside the topology"
             )
 
+    def merge(
+        self,
+        delta: "FailureSchedule",
+        at_tick: int = 0,
+        n_queues: int | None = None,
+    ) -> "FailureSchedule":
+        """Merge an event ``delta`` into this schedule — the ONE code path
+        shared by statically declared composites and the soak runtime's
+        live mid-run injection (``SoakRunner.inject`` calls this with
+        ``at_tick`` = the current tick cursor).
+
+        Validation (each violation raises ``ValueError``):
+
+        * every delta row must be a real window starting at or after
+          ``at_tick`` — an event injected into the already-simulated past
+          could never equal the statically-scheduled run it claims to be;
+        * a delta row may not overlap an existing *down* window on the
+          same queue: the link is already dead there, and the delta's own
+          ``end`` would imply a resurrection that pad/truncate semantics
+          forbid (the no-resurrect invariant of ``validate``);
+        * a delta row may not overlap an existing same-kind window on the
+          same queue (a double-scheduled event is a bug, not a request) —
+          a *down* delta over an existing *degraded* window stays legal,
+          exactly like the statically-declared down+degraded composites.
+
+        Rows of ``self`` (including inert pads) are kept bit-unchanged and
+        the delta's live rows are appended, so for any valid delta
+        ``base.merge(delta)`` is ``concat(base, delta_live)`` — an injected
+        run and the equivalent pre-declared schedule produce identical
+        active-sets at every tick.
+        """
+        delta.validate(n_queues)
+        self.validate(n_queues)
+        d_s = np.asarray(delta.start, np.int64)
+        d_e = np.asarray(delta.end, np.int64)
+        d_live = d_e > d_s
+        if not np.all(d_s[d_live] >= at_tick):
+            bad = np.nonzero(d_live & (d_s < at_tick))[0].tolist()
+            raise ValueError(
+                f"delta rows {bad} start before tick {at_tick}: events "
+                "cannot be injected into the already-simulated past"
+            )
+        b_q = np.asarray(self.queue, np.int64)
+        b_s = np.asarray(self.start, np.int64)
+        b_e = np.asarray(self.end, np.int64)
+        b_k = np.asarray(self.kind, np.int64)
+        b_live = b_e > b_s
+        d_q = np.asarray(delta.queue, np.int64)
+        d_k = np.asarray(delta.kind, np.int64)
+        for i in np.nonzero(d_live)[0]:
+            same_q = b_live & (b_q == d_q[i])
+            overlap = same_q & (b_s < d_e[i]) & (d_s[i] < b_e)
+            if np.any(overlap & (b_k == 0)):
+                j = np.nonzero(overlap & (b_k == 0))[0].tolist()
+                raise ValueError(
+                    f"delta row {int(i)} (queue {int(d_q[i])}, "
+                    f"[{int(d_s[i])}, {int(d_e[i])})) overlaps existing "
+                    f"down window(s) {j}: the link is already dead there, "
+                    "and the delta's end tick would resurrect it"
+                )
+            if np.any(overlap & (b_k == d_k[i])):
+                j = np.nonzero(overlap & (b_k == d_k[i]))[0].tolist()
+                raise ValueError(
+                    f"delta row {int(i)} (queue {int(d_q[i])}) overlaps "
+                    f"same-kind window(s) {j}: double-scheduled event"
+                )
+            # accepted rows join the base for subsequent delta-row checks,
+            # so a delta overlapping itself is rejected the same way
+            b_q = np.append(b_q, d_q[i])
+            b_s = np.append(b_s, d_s[i])
+            b_e = np.append(b_e, d_e[i])
+            b_k = np.append(b_k, d_k[i])
+            b_live = np.append(b_live, True)
+        live_delta = FailureSchedule(
+            queue=np.asarray(delta.queue, np.int32)[d_live],
+            start=np.asarray(delta.start, np.int32)[d_live],
+            end=np.asarray(delta.end, np.int32)[d_live],
+            kind=np.asarray(delta.kind, np.int32)[d_live],
+        )
+        merged = FailureSchedule.concat(self, live_delta)
+        merged.validate(n_queues)
+        return merged
+
 
 class ScenarioArrays(NamedTuple):
     """Per-scenario dynamic arrays, split out of the Simulator so the sweep

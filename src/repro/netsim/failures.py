@@ -83,6 +83,22 @@ def random_down_uplinks(
     return link_down(chosen, start, end)
 
 
+def spine_down(
+    cfg: SimConfig, spine: int, start: int, end: int = FOREVER
+) -> FailureSchedule:
+    """Take one whole spine out of a 2-tier fabric: the uplink of *every*
+    TOR that targets ``spine`` goes down for ``[start, end)``.  This is the
+    canonical live-injection delta for the soak runtime's scenario API
+    ("advance 10k ticks, kill a spine, watch recovery") — merge it into a
+    running schedule with ``FailureSchedule.merge`` / ``SoakRunner.inject``.
+    """
+    assert cfg.tiers == 2, "spine_down targets the 2-tier fabric"
+    assert 0 <= spine < cfg.uplinks_per_tor, (spine, cfg.uplinks_per_tor)
+    topo = Topology.build(cfg)
+    qs = [int(topo.t0_up_queues(t)[spine]) for t in range(cfg.n_tors)]
+    return link_down(qs, start, end)
+
+
 def incremental_uplink_failures(
     cfg: SimConfig, tor: int, n_fail: int, first_start: int, interval: int
 ) -> FailureSchedule:

@@ -106,7 +106,7 @@ class FleetRunner:
     @functools.partial(jax.jit, static_argnums=(0, 1, 2))
     def _run_summary(
         self, n_ticks: int, prog, keys: jax.Array, states: SimState,
-        tel: jax.Array,
+        tel: jax.Array, t0: jax.Array,
     ):
         step = jax.vmap(self.sim.step_probe, in_axes=(0, None, 0, None))
         update = jax.vmap(prog.update)
@@ -116,7 +116,7 @@ class FleetRunner:
             new_st, probe = step(st, t, keys, self.sim.scn)
             return (new_st, update(tl, probe)), None
 
-        ticks = jnp.arange(n_ticks, dtype=jnp.int32)
+        ticks = t0 + jnp.arange(n_ticks, dtype=jnp.int32)
         (states, tel), _ = jax.lax.scan(tick, (states, tel), ticks)
         return states, tel
 
@@ -125,24 +125,39 @@ class FleetRunner:
         n_ticks: int,
         spec: TelemetrySpec | None = None,
         states: SimState | None = None,
+        tel: jax.Array | None = None,
+        t0: int = 0,
+        horizon: int | None = None,
     ) -> tuple[SimState, "FleetTelemetry"]:
         """The single-scenario summary path: advance the fleet with the
         spec's sketch channels reduced on device (``collect="summary"`` of
         the sweep engine, same ``TelemetrySpec`` grammar).  Returns the
         stacked final states plus a ``FleetTelemetry`` view — no per-tick
-        trace ever exists, so host traffic is O(seeds × bins)."""
+        trace ever exists, so host traffic is O(seeds × bins).
+
+        Chunked resume: pass the previous call's ``states`` and
+        ``telemetry.tel`` back in together with ``t0`` (ticks already run)
+        and the pinned total ``horizon`` — the concatenation of chunked
+        calls is bit-identical to one uninterrupted call, because the scan
+        sees the same absolute tick values and the same sketch layout.
+        ``horizon`` defaults to ``t0 + n_ticks`` (the one-shot case)."""
         spec = spec or TelemetrySpec.default()
-        key = (spec, int(n_ticks))
+        horizon = int(horizon if horizon is not None else t0 + n_ticks)
+        key = (spec, horizon)
         if key not in self._tel_progs:
-            self._tel_progs[key] = spec.build(self.sim, n_ticks)
+            self._tel_progs[key] = spec.build(self.sim, horizon)
         prog = self._tel_progs[key]
         if states is None:
             states = self.init_states()
-        tel0 = jnp.tile(prog.init()[None], (self.n_runs, 1))
+        if tel is None:
+            tel = jnp.tile(prog.init()[None], (self.n_runs, 1))
         states, tel = self._run_summary(
-            n_ticks, prog, self.base_keys(), states, tel0
+            n_ticks, prog, self.base_keys(), states, jnp.asarray(tel),
+            jnp.asarray(t0, jnp.int32),
         )
-        return states, FleetTelemetry(self, prog, jax.device_get(tel), n_ticks)
+        return states, FleetTelemetry(
+            self, prog, jax.device_get(tel), min(horizon, t0 + int(n_ticks))
+        )
 
     # ------------------------------------------------------------------
     def state_at(self, states: SimState, i: int) -> SimState:

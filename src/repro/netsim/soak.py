@@ -1,0 +1,492 @@
+"""Preemption-proof soak runtime: checkpointed sweeps with bit-exact resume
+and mid-run fault injection.
+
+``SweepEngine.run`` is the batch path: declare the whole grid, run to the
+horizon, read the figures.  Long soak runs need three things the batch path
+cannot give:
+
+* **Preemption-proofness.**  A multi-hour sweep on preemptible capacity
+  must survive a kill at any instant and resume *bit-identically* — not
+  "statistically close": the figure-parity contract of this repo is exact,
+  so a resumed run's summaries, sketches and traces must equal the
+  uninterrupted run's byte for byte.
+* **A scenario API.**  The paper's failover story ("run 10k ticks, kill a
+  spine, watch REPS recycle around it") wants ``advance`` / ``inject`` /
+  ``inspect`` — driving simulated time interactively, injecting failure
+  events mid-run, and observing live telemetry between chunks.
+* **One semantics for injected and declared failures.**  An event injected
+  at tick *t* must behave exactly like the same event pre-declared in the
+  case's ``FailureSchedule`` — enforced here by re-materializing the padded
+  schedule through ``FailureSchedule.merge`` (the same validation path
+  static composites use) and asserted by tests/test_soak.py on full grids.
+
+``SoakRunner`` layers all three over the engine's chunked carry primitives
+(``bucket_carry`` / ``run_chunk`` / ``finalize_bucket``): simulated time
+advances in chunks; each chunk boundary snapshots every bucket's donated
+state carry, telemetry sketch carry and RNG keys through ``repro.checkpoint``
+(atomic tmp-then-rename commits, keep-last-K pruning, bounded-retry saves).
+``resume()`` restores the newest committed snapshot — keys are restored
+from the snapshot, never re-derived, because conn padding is RNG-visible
+and jax's threefry is not prefix-stable — replays the injection log through
+the one merge code path, and continues.
+
+Bit-exactness rests on two engine facts: (1) a chunked scan is bit-equal to
+an unchunked one for any window tiling (the absolute tick is threaded via
+``t0``), and (2) device → npz → device roundtrips are exact for the int32 /
+uint32 / bool carries the simulator holds.
+
+Injection headroom: build the engine with ``min_failure_slots`` big enough
+for the deltas you plan to inject — the reserved inert rows let the merged
+schedule re-materialize without a shape change, and make an injected run
+and its statically-declared equivalent plan identical buckets (identical
+padding, hence identical RNG streams).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.netsim.engine import FailureSchedule, TickTrace
+from repro.netsim.failures import truncate_dead
+from repro.netsim.sweep import SweepEngine, SweepResult
+from repro.netsim.telemetry import TelemetrySpec
+from repro.netsim.topology import Topology
+
+_TRACE_RE = re.compile(r"^trace_b(\d+)_t(\d{9})_n(\d+)\.npz$")
+
+
+@dataclasses.dataclass(frozen=True)
+class SoakConfig:
+    """Knobs for one soak run.
+
+    chunk:          ticks per scan window; every window boundary is a
+                    checkpoint opportunity (and the granularity at which
+                    ``advance`` yields control back to the host).
+    ckpt_dir:       snapshot root (``step_<cursor>`` dirs inside); None
+                    disables checkpointing (pure scenario-API use).
+    keep:           keep-last-K committed snapshots (older ones pruned).
+    collect:        "none" | "summary" | "full" — same contract as
+                    ``SweepEngine.run``; "full" streams per-chunk trace
+                    parts to ``ckpt_dir/traces`` so resume can rebuild the
+                    complete stream.
+    telemetry:      TelemetrySpec for collect="summary" (default spec when
+                    None).
+    async_save:     snapshot to host synchronously but write in a
+                    background thread (``checkpoint.save_async``); the
+                    runner joins — and re-raises worker IO errors — before
+                    starting the next save or finalizing.
+    save_retries:   bounded retry count for transient OSErrors per save.
+    save_backoff_s: base backoff between retries (doubles each attempt).
+    """
+
+    chunk: int = 256
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    collect: str = "summary"
+    telemetry: Optional[TelemetrySpec] = None
+    async_save: bool = False
+    save_retries: int = 2
+    save_backoff_s: float = 0.05
+
+
+class SoakRunner:
+    """Drives a ``SweepEngine`` through simulated time in checkpointed
+    chunks.  See the module docstring for the contract; tests/test_soak.py
+    for the kill-at-every-boundary matrix that enforces it."""
+
+    def __init__(self, engine: SweepEngine, config: SoakConfig | None = None):
+        self.engine = engine
+        self.config = config or SoakConfig()
+        if self.config.collect not in ("none", "summary", "full"):
+            raise ValueError(f"bad collect {self.config.collect!r}")
+        self.spec = (
+            (self.config.telemetry or TelemetrySpec.default())
+            if self.config.collect == "summary"
+            else None
+        )
+        self.cursor = 0
+        self.injections: list[dict] = []
+        self.fingerprint = self._fingerprint()
+        # device-side carries, one per bucket, advanced in lock-step with
+        # `cursor` (a bucket past its own horizon simply stops advancing)
+        self.carries = [
+            engine.bucket_carry(b, self.config.collect, self.spec)
+            for b in engine.buckets
+        ]
+        # collect="full": per-bucket [(t0, n, host TickTrace)] in window
+        # order; mirrored as part files under ckpt_dir/traces when
+        # checkpointing so a resumed process can rebuild the full stream
+        self.trace_parts: list[list[tuple[int, int, Any]]] = [
+            [] for _ in engine.buckets
+        ]
+        self._pending: Optional[ckpt.SaveHandle] = None
+        self._finalized = False
+
+    # ------------------------------------------------------------------
+    @property
+    def horizon(self) -> int:
+        """The grid's max cell horizon — ``advance`` clamps here."""
+        return max(b.ticks for b in self.engine.buckets)
+
+    @property
+    def done(self) -> bool:
+        return self.cursor >= self.horizon
+
+    def _fingerprint(self) -> str:
+        """Digest of everything that shapes execution: the pack plan, the
+        pinned config, every case's scenario arrays, and the collect mode.
+        A snapshot only resumes onto an engine with the same digest —
+        anything else would silently change padding, and padding is
+        RNG-visible."""
+        h = hashlib.sha256()
+        eng = self.engine
+        h.update(eng.plan.describe().encode())
+        h.update(repr(eng.cfg).encode())
+        h.update(str(eng.min_failure_slots).encode())
+        for case in eng.cases:
+            h.update(
+                repr(
+                    (
+                        case.name,
+                        case.ticks,
+                        case.lb,
+                        sorted(case.lb_kwargs.items()),
+                        tuple(int(s) for s in case.seeds),
+                    )
+                ).encode()
+            )
+            wl = case.workload
+            for a in (wl.src, wl.dst, wl.msg_pkts, wl.start, wl.dep):
+                h.update(np.ascontiguousarray(a, np.int64).tobytes())
+            fs = case.failures or FailureSchedule.none()
+            for a in (fs.queue, fs.start, fs.end, fs.kind):
+                h.update(np.ascontiguousarray(a, np.int64).tobytes())
+            h.update(np.ascontiguousarray(
+                eng._watch_for(case), np.int64).tobytes())
+        h.update(repr((self.config.collect, self.spec)).encode())
+        return h.hexdigest()
+
+    # ------------------------------------------------------------------
+    # Scenario API.
+    # ------------------------------------------------------------------
+    def advance(self, n_ticks: int) -> int:
+        """Advance simulated time by up to ``n_ticks`` (clamped to the
+        grid horizon), checkpointing at every chunk boundary crossed.
+        Returns the new cursor."""
+        assert not self._finalized, "runner already finalized"
+        target = min(self.cursor + int(n_ticks), self.horizon)
+        while self.cursor < target:
+            step = min(self.config.chunk, target - self.cursor)
+            t0 = self.cursor
+            for bi, bucket in enumerate(self.engine.buckets):
+                n = min(t0 + step, bucket.ticks) - t0
+                if n <= 0:
+                    continue  # bucket already at its own horizon
+                carry, traces = self.engine.run_chunk(
+                    bucket, self.carries[bi], t0, n,
+                    self.config.collect, self.spec,
+                )
+                self.carries[bi] = carry
+                if self.config.collect == "full":
+                    part = jax.device_get(traces)
+                    self.trace_parts[bi].append((t0, n, part))
+                    self._write_trace_part(bi, t0, n, part)
+            self.cursor = t0 + step
+            self._checkpoint()
+        return self.cursor
+
+    def inject(self, delta: FailureSchedule) -> None:
+        """Inject failure events into the *running* grid at the current
+        cursor.  The delta is validated and merged into every still-active
+        cell's schedule through ``FailureSchedule.merge`` — the same code
+        path a statically-declared composite takes — then the padded
+        per-row scenario arrays are re-materialized in place (no shape
+        change: the rows land in the engine's reserved
+        ``min_failure_slots`` headroom).  The injection is recorded in the
+        log that snapshots carry, so resume replays it identically; a
+        checkpoint is committed immediately after a successful injection."""
+        assert not self._finalized, "runner already finalized"
+        self._apply_delta(delta, self.cursor)
+        self.injections.append(
+            {
+                "at_tick": int(self.cursor),
+                "queue": np.asarray(delta.queue, np.int32).tolist(),
+                "start": np.asarray(delta.start, np.int32).tolist(),
+                "end": np.asarray(delta.end, np.int32).tolist(),
+                "kind": np.asarray(delta.kind, np.int32).tolist(),
+            }
+        )
+        self._checkpoint()
+
+    def inspect(self) -> dict[str, dict]:
+        """Live per-cell view at the current cursor, without disturbing the
+        run: ``{cell name: {cursor, ticks, done, telemetry}}`` where
+        ``telemetry`` (summary mode, seed 0) is the sketch channels
+        finalized at ``min(cursor, cell ticks)`` — e.g. the RecoveryTracker
+        latency is readable as soon as redelivery happened."""
+        out: dict[str, dict] = {}
+        summary = self.config.collect == "summary"
+        for bi, bucket in enumerate(self.engine.buckets):
+            tel = None
+            if summary:
+                tel_prog = self.engine._tel_prog(bucket.program, self.spec)
+                tel = jax.device_get(self.carries[bi][1])
+            for c in bucket.cells:
+                cell_cursor = min(self.cursor, c.case.ticks)
+                info: dict[str, Any] = {
+                    "cursor": cell_cursor,
+                    "ticks": c.case.ticks,
+                    "done": cell_cursor >= c.case.ticks,
+                }
+                if summary:
+                    info["telemetry"] = tel_prog.live_row(
+                        tel[c.rows[0]], cell_cursor
+                    )
+                out[c.case.name] = info
+        return out
+
+    def result(self) -> SweepResult:
+        """Finalize every bucket at the current cursor and return the
+        standard ``SweepResult`` view.  Requires the grid to have reached
+        its horizon (partial figures are what ``inspect`` is for)."""
+        assert self.done, (
+            f"grid not finished: cursor {self.cursor} < horizon "
+            f"{self.horizon}; advance() further or use inspect()"
+        )
+        self._join_pending()
+        full = self.config.collect == "full"
+        for bi, bucket in enumerate(self.engine.buckets):
+            chunks = None
+            if full:
+                chunks = [p for _, _, p in self._contiguous_parts(bi)]
+            self.engine.finalize_bucket(
+                bucket, self.carries[bi], self.config.collect,
+                bucket.ticks, chunks, self.spec,
+            )
+            self.carries[bi] = None  # host copies now own the data
+        self._finalized = True
+        return SweepResult(self.engine)
+
+    # ------------------------------------------------------------------
+    # Injection internals.
+    # ------------------------------------------------------------------
+    def _apply_delta(self, delta: FailureSchedule, at_tick: int) -> None:
+        topo = Topology.build(self.engine.cfg)
+        # validate against every still-active cell BEFORE mutating any —
+        # a partially-applied injection could never match a static run
+        staged: list[tuple[int, Any, FailureSchedule]] = []
+        for bi, bucket in enumerate(self.engine.buckets):
+            f_slots = bucket.plan.key[4]
+            for c in bucket.cells:
+                if c.case.ticks <= at_tick:
+                    continue  # cell finished; delta can never activate
+                live = truncate_dead(c.padded_fs, c.case.ticks)
+                merged = live.merge(
+                    delta, at_tick=at_tick, n_queues=topo.n_queues
+                )
+                live_merged = truncate_dead(merged, c.case.ticks)
+                if len(live_merged) > f_slots:
+                    raise ValueError(
+                        f"cell {c.case.name!r}: merged schedule needs "
+                        f"{len(live_merged)} failure rows but the bucket "
+                        f"reserved {f_slots}; build the engine with "
+                        f"min_failure_slots >= {len(live_merged)} to leave "
+                        "injection headroom"
+                    )
+                staged.append((bi, c, live_merged.pad_to(f_slots)))
+        # commit: re-materialize the padded schedules into the scenario
+        # arrays, one host round-trip per touched bucket
+        touched = sorted({bi for bi, _, _ in staged})
+        for bi in touched:
+            bucket = self.engine.buckets[bi]
+            host = {
+                name: np.array(jax.device_get(getattr(bucket.scn, name)))
+                for name in ("f_queue", "f_start", "f_end", "f_kind")
+            }
+            for sbi, c, padded in staged:
+                if sbi != bi:
+                    continue
+                c.padded_fs = padded
+                for row in c.rows:
+                    host["f_queue"][row] = padded.queue
+                    host["f_start"][row] = padded.start
+                    host["f_end"][row] = padded.end
+                    host["f_kind"][row] = padded.kind
+            # pad rows repeat row 0 at build time; keep that exact shape so
+            # an injected bucket is indistinguishable from a fresh build
+            for name in host:
+                host[name][bucket.n_rows:] = host[name][0]
+            bucket.scn = bucket.scn._replace(
+                **{k: jnp.asarray(v) for k, v in host.items()}
+            )
+
+    # ------------------------------------------------------------------
+    # Checkpoint / resume.
+    # ------------------------------------------------------------------
+    def _trees(self) -> dict[str, Any]:
+        trees: dict[str, Any] = {}
+        for bi, bucket in enumerate(self.engine.buckets):
+            trees[f"b{bi}_carry"] = self.carries[bi]
+            trees[f"b{bi}_keys"] = bucket.keys
+        return trees
+
+    def _extra(self) -> dict:
+        return {
+            "soak": {
+                "fingerprint": self.fingerprint,
+                "cursor": int(self.cursor),
+                "collect": self.config.collect,
+                "chunk": int(self.config.chunk),
+                "injections": self.injections,
+            }
+        }
+
+    def _join_pending(self) -> None:
+        if self._pending is not None:
+            pending, self._pending = self._pending, None
+            pending.join()  # re-raises background IO failures
+
+    def _checkpoint(self) -> None:
+        cfg = self.config
+        if cfg.ckpt_dir is None:
+            return
+        path = os.path.join(cfg.ckpt_dir, f"step_{self.cursor}")
+        self._join_pending()
+        if cfg.async_save:
+            # prune *now*, while no save is in flight — pruning sweeps
+            # stale .tmp staging dirs and must never race a live one
+            ckpt.prune(cfg.ckpt_dir, cfg.keep)
+            self._pending = ckpt.save_async(
+                path, self.cursor, self._trees(), extra=self._extra(),
+                retries=cfg.save_retries, backoff_s=cfg.save_backoff_s,
+            )
+        else:
+            ckpt.save(
+                path, self.cursor, self._trees(), extra=self._extra(),
+                retries=cfg.save_retries, backoff_s=cfg.save_backoff_s,
+            )
+            ckpt.prune(cfg.ckpt_dir, cfg.keep)
+
+    def resume(self) -> "SoakRunner":
+        """Restore the newest committed snapshot under ``ckpt_dir`` into
+        this (freshly constructed) runner: replay the injection log through
+        the live-injection code path, then load every bucket's carry *and*
+        RNG keys from the snapshot (never re-derived).  Returns self."""
+        cfg = self.config
+        assert cfg.ckpt_dir is not None, "SoakConfig.ckpt_dir not set"
+        assert self.cursor == 0 and not self.injections, (
+            "resume() must be called on a fresh runner"
+        )
+        path = ckpt.latest(cfg.ckpt_dir)
+        if path is None:
+            raise FileNotFoundError(
+                f"no committed snapshot under {cfg.ckpt_dir}"
+            )
+        meta = ckpt.read_manifest(path)["soak"]
+        if meta["fingerprint"] != self.fingerprint:
+            raise ValueError(
+                "snapshot belongs to a different sweep: plan/scenario "
+                "fingerprint mismatch (engine cases, config, packing or "
+                "collect mode changed since the snapshot was written)"
+            )
+        # injections first: they rebuild padded schedules + scenario
+        # arrays, and must be in place before the carries continue
+        for inj in meta["injections"]:
+            delta = FailureSchedule(
+                queue=np.asarray(inj["queue"], np.int32),
+                start=np.asarray(inj["start"], np.int32),
+                end=np.asarray(inj["end"], np.int32),
+                kind=np.asarray(inj["kind"], np.int32),
+            )
+            self._apply_delta(delta, int(inj["at_tick"]))
+            self.injections.append(inj)
+        like = self._trees()
+        trees, step = ckpt.restore(path, like)
+        for bi, bucket in enumerate(self.engine.buckets):
+            self.carries[bi] = trees[f"b{bi}_carry"]
+            bucket.keys = trees[f"b{bi}_keys"]
+        self.cursor = int(step)
+        if self.config.collect == "full":
+            self._load_trace_parts()
+        return self
+
+    # ------------------------------------------------------------------
+    # Full-trace streaming (collect="full").
+    # ------------------------------------------------------------------
+    def _traces_dir(self) -> Optional[str]:
+        if self.config.ckpt_dir is None:
+            return None
+        d = os.path.join(self.config.ckpt_dir, "traces")
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def _write_trace_part(self, bi: int, t0: int, n: int, part) -> None:
+        """Persist one chunk's host trace as an atomic npz part file.
+        Re-running a window after resume rewrites the same deterministic
+        bytes, so a stale part from a killed timeline is harmless — it is
+        deleted on resume anyway (only parts below the restored cursor
+        survive)."""
+        d = self._traces_dir()
+        if d is None:
+            return
+        fname = f"trace_b{bi}_t{t0:09d}_n{n}.npz"
+        tmp = os.path.join(d, fname + ".tmp")
+        with open(tmp, "wb") as f:  # handle, or np.savez appends ".npz"
+            np.savez(f, **{k: np.asarray(v)
+                           for k, v in zip(TickTrace._fields, part)})
+        os.replace(tmp, os.path.join(d, fname))
+
+    def _load_trace_parts(self) -> None:
+        """Rebuild the in-memory per-bucket part lists from disk: keep
+        parts strictly below the restored cursor, delete the rest (they
+        cover windows the resumed run will re-execute — bit-identically,
+        but possibly with a different chunking)."""
+        d = self._traces_dir()
+        assert d is not None
+        parts: dict[int, list[tuple[int, int, Any]]] = {}
+        for fname in sorted(os.listdir(d)):
+            m = _TRACE_RE.match(fname)
+            if m is None:
+                if fname.endswith(".tmp"):
+                    os.unlink(os.path.join(d, fname))
+                continue
+            bi, t0, n = int(m.group(1)), int(m.group(2)), int(m.group(3))
+            p = os.path.join(d, fname)
+            if t0 >= self.cursor:
+                os.unlink(p)
+                continue
+            with np.load(p) as data:
+                part = TickTrace(*[data[k] for k in TickTrace._fields])
+            parts.setdefault(bi, []).append((t0, n, part))
+        self.trace_parts = [
+            sorted(parts.get(bi, []))
+            for bi in range(len(self.engine.buckets))
+        ]
+
+    def _contiguous_parts(self, bi: int) -> list[tuple[int, int, Any]]:
+        """The bucket's parts in window order, asserted to tile
+        ``[0, bucket.ticks)`` exactly — a gap means part files were lost
+        out-of-band (the checkpoint only commits after its windows' parts
+        are on disk)."""
+        bucket = self.engine.buckets[bi]
+        parts = sorted(self.trace_parts[bi])
+        want = 0
+        for t0, n, _ in parts:
+            assert t0 == want, (
+                f"trace stream for bucket {bi} has a gap: expected a part "
+                f"at t0={want}, found t0={t0}"
+            )
+            want = t0 + n
+        assert want == bucket.ticks, (
+            f"trace stream for bucket {bi} ends at {want}, horizon is "
+            f"{bucket.ticks}"
+        )
+        return parts

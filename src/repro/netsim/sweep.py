@@ -883,7 +883,15 @@ class SweepEngine:
         packer: PackerConfig | None = None,
         kernels_backend: str | None = None,
         measured_costs: dict | None = None,
+        min_failure_slots: int = 0,
     ):
+        # ``min_failure_slots`` floors every cell's quantized failure-row
+        # count (pow2-rounded like the natural size): headroom for the soak
+        # runtime's live injection (SoakRunner.inject re-materializes the
+        # padded schedule into the reserved inert rows without a shape
+        # change), and the knob that makes an injected run and its
+        # statically-scheduled equivalent plan identical buckets.
+        self.min_failure_slots = int(min_failure_slots)
         self.cfg = cfg
         self.cases = list(cases)
         assert self.cases, "need at least one case"
@@ -947,7 +955,9 @@ class SweepEngine:
             adaptive=variant.switch_adaptive,
             nc=_pow2(max(wl.n_conns, self.min_conn_bucket)),
             msg=int(min(cfg.max_msg_pkts, max(_pow2(max(msg_max, 2)), 2))),
-            f=_pow2(max(len(self._live_failures(case)), 1)),
+            f=_pow2(
+                max(len(self._live_failures(case)), 1, self.min_failure_slots)
+            ),
             w=_pow2(max(len(self._watch_for(case)), 1)),
             rows=len(case.seeds),
             nc_exact=max(wl.n_conns, 1),
@@ -1260,6 +1270,92 @@ class SweepEngine:
             self._run_bucket(bucket, collect, chunk, early_exit, spec)
         return SweepResult(self)
 
+    # ------------------------------------------------------------------
+    # Chunked carry in/out — the resumable building blocks the batch path
+    # below AND the soak runtime (repro.netsim.soak) drive: a bucket's
+    # execution is ``carry = bucket_carry(...)`` followed by any sequence
+    # of ``run_chunk`` calls whose (t0, n) windows tile ``[0, ticks)``, and
+    # the result is bit-identical regardless of how the windows are cut —
+    # which is exactly what lets a checkpointed carry resume at any chunk
+    # boundary and replay the remaining windows.
+    # ------------------------------------------------------------------
+    def bucket_carry(
+        self, bucket: _Bucket, collect: str = "none",
+        spec: TelemetrySpec | None = None,
+    ):
+        """The bucket's t=0 scan carry: vmapped per-row init states, plus
+        the stacked telemetry sketch carry in summary mode."""
+        carry = self._init_states(bucket)
+        if collect == "summary":
+            tel_prog = self._tel_prog(bucket.program, spec)
+            tel0 = jnp.tile(
+                tel_prog.init()[None], (bucket.plan.n_padded_rows, 1)
+            )
+            carry = (carry, tel0)
+        return carry
+
+    def chunk_runner(
+        self, bucket: _Bucket, n: int, collect: str = "none",
+        spec: TelemetrySpec | None = None, example_carry=None,
+    ):
+        """The compiled ``(carry, keys, scn, horizons, t0) -> (carry,
+        traces)`` executable for an ``n``-tick chunk.  AOT-compiled once
+        per (n, collect, spec) and shared by every sub-bucket of the
+        program's split group (same shapes, same padded rows); the carry is
+        donated on call.  ``example_carry`` supplies lowering shapes (a
+        fresh ``bucket_carry`` is built when omitted)."""
+        prog = bucket.program
+        ck = (n, collect, spec)
+        if ck not in prog.chunk_fns:
+            if example_carry is None:
+                example_carry = self.bucket_carry(bucket, collect, spec)
+            fn = self._make_chunk_fn(prog, n, collect, spec)
+            prog.chunk_fns[ck] = fn.lower(
+                example_carry, bucket.keys, bucket.scn,
+                jnp.asarray(bucket.horizons), jnp.zeros((), jnp.int32),
+            ).compile()
+        return prog.chunk_fns[ck]
+
+    def run_chunk(
+        self, bucket: _Bucket, carry, t0: int, n: int,
+        collect: str = "none", spec: TelemetrySpec | None = None,
+    ):
+        """Advance one bucket's carry over ticks ``[t0, t0 + n)``.  Returns
+        ``(carry, traces)``; ``carry`` is donated (the passed-in buffers
+        are invalid afterwards — checkpoint via ``jax.device_get`` *before*
+        calling).  Rows whose own horizon lies inside the window freeze
+        bit-exactly there (heterogeneous buckets), so driving a bucket to
+        its horizon in any chunking yields identical results."""
+        fn = self.chunk_runner(bucket, n, collect, spec, example_carry=carry)
+        return fn(
+            carry, bucket.keys, bucket.scn, jnp.asarray(bucket.horizons),
+            jnp.asarray(t0, jnp.int32),
+        )
+
+    def finalize_bucket(
+        self, bucket: _Bucket, carry, collect: str, ticks_run: int,
+        trace_chunks=None, spec: TelemetrySpec | None = None,
+    ):
+        """Publish a finished carry onto the bucket (one host transfer):
+        ``final_state`` / ``telemetry`` / ``traces`` as ``SweepResult``
+        expects, pad rows dropped."""
+        summary = collect == "summary"
+        host = jax.device_get(carry)  # one transfer for the bucket
+        keep = bucket.n_rows
+        host_state = host[0] if summary else host
+        bucket.final_state = jax.tree_util.tree_map(
+            lambda x: x[:keep], host_state
+        )
+        bucket.ticks_run = ticks_run
+        if summary:
+            bucket.telemetry = host[1][:keep]
+            bucket.tel_prog = self._tel_prog(bucket.program, spec)
+        if collect == "full" and trace_chunks:
+            bucket.traces = jax.tree_util.tree_map(
+                lambda *xs: np.concatenate(xs, axis=0)[:, :keep],
+                *trace_chunks,
+            )
+
     def _run_bucket(
         self, bucket: _Bucket, collect: str, chunk: int | None,
         early_exit: bool = False, spec: TelemetrySpec | None = None,
@@ -1276,24 +1372,11 @@ class SweepEngine:
             sizes.append(ticks % chunk)
 
         t_c0 = time.time()
-        carry = self._init_states(bucket)
-        if summary:
-            tel_prog = self._tel_prog(prog, spec)
-            tel0 = jnp.tile(
-                tel_prog.init()[None], (bucket.plan.n_padded_rows, 1)
-            )
-            carry = (carry, tel0)
-        horizons = jnp.asarray(bucket.horizons)
-        t0 = jnp.zeros((), jnp.int32)
+        carry = self.bucket_carry(bucket, collect, spec)
         # AOT-compile each distinct chunk length (usually 1-2) untimed;
         # sub-buckets of a split group share the compiled executables.
         for n in sorted(set(sizes)):
-            ck = (n, collect, spec)
-            if ck not in prog.chunk_fns:
-                fn = self._make_chunk_fn(prog, n, collect, spec)
-                prog.chunk_fns[ck] = fn.lower(
-                    carry, bucket.keys, bucket.scn, horizons, t0
-                ).compile()
+            self.chunk_runner(bucket, n, collect, spec, example_carry=carry)
         if early_exit and prog.quiescent_fn is None:
             prog.quiescent_fn = self._make_quiescent_fn(prog)
         quiescent = prog.quiescent_fn if early_exit else None
@@ -1304,9 +1387,8 @@ class SweepEngine:
         offset = 0
         t_e0 = time.time()
         for n in sizes:
-            carry, traces = prog.chunk_fns[(n, collect, spec)](
-                carry, bucket.keys, bucket.scn, horizons,
-                jnp.asarray(offset, jnp.int32),
+            carry, traces = self.run_chunk(
+                bucket, carry, offset, n, collect, spec
             )
             offset += n
             if collect == "full":
@@ -1316,7 +1398,7 @@ class SweepEngine:
             states = carry[0] if summary else carry
             if quiescent is not None and offset < ticks and bool(
                 quiescent(
-                    states, bucket.scn, horizons,
+                    states, bucket.scn, jnp.asarray(bucket.horizons),
                     jnp.asarray(offset, jnp.int32),
                 )
             ):
@@ -1324,18 +1406,6 @@ class SweepEngine:
         states = carry[0] if summary else carry
         jax.block_until_ready(states.c_done)
         bucket.exec_wall_s = time.time() - t_e0
-        bucket.ticks_run = offset
-
-        host = jax.device_get(carry)  # one transfer for the bucket
-        keep = bucket.n_rows
-        host_state = host[0] if summary else host
-        bucket.final_state = jax.tree_util.tree_map(
-            lambda x: x[:keep], host_state
+        self.finalize_bucket(
+            bucket, carry, collect, offset, trace_chunks, spec
         )
-        if summary:
-            bucket.telemetry = host[1][:keep]
-            bucket.tel_prog = tel_prog
-        if collect == "full":
-            bucket.traces = jax.tree_util.tree_map(
-                lambda *xs: np.concatenate(xs, axis=0)[:, :keep], *trace_chunks
-            )

@@ -569,6 +569,16 @@ class TelemetryProgram:
             for ch, built in self._built
         }
 
+    def live_row(self, flat: np.ndarray, cursor: int) -> dict:
+        """Mid-run view of one row's channels, finalized at the current
+        tick ``cursor``: zero-count reconstruction and window trimming use
+        ``min(cursor, ticks)``, so a partially-run row reads exactly like a
+        completed run whose horizon *was* the cursor.  This is what makes
+        the soak runtime's ``inspect()`` meaningful between chunks — e.g.
+        RecoveryTracker's recovery latency is observable as soon as the
+        redelivery happened, without waiting for the horizon."""
+        return self.finalize_row(flat, min(int(cursor), self.ticks))
+
 
 # ---------------------------------------------------------------------------
 # Sketch statistics.

@@ -1,0 +1,485 @@
+"""Soak runtime (repro.netsim.soak): preemption-proof checkpointed sweeps.
+
+The contract under test:
+
+* **Straight-through parity** — driving a grid to its horizon through
+  ``SoakRunner.advance`` yields summaries, telemetry sketch bytes and
+  final states bit-identical to the batch ``SweepEngine.run`` path.
+* **Kill-at-every-chunk-boundary resume** — for every chunk boundary k:
+  advance a checkpointing runner to k, abandon it (the simulated
+  preemption), build a *fresh* engine + runner, ``resume()``, run to the
+  horizon — and every row's summary, sketch carry and final state (and in
+  full mode, the complete trace stream) bit-matches the uninterrupted
+  golden.  Covered across ≥2 shape buckets including a horizon-merged
+  bucket (frozen rows), for ``collect="summary"`` and ``collect="full"``.
+* **Injection ≡ static schedule** — a failure delta injected mid-run via
+  ``SoakRunner.inject`` produces results bit-identical to declaring the
+  same events in the cases' ``FailureSchedule`` up front (same
+  ``min_failure_slots``, hence identical pack plans and RNG streams);
+  invalid deltas (past start, overlap with a down window, no headroom)
+  raise before any state is touched.
+* **Merge validation** — ``FailureSchedule.merge`` preserves the base
+  rows bit-unchanged and produces exactly the union active-set, or raises;
+  property-tested over random schedules.
+* **Checkpoint hardening** — atomic commits (no stale staging dirs after
+  save), ``latest`` skipping uncommitted/corrupt snapshots, ``prune``
+  keep-last-K + stale-dir sweeping, ``save`` retry on transient OSError,
+  ``save_async`` surfacing worker exceptions on join, and fingerprint
+  gating on resume.
+* **Fleet chunked resume** — ``FleetRunner.run_summary`` with
+  ``tel=``/``t0=``/``horizon=`` splits bit-identically to one shot.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis; shim keeps tests live
+    from _hypothesis_fallback import given, settings, st
+
+from repro import checkpoint as ckpt
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.core import make_lb
+from repro.netsim import (
+    FailureSchedule, FleetRunner, SoakConfig, SoakRunner, SweepCase,
+    SweepEngine, Topology, failures, workloads,
+)
+
+CFG = FATTREE_32_CI
+TICKS = 360  # grid horizon; chunk 120 -> boundaries at 120, 240
+CHUNK = 120
+SLOTS = 8  # injection headroom (and plan identity with the static grids)
+
+WL_A = workloads.permutation(32, 24, seed=1)
+WL_B = workloads.permutation(32, 24, seed=2)
+WL_C = workloads.incast(32, 5, 24)
+
+
+def _grid(extra_failures=None):
+    """Three cells, ≥2 shape buckets, one horizon-merged (frozen) row:
+    a (360 ticks) and b (300 ticks) share shapes and merge into one masked
+    bucket; c's conn count lands in a second bucket."""
+    return [
+        SweepCase(
+            name="a", workload=WL_A, lb="reps", ticks=TICKS,
+            lb_kwargs={"evs_size": CFG.evs_size}, failures=extra_failures,
+            seeds=(0, 1),
+        ),
+        SweepCase(
+            name="b", workload=WL_B, lb="ops", ticks=300,
+            failures=extra_failures, seeds=(0,),
+        ),
+        SweepCase(
+            name="c", workload=WL_C, lb="reps", ticks=TICKS,
+            lb_kwargs={"evs_size": CFG.evs_size}, failures=extra_failures,
+            seeds=(0,),
+        ),
+    ]
+
+
+def _engine(extra_failures=None):
+    return SweepEngine(
+        CFG, _grid(extra_failures), devices=None, min_failure_slots=SLOTS
+    )
+
+
+def _bit_state(res):
+    """Canonical bytes of every cell row's result: summaries (repr covers
+    every RunSummary field exactly), telemetry carries, final states."""
+    out = {"summaries": repr(sorted(res.summaries().items()))}
+    for bi, b in enumerate(res.buckets):
+        out[f"b{bi}_state"] = jax.tree_util.tree_map(
+            np.asarray, b.final_state
+        )
+        if b.telemetry is not None:
+            out[f"b{bi}_tel"] = np.asarray(b.telemetry)
+    return out
+
+
+def _assert_bit_equal(got, want):
+    assert got["summaries"] == want["summaries"]
+    for k in want:
+        if k == "summaries":
+            continue
+        for g, w in zip(
+            jax.tree_util.tree_leaves(got[k]),
+            jax.tree_util.tree_leaves(want[k]),
+        ):
+            np.testing.assert_array_equal(g, w)
+
+
+@pytest.fixture(scope="module")
+def golden_summary():
+    res = _engine().run(collect="summary", chunk=CHUNK)
+    return _bit_state(res)
+
+
+def test_grid_has_frozen_row_and_two_buckets():
+    eng = _engine()
+    assert len(eng.buckets) >= 2, eng.plan.describe()
+    assert any(b.program.masked for b in eng.buckets), (
+        "grid must exercise the horizon-freeze path; packer no longer "
+        "merges a/b — adjust ticks"
+    )
+
+
+def test_soak_straight_through_equals_batch(tmp_path, golden_summary):
+    soak = SoakRunner(
+        _engine(),
+        SoakConfig(chunk=CHUNK, ckpt_dir=str(tmp_path / "ck")),
+    )
+    soak.advance(TICKS)
+    assert soak.done
+    _assert_bit_equal(_bit_state(soak.result()), golden_summary)
+
+
+@pytest.mark.parametrize("kill_at", [CHUNK, 2 * CHUNK])
+def test_kill_at_chunk_boundary_resumes_bit_exact(
+    tmp_path, golden_summary, kill_at
+):
+    d = str(tmp_path / "ck")
+    cfg = SoakConfig(chunk=CHUNK, ckpt_dir=d)
+    first = SoakRunner(_engine(), cfg)
+    first.advance(kill_at)
+    assert first.cursor == kill_at
+    del first  # simulated preemption: nothing survives but the snapshots
+
+    resumed = SoakRunner(_engine(), cfg).resume()
+    assert resumed.cursor == kill_at
+    resumed.advance(TICKS)
+    _assert_bit_equal(_bit_state(resumed.result()), golden_summary)
+
+
+def test_kill_resume_full_traces_bit_exact(tmp_path):
+    golden = _engine().run(collect="full", chunk=CHUNK)
+    d = str(tmp_path / "ck")
+    cfg = SoakConfig(chunk=CHUNK, ckpt_dir=d, collect="full")
+    first = SoakRunner(_engine(), cfg)
+    first.advance(CHUNK)
+    del first
+
+    resumed = SoakRunner(_engine(), cfg).resume()
+    res = resumed.result() if resumed.done else (
+        resumed.advance(TICKS), resumed.result())[1]
+    for name in ("a", "b", "c"):
+        tg = golden.trace_for(name)
+        tr = res.trace_for(name)
+        for field in tg._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(tg, field)),
+                np.asarray(getattr(tr, field)),
+            )
+    _assert_bit_equal(_bit_state(res), _bit_state(golden))
+
+
+def test_injection_equals_static_schedule(tmp_path):
+    """The acceptance grid: a spine failure injected at a chunk boundary
+    must be bit-identical to pre-declaring it in every case — across the
+    whole figure-style grid (both buckets, frozen row included)."""
+    delta = failures.spine_down(CFG, 0, start=CHUNK)
+    static = _bit_state(
+        _engine(extra_failures=delta).run(collect="summary", chunk=CHUNK)
+    )
+
+    soak = SoakRunner(
+        _engine(),
+        SoakConfig(chunk=CHUNK, ckpt_dir=str(tmp_path / "ck")),
+    )
+    soak.advance(CHUNK)
+    soak.inject(delta)
+    soak.advance(TICKS)
+    _assert_bit_equal(_bit_state(soak.result()), static)
+
+
+def test_injection_survives_kill_and_resume(tmp_path):
+    """The injection log rides in the snapshot manifest and is replayed
+    through the same merge path on resume."""
+    delta = failures.spine_down(CFG, 1, start=CHUNK)
+    static = _bit_state(
+        _engine(extra_failures=delta).run(collect="summary", chunk=CHUNK)
+    )
+    d = str(tmp_path / "ck")
+    cfg = SoakConfig(chunk=CHUNK, ckpt_dir=d)
+    first = SoakRunner(_engine(), cfg)
+    first.advance(CHUNK)
+    first.inject(delta)
+    first.advance(CHUNK)  # one more boundary past the injection
+    del first
+
+    resumed = SoakRunner(_engine(), cfg).resume()
+    assert resumed.cursor == 2 * CHUNK
+    assert len(resumed.injections) == 1
+    resumed.advance(TICKS)
+    _assert_bit_equal(_bit_state(resumed.result()), static)
+
+
+def test_inject_rejects_bad_deltas(tmp_path):
+    soak = SoakRunner(_engine(), SoakConfig(chunk=CHUNK))
+    soak.advance(CHUNK)
+    past = failures.link_down([0], start=CHUNK - 10, end=failures.FOREVER)
+    with pytest.raises(ValueError, match="past"):
+        soak.inject(past)
+    down = failures.spine_down(CFG, 0, start=CHUNK)
+    soak.inject(down)
+    with pytest.raises(ValueError, match="resurrect"):
+        soak.inject(failures.spine_down(CFG, 0, start=CHUNK + 5))
+    # validation happens before mutation: the run is still advanceable and
+    # equal to the single-injection static reference
+    soak.advance(TICKS)
+    static = _bit_state(
+        _engine(extra_failures=down).run(collect="summary", chunk=CHUNK)
+    )
+    _assert_bit_equal(_bit_state(soak.result()), static)
+
+
+def test_inject_without_headroom_raises():
+    eng = SweepEngine(
+        CFG, [_grid()[0]], devices=None  # natural f slots: 1
+    )
+    soak = SoakRunner(eng, SoakConfig(chunk=CHUNK))
+    soak.advance(CHUNK)
+    with pytest.raises(ValueError, match="min_failure_slots"):
+        soak.inject(failures.spine_down(CFG, 0, start=CHUNK))
+
+
+def test_inspect_reports_live_cursor_and_telemetry():
+    soak = SoakRunner(_engine(), SoakConfig(chunk=CHUNK))
+    soak.advance(CHUNK)
+    info = soak.inspect()
+    assert set(info) == {"a", "b", "c"}
+    assert info["a"]["cursor"] == CHUNK and not info["a"]["done"]
+    assert info["b"]["ticks"] == 300
+    assert info["a"]["telemetry"], "summary mode exposes live channels"
+    soak.advance(TICKS)
+    assert soak.inspect()["b"]["done"]
+    assert soak.inspect()["b"]["cursor"] == 300  # clamped to own horizon
+
+
+# ---------------------------------------------------------------------------
+# FailureSchedule.merge property tests (host-only, no engine).
+# ---------------------------------------------------------------------------
+
+N_QUEUES = 8
+T_MAX = 48
+
+EVENT = st.tuples(
+    st.integers(0, N_QUEUES - 1),  # queue
+    st.integers(0, T_MAX - 8),     # start
+    st.integers(1, 8),             # duration
+    st.integers(0, 1),             # kind
+)
+EVENTS = st.lists(EVENT, min_size=0, max_size=5)
+
+
+def _sched(events):
+    if not events:
+        return FailureSchedule.none()
+    q, s, d, k = zip(*events)
+    return FailureSchedule(
+        queue=np.asarray(q, np.int32),
+        start=np.asarray(s, np.int32),
+        end=np.asarray(s, np.int32) + np.asarray(d, np.int32),
+        kind=np.asarray(k, np.int32),
+    )
+
+
+def _active_sets(fs, t):
+    """(down queues, degraded queues) active at tick t."""
+    q = np.asarray(fs.queue)
+    s = np.asarray(fs.start)
+    e = np.asarray(fs.end)
+    k = np.asarray(fs.kind)
+    on = (s <= t) & (t < e)
+    return set(q[on & (k == 0)].tolist()), set(q[on & (k == 1)].tolist())
+
+
+@settings(max_examples=120, deadline=None)
+@given(EVENTS, EVENTS, st.integers(0, T_MAX // 2))
+def test_merge_union_semantics_or_rejects(base_ev, delta_ev, at_tick):
+    base = _sched(base_ev)
+    try:
+        base.validate(N_QUEUES)
+    except AssertionError:
+        return  # not a legal base; merge contract starts from valid inputs
+    delta = _sched(delta_ev)
+    try:
+        merged = base.merge(delta, at_tick=at_tick, n_queues=N_QUEUES)
+    except ValueError:
+        return  # rejected: past start / resurrection / double-schedule
+    # base rows bit-unchanged, in place
+    n = len(base)
+    np.testing.assert_array_equal(np.asarray(merged.queue[:n]), base.queue)
+    np.testing.assert_array_equal(np.asarray(merged.start[:n]), base.start)
+    np.testing.assert_array_equal(np.asarray(merged.end[:n]), base.end)
+    np.testing.assert_array_equal(np.asarray(merged.kind[:n]), base.kind)
+    merged.validate(N_QUEUES)
+    # exact union active-set at every tick
+    for t in range(T_MAX + 2):
+        bd, bg = _active_sets(base, t)
+        dd, dg = _active_sets(delta, t)
+        md, mg = _active_sets(merged, t)
+        assert md == bd | dd, t
+        assert mg == bg | dg, t
+    # accepted deltas never start in the past
+    d_live = np.asarray(delta.end) > np.asarray(delta.start)
+    assert np.all(np.asarray(delta.start)[d_live] >= at_tick)
+
+
+@settings(max_examples=60, deadline=None)
+@given(EVENT, st.integers(0, 4))
+def test_merge_rejects_resurrection_and_double_schedule(ev, shift):
+    q, s, d, k = ev
+    base = _sched([(q, s, d, 0)])  # a down window
+    overlapping = _sched([(q, s + shift, d, k)])
+    if shift < d:  # overlaps the down window -> always rejected
+        with pytest.raises(ValueError):
+            base.merge(overlapping, at_tick=0, n_queues=N_QUEUES)
+    else:  # disjoint -> accepted, appended
+        merged = base.merge(overlapping, at_tick=0, n_queues=N_QUEUES)
+        assert len(merged) == 2
+
+
+def test_merge_is_the_static_composite():
+    """down-over-degraded stays legal and equals the hand-declared
+    composite (the fig-4 style degraded background + a hard failure)."""
+    degraded = failures.link_degraded([3], start=0, end=40)
+    down = failures.link_down([3], start=10, end=failures.FOREVER)
+    merged = degraded.merge(down, at_tick=5, n_queues=N_QUEUES)
+    composite = FailureSchedule.concat(degraded, down)
+    for t in range(60):
+        assert _active_sets(merged, t) == _active_sets(composite, t)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint hardening.
+# ---------------------------------------------------------------------------
+
+def _tiny_trees(v=0):
+    return {"state": {"x": np.arange(4, dtype=np.int32) + v}}
+
+
+def test_save_commit_is_atomic_and_extra_roundtrips(tmp_path):
+    base = str(tmp_path)
+    p = os.path.join(base, "step_5")
+    ckpt.save(p, 5, _tiny_trees(), extra={"soak": {"cursor": 5, "inj": []}})
+    assert ckpt.is_committed(p)
+    assert not [d for d in os.listdir(base) if ".tmp." in d], (
+        "staging dir must not survive a successful commit"
+    )
+    m = ckpt.read_manifest(p)
+    assert m["soak"] == {"cursor": 5, "inj": []}
+    out, step = ckpt.restore(p, {"state": _tiny_trees()["state"]})
+    assert step == 5
+    np.testing.assert_array_equal(
+        np.asarray(out["state"]["x"]), _tiny_trees()["state"]["x"]
+    )
+
+
+def test_latest_skips_uncommitted_and_corrupt(tmp_path):
+    base = str(tmp_path)
+    ckpt.save(os.path.join(base, "step_1"), 1, _tiny_trees(1))
+    ckpt.save(os.path.join(base, "step_2"), 2, _tiny_trees(2))
+    ckpt.save(os.path.join(base, "step_3"), 3, _tiny_trees(3))
+    os.unlink(os.path.join(base, "step_2", "COMMITTED"))  # interrupted
+    with open(os.path.join(base, "step_3", "manifest.json"), "w") as f:
+        f.write("{ truncated")  # corrupt
+    assert ckpt.latest(base) == os.path.join(base, "step_1")
+    os.unlink(os.path.join(base, "step_1", "COMMITTED"))
+    assert ckpt.latest(base) is None
+
+
+def test_prune_keeps_last_k_and_sweeps_stale_dirs(tmp_path):
+    base = str(tmp_path)
+    for i in range(1, 6):
+        ckpt.save(os.path.join(base, f"step_{i}"), i, _tiny_trees(i))
+    os.makedirs(os.path.join(base, "step_9.tmp.123"))  # stale staging
+    os.makedirs(os.path.join(base, "step_7"))  # uncommitted husk
+    deleted = ckpt.prune(base, keep=2)
+    left = sorted(os.listdir(base))
+    assert left == ["step_4", "step_5"], left
+    assert len(deleted) == 5
+    with pytest.raises(AssertionError):
+        ckpt.prune(base, keep=0)
+
+
+def test_save_retries_transient_oserror(tmp_path, monkeypatch):
+    from repro.checkpoint import checkpoint as ckpt_mod
+
+    real = ckpt_mod._save_once
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ckpt_mod, "_save_once", flaky)
+    p = os.path.join(str(tmp_path), "step_1")
+    with pytest.raises(OSError):
+        ckpt.save(p, 1, _tiny_trees(), retries=1, backoff_s=0.0)
+    calls["n"] = 0
+    ckpt.save(p, 1, _tiny_trees(), retries=2, backoff_s=0.0)
+    assert calls["n"] == 3 and ckpt.is_committed(p)
+
+
+def test_save_async_surfaces_worker_exception(tmp_path):
+    blocker = tmp_path / "blocked"
+    blocker.write_text("a file where the snapshot dir's parent should be")
+    handle = ckpt.save_async(
+        str(blocker / "ck" / "step_1"), 1, _tiny_trees()
+    )
+    with pytest.raises(OSError):
+        handle.join()
+    ok = ckpt.save_async(str(tmp_path / "ok" / "step_1"), 1, _tiny_trees())
+    ok.join()
+    assert ckpt.is_committed(str(tmp_path / "ok" / "step_1"))
+
+
+def test_resume_rejects_fingerprint_mismatch(tmp_path):
+    d = str(tmp_path / "ck")
+    cfg = SoakConfig(chunk=CHUNK, ckpt_dir=d)
+    SoakRunner(_engine(), cfg).advance(CHUNK)
+    other = SweepEngine(
+        CFG, _grid()[:1], devices=None, min_failure_slots=SLOTS
+    )
+    with pytest.raises(ValueError, match="fingerprint"):
+        SoakRunner(other, cfg).resume()
+
+
+def test_async_save_soak_run_bit_exact(tmp_path, golden_summary):
+    """async_save exercises SaveHandle end-to-end on the real run path."""
+    d = str(tmp_path / "ck")
+    cfg = SoakConfig(chunk=CHUNK, ckpt_dir=d, async_save=True)
+    first = SoakRunner(_engine(), cfg)
+    first.advance(2 * CHUNK)
+    first._join_pending()  # the preemption may land mid-write; committed
+    del first              # snapshots are still the contract
+    resumed = SoakRunner(_engine(), cfg).resume()
+    assert resumed.cursor in (CHUNK, 2 * CHUNK)
+    resumed.advance(TICKS)
+    _assert_bit_equal(_bit_state(resumed.result()), golden_summary)
+
+
+# ---------------------------------------------------------------------------
+# Fleet chunked resume.
+# ---------------------------------------------------------------------------
+
+def test_fleet_run_summary_chunked_resume_bit_exact():
+    lb = make_lb("reps", evs_size=CFG.evs_size)
+    fleet = FleetRunner(CFG, WL_A, lb, seeds=(0, 1))
+    st_g, tel_g = fleet.run_summary(300)
+    st_a, tel_a = fleet.run_summary(100, horizon=300)
+    st_b, tel_b = fleet.run_summary(
+        200, states=st_a, tel=tel_a.tel, t0=100, horizon=300
+    )
+    np.testing.assert_array_equal(np.asarray(tel_g.tel), np.asarray(tel_b.tel))
+    for g, b in zip(
+        jax.tree_util.tree_leaves(st_g), jax.tree_util.tree_leaves(st_b)
+    ):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(b))
+    assert repr(tel_g.summaries()) == repr(tel_b.summaries())
