@@ -1,4 +1,8 @@
 from repro.netsim import failures, metrics, telemetry, workloads
+from repro.netsim.chaos import (
+    ChaosCampaign, ChaosFault, ChaosInvariants, ChaosScenario, Violation,
+    known_bad_scenario,
+)
 from repro.netsim.config import TICK_NS, SimConfig, ns_to_ticks, us_to_ticks
 from repro.netsim.engine import (
     FailureSchedule, Probe, ScenarioArrays, SimState, Simulator, Workload,
@@ -20,6 +24,8 @@ from repro.netsim.topology import Topology, ecmp_hash, mix32
 
 __all__ = [
     "failures", "metrics", "telemetry", "workloads",
+    "ChaosCampaign", "ChaosFault", "ChaosInvariants", "ChaosScenario",
+    "Violation", "known_bad_scenario",
     "TICK_NS", "SimConfig", "ns_to_ticks", "us_to_ticks",
     "FailureSchedule", "Probe", "ScenarioArrays", "SimState", "Simulator",
     "Workload",

@@ -102,9 +102,24 @@ class Workload:
         return len(self.src)
 
 
+# failure kind codes (FailureSchedule.kind); names for error messages/docs
+K_DOWN, K_DEGRADED, K_GRAY = 0, 1, 2
+KNOWN_KINDS = {
+    K_DOWN: "down",
+    K_DEGRADED: "degraded",
+    K_GRAY: "gray_loss",
+}
+# gray-loss drop probability is fixed-point: param / GRAY_SCALE
+GRAY_SCALE = 65536
+
+
 @dataclasses.dataclass(frozen=True)
 class FailureSchedule:
-    """Link events: kind 0 = down (blackhole), 1 = degraded to half rate.
+    """Link events: kind 0 = down (blackhole), 1 = degraded to half rate,
+    2 = gray loss (silent per-packet drop with probability
+    ``param / GRAY_SCALE``, drawn through the engine's threefry key so
+    runs stay bit-reproducible; invisible to adaptive switch routing —
+    that is the defining "gray" property).
 
     A row is *active* at tick ``t`` iff ``start <= t < end``.  Two row
     shapes are legal (``validate``): real windows (``end > start``) and
@@ -114,12 +129,23 @@ class FailureSchedule:
     pad/bucket boundary, which would silently resurrect the link there.
     ``pad_to`` only ever appends inert rows; dropping rows is the job of
     ``failures.truncate_dead`` (which refuses to drop live events).
+
+    ``param`` is the per-row kind parameter (gray-loss drop rate); it is
+    optional at construction (defaults to zeros) so the long-standing
+    4-array call sites stay valid.
     """
 
     queue: np.ndarray  # (F,) int32 queue id
     start: np.ndarray  # (F,) int32 tick
     end: np.ndarray  # (F,) int32 tick
     kind: np.ndarray  # (F,) int32
+    param: np.ndarray | None = None  # (F,) int32 kind parameter
+
+    def __post_init__(self) -> None:
+        if self.param is None:
+            object.__setattr__(
+                self, "param", np.zeros((len(self.queue),), np.int32)
+            )
 
     def __len__(self) -> int:
         return len(self.queue)
@@ -127,7 +153,7 @@ class FailureSchedule:
     @staticmethod
     def none() -> "FailureSchedule":
         z = np.zeros((0,), np.int32)
-        return FailureSchedule(z, z, z, z)
+        return FailureSchedule(z, z, z, z, z)
 
     @staticmethod
     def concat(*scheds: "FailureSchedule") -> "FailureSchedule":
@@ -136,6 +162,7 @@ class FailureSchedule:
             np.concatenate([s.start for s in scheds]).astype(np.int32),
             np.concatenate([s.end for s in scheds]).astype(np.int32),
             np.concatenate([s.kind for s in scheds]).astype(np.int32),
+            np.concatenate([s.param for s in scheds]).astype(np.int32),
         )
 
     def pad_to(self, f: int) -> "FailureSchedule":
@@ -155,32 +182,73 @@ class FailureSchedule:
             start=np.concatenate([self.start.astype(np.int32), z]),
             end=np.concatenate([self.end.astype(np.int32), z]),
             kind=np.concatenate([self.kind.astype(np.int32), z]),
+            param=np.concatenate([self.param.astype(np.int32), z]),
         )
 
     def validate(self, n_queues: int | None = None) -> None:
-        """Reject rows that are neither real windows nor inert pads.  The
+        """Reject rows that are neither real windows nor inert pads — each
+        violation raises ``ValueError`` naming the offending rows.  The
         dangerous in-between (``end <= start`` but not all-zero) is what a
         buggy pad/truncate produces when it clips ``end`` instead of
         keeping the original window — at the clip boundary the link would
-        come back up even though the builder scheduled it down forever."""
+        come back up even though the builder scheduled it down forever.
+        Unknown ``kind`` codes are rejected too: an out-of-range kind
+        would silently fall through the engine's active-set arithmetic
+        (matching none of the per-kind masks) and the row would be a
+        no-op instead of the fault the caller asked for."""
         s = np.asarray(self.start)
         e = np.asarray(self.end)
         q = np.asarray(self.queue)
         k = np.asarray(self.kind)
+        p = np.asarray(self.param)
         live = e > s
-        inert = (s == 0) & (e == 0) & (q == 0) & (k == 0)
+        inert = (s == 0) & (e == 0) & (q == 0) & (k == 0) & (p == 0)
         bad = ~(live | inert)
-        assert not bad.any(), (
-            "failure rows must be real windows (end > start) or inert pads "
-            "(queue == start == end == kind == 0); offending rows "
-            f"{np.nonzero(bad)[0].tolist()} look like a clipped/truncated "
-            "schedule, which would resurrect the link at the clip boundary"
-        )
-        assert np.all(s >= 0), "failure windows cannot start before tick 0"
-        if n_queues is not None:
-            assert np.all(q[live] >= 0) and np.all(q[live] < n_queues), (
-                "failure row targets a queue outside the topology"
+        if bad.any():
+            i = int(np.nonzero(bad)[0][0])
+            raise ValueError(
+                "failure rows must be real windows (end > start) or inert "
+                "pads (queue == start == end == kind == param == 0); "
+                f"offending rows {np.nonzero(bad)[0].tolist()} (first: row "
+                f"{i} queue={int(q[i])} start={int(s[i])} end={int(e[i])} "
+                f"kind={int(k[i])}) look like a clipped/truncated schedule, "
+                "which would resurrect the link at the clip boundary"
             )
+        if (s < 0).any():
+            i = int(np.nonzero(s < 0)[0][0])
+            raise ValueError(
+                f"failure row {i} (queue {int(q[i])}) starts at tick "
+                f"{int(s[i])}: windows cannot start before tick 0"
+            )
+        unknown = live & ~np.isin(k, list(KNOWN_KINDS))
+        if unknown.any():
+            i = int(np.nonzero(unknown)[0][0])
+            raise ValueError(
+                f"failure row {i} (queue {int(q[i])}, "
+                f"[{int(s[i])}, {int(e[i])})) has unknown kind "
+                f"{int(k[i])}; known kinds: "
+                + ", ".join(f"{c}={n}" for c, n in sorted(KNOWN_KINDS.items()))
+            )
+        bad_p = live & (
+            ((k == K_GRAY) & ((p <= 0) | (p > GRAY_SCALE)))
+            | ((k != K_GRAY) & (p != 0))
+        )
+        if bad_p.any():
+            i = int(np.nonzero(bad_p)[0][0])
+            raise ValueError(
+                f"failure row {i} (queue {int(q[i])}, kind {int(k[i])}) has "
+                f"param {int(p[i])}: gray-loss rows need 0 < param <= "
+                f"{GRAY_SCALE} (drop probability = param/{GRAY_SCALE}); "
+                "other kinds take param == 0"
+            )
+        if n_queues is not None:
+            bad_q = live & ((q < 0) | (q >= n_queues))
+            if bad_q.any():
+                i = int(np.nonzero(bad_q)[0][0])
+                raise ValueError(
+                    f"failure row {i} targets queue {int(q[i])}, outside "
+                    f"the topology's [0, {n_queues}) queue range"
+                )
 
     def merge(
         self,
@@ -260,6 +328,7 @@ class FailureSchedule:
             start=np.asarray(delta.start, np.int32)[d_live],
             end=np.asarray(delta.end, np.int32)[d_live],
             kind=np.asarray(delta.kind, np.int32)[d_live],
+            param=np.asarray(delta.param, np.int32)[d_live],
         )
         merged = FailureSchedule.concat(self, live_delta)
         merged.validate(n_queues)
@@ -283,6 +352,7 @@ class ScenarioArrays(NamedTuple):
     f_start: jax.Array  # (F,) int32
     f_end: jax.Array  # (F,) int32
     f_kind: jax.Array  # (F,) int32
+    f_param: jax.Array  # (F,) int32
 
 
 class SimState(NamedTuple):
@@ -528,6 +598,7 @@ class Simulator:
         self.f_start = jnp.asarray(self.failures.start)
         self.f_end = jnp.asarray(self.failures.end)
         self.f_kind = jnp.asarray(self.failures.kind)
+        self.f_param = jnp.asarray(self.failures.param)
 
         # the pure-step view of this scenario's dynamic arrays
         self.scn = ScenarioArrays(
@@ -542,6 +613,7 @@ class Simulator:
             f_start=self.f_start,
             f_end=self.f_end,
             f_kind=self.f_kind,
+            f_param=self.f_param,
         )
 
         self.base_key = jax.random.PRNGKey(seed)
@@ -852,14 +924,26 @@ class Simulator:
         f_active = (now >= scn.f_start) & (now < scn.f_end)
         failed_q = (
             jnp.zeros((NQ + 1,), jnp.bool_)
-            .at[jnp.where(f_active & (scn.f_kind == 0), scn.f_queue, NQ)]
+            .at[jnp.where(f_active & (scn.f_kind == K_DOWN), scn.f_queue, NQ)]
             .max(True, mode="drop")[:NQ]
         )
         degraded_q = (
             jnp.zeros((NQ + 1,), jnp.bool_)
-            .at[jnp.where(f_active & (scn.f_kind == 1), scn.f_queue, NQ)]
+            .at[jnp.where(f_active & (scn.f_kind == K_DEGRADED), scn.f_queue, NQ)]
             .max(True, mode="drop")[:NQ]
         )
+        # gray loss: per-queue fixed-point drop probability (param/GRAY_SCALE)
+        # scatter-maxed from active kind-2 rows, compared against a uniform
+        # draw on its own fold (3) of the tick key — independent of the RED
+        # (1) and LB (2) streams, so schedules with no gray rows stay
+        # bit-identical to runs predating the gray fault model.
+        gray_p = (
+            jnp.zeros((NQ + 1,), jnp.int32)
+            .at[jnp.where(f_active & (scn.f_kind == K_GRAY), scn.f_queue, NQ)]
+            .max(scn.f_param, mode="drop")[:NQ]
+        )
+        u_gray = jax.random.uniform(jax.random.fold_in(key, 3), (NQ,))
+        gray_hit = (u_gray * GRAY_SCALE).astype(jnp.int32) < gray_p
         service_ok = ~(degraded_q & (now % 2 == 1))
         serve = (q_len > 0) & service_ok
         head_pid = qbuf[jnp.arange(NQ), q_head % QCAP]
@@ -869,7 +953,10 @@ class Simulator:
 
         pid = jnp.where(serve, head_pid, NP)  # NP = drop sentinel
         qid = jnp.arange(NQ, dtype=jnp.int32)
-        blackhole = serve & failed_q
+        # gray-dropped serves share the blackhole path (silent loss →
+        # ST_DROPS_FAIL, LOST_WAIT awaiting RTO) but NOT the q_len_eff
+        # routing penalty below: gray loss is invisible to the switches.
+        blackhole = serve & (failed_q | gray_hit)
         is_final = serve & ~blackhole & (qid >= topo.t0_down_base)
         mid = serve & ~blackhole & ~is_final
 

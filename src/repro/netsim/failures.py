@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.netsim import engine
 from repro.netsim.config import SimConfig
 from repro.netsim.engine import FailureSchedule
 from repro.netsim.topology import Topology
@@ -34,6 +35,7 @@ def truncate_dead(fs: FailureSchedule, horizon: int) -> FailureSchedule:
         start=s.astype(np.int32)[live],
         end=e.astype(np.int32)[live],
         kind=np.asarray(fs.kind, np.int32)[live],
+        param=np.asarray(fs.param, np.int32)[live],
     )
 
 
@@ -57,6 +59,82 @@ def link_degraded(queues, start: int, end: int) -> FailureSchedule:
         end=np.full((n,), end, np.int32),
         kind=np.ones((n,), np.int32),
     )
+
+
+def gray_loss(queues, start: int, end: int, rate: float) -> FailureSchedule:
+    """Gray failure: the link stays up (and invisible to adaptive switch
+    routing) but silently drops each served packet with probability
+    ``rate``.  The rate is stored fixed-point (``param = round(rate *
+    GRAY_SCALE)``) and the per-packet draw goes through the engine's
+    threefry tick key, so runs are bit-reproducible across kill/resume."""
+    if not 0.0 < rate <= 1.0:
+        raise ValueError(f"gray_loss rate must be in (0, 1], got {rate}")
+    q = np.atleast_1d(np.asarray(queues, np.int32))
+    n = len(q)
+    param = int(round(rate * engine.GRAY_SCALE))
+    return FailureSchedule(
+        queue=q,
+        start=np.full((n,), start, np.int32),
+        end=np.full((n,), end, np.int32),
+        kind=np.full((n,), engine.K_GRAY, np.int32),
+        param=np.full((n,), param, np.int32),
+    )
+
+
+def link_flapping(
+    queues, start: int, end: int, period: int, down_ticks: int
+) -> FailureSchedule:
+    """Flapping link(s): periodic *down* windows of ``down_ticks`` every
+    ``period`` ticks, first window at ``start``, windows starting at or
+    after ``end`` omitted.  Materialized as explicit kind-0 rows (one per
+    down window per queue) — no new runtime kind, so the engine's
+    active-set arithmetic and the pad/truncate no-resurrect semantics are
+    untouched, and a flapping schedule is bit-identical to the equivalent
+    hand-composed ``link_down`` stack."""
+    if period <= 0 or down_ticks <= 0 or down_ticks >= period:
+        raise ValueError(
+            "link_flapping needs 0 < down_ticks < period, got "
+            f"period={period} down_ticks={down_ticks}"
+        )
+    starts = np.arange(start, end, period, dtype=np.int64)
+    if len(starts) == 0:
+        return FailureSchedule.none()
+    return FailureSchedule.concat(
+        *[link_down(queues, int(s), int(s) + down_ticks) for s in starts]
+    )
+
+
+def switch_down(
+    cfg: SimConfig, tor: int, start: int, end: int = FOREVER
+) -> FailureSchedule:
+    """Correlated switch-level outage: every uplink of ToR ``tor`` goes
+    down at once (spine-level outages are ``spine_down``)."""
+    assert 0 <= tor < cfg.n_tors, (tor, cfg.n_tors)
+    topo = Topology.build(cfg)
+    return link_down(topo.t0_up_queues(tor), start, end)
+
+
+def switch_degraded(
+    cfg: SimConfig, tor: int, start: int, end: int = FOREVER
+) -> FailureSchedule:
+    """Fail-slow switch: every uplink of ToR ``tor`` degrades to half
+    rate at once."""
+    assert 0 <= tor < cfg.n_tors, (tor, cfg.n_tors)
+    topo = Topology.build(cfg)
+    return link_degraded(topo.t0_up_queues(tor), start, end)
+
+
+def spine_degraded(
+    cfg: SimConfig, spine: int, start: int, end: int = FOREVER
+) -> FailureSchedule:
+    """Fail-slow spine: the uplink of every ToR that targets ``spine``
+    degrades to half rate for ``[start, end)`` (the degraded sibling of
+    ``spine_down``)."""
+    assert cfg.tiers == 2, "spine_degraded targets the 2-tier fabric"
+    assert 0 <= spine < cfg.uplinks_per_tor, (spine, cfg.uplinks_per_tor)
+    topo = Topology.build(cfg)
+    qs = [int(topo.t0_up_queues(t)[spine]) for t in range(cfg.n_tors)]
+    return link_degraded(qs, start, end)
 
 
 def random_degraded_uplinks(

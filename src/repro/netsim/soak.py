@@ -167,7 +167,7 @@ class SoakRunner:
             for a in (wl.src, wl.dst, wl.msg_pkts, wl.start, wl.dep):
                 h.update(np.ascontiguousarray(a, np.int64).tobytes())
             fs = case.failures or FailureSchedule.none()
-            for a in (fs.queue, fs.start, fs.end, fs.kind):
+            for a in (fs.queue, fs.start, fs.end, fs.kind, fs.param):
                 h.update(np.ascontiguousarray(a, np.int64).tobytes())
             h.update(np.ascontiguousarray(
                 eng._watch_for(case), np.int64).tobytes())
@@ -222,6 +222,7 @@ class SoakRunner:
                 "start": np.asarray(delta.start, np.int32).tolist(),
                 "end": np.asarray(delta.end, np.int32).tolist(),
                 "kind": np.asarray(delta.kind, np.int32).tolist(),
+                "param": np.asarray(delta.param, np.int32).tolist(),
             }
         )
         self._checkpoint()
@@ -309,7 +310,7 @@ class SoakRunner:
             bucket = self.engine.buckets[bi]
             host = {
                 name: np.array(jax.device_get(getattr(bucket.scn, name)))
-                for name in ("f_queue", "f_start", "f_end", "f_kind")
+                for name in ("f_queue", "f_start", "f_end", "f_kind", "f_param")
             }
             for sbi, c, padded in staged:
                 if sbi != bi:
@@ -320,6 +321,7 @@ class SoakRunner:
                     host["f_start"][row] = padded.start
                     host["f_end"][row] = padded.end
                     host["f_kind"][row] = padded.kind
+                    host["f_param"][row] = padded.param
             # pad rows repeat row 0 at build time; keep that exact shape so
             # an injected bucket is indistinguishable from a fresh build
             for name in host:
@@ -405,6 +407,11 @@ class SoakRunner:
                 start=np.asarray(inj["start"], np.int32),
                 end=np.asarray(inj["end"], np.int32),
                 kind=np.asarray(inj["kind"], np.int32),
+                # absent in snapshots written before the gray fault model
+                param=np.asarray(
+                    inj.get("param", np.zeros(len(inj["queue"]), np.int32)),
+                    np.int32,
+                ),
             )
             self._apply_delta(delta, int(inj["at_tick"]))
             self.injections.append(inj)

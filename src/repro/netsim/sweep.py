@@ -1084,6 +1084,7 @@ class SweepEngine:
             f_start=stack(lambda c, s: c.padded_fs.start.astype(np.int32)),
             f_end=stack(lambda c, s: c.padded_fs.end.astype(np.int32)),
             f_kind=stack(lambda c, s: c.padded_fs.kind.astype(np.int32)),
+            f_param=stack(lambda c, s: c.padded_fs.param.astype(np.int32)),
         )
         keys = jnp.stack([jax.random.PRNGKey(s) for _, s in row_cells])
         branch_idx = np.asarray([c.branch for c, _ in row_cells], np.int32)

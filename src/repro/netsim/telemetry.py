@@ -136,6 +136,22 @@ def _wide_total(hi, lo) -> int:
     return (int(hi) << SUM_SHIFT) + int(lo)
 
 
+def _conn_mask(conn_filter, n_conns: int) -> np.ndarray:
+    """Materialize a cohort's static conn-id tuple as a (NC,) bool mask.
+    Built once per program (the tuple is a frozen channel knob, so it is
+    hashable and shared by every cell in a bucket); out-of-range ids are
+    rejected here rather than silently dropped by a clipped scatter."""
+    mask = np.zeros((n_conns,), bool)
+    ids = np.asarray(conn_filter, np.int64)
+    if ids.size and (ids.min() < 0 or ids.max() >= n_conns):
+        raise ValueError(
+            f"conn_filter ids must be in [0, {n_conns}), got "
+            f"[{ids.min()}, {ids.max()}]"
+        )
+    mask[ids] = True
+    return mask
+
+
 @dataclasses.dataclass(frozen=True)
 class RunningScalars:
     """Exact running scalars: FCT count/sum/min/max, completion-tick max,
@@ -143,14 +159,25 @@ class RunningScalars:
     mean bit-for-bit; mean qlen divides by horizon × NQ at finalize so an
     early-exited run reports the same value as the full horizon.  The two
     run-long sums use (hi, lo) split accumulators so they stay exact far
-    past int32 range."""
+    past int32 range.
+
+    ``conn_filter`` restricts the FCT-side scalars to a cohort of conn ids
+    (fig05-style fg/bg mixed workloads); the queue-side scalars stay
+    fabric-global.  A cohort instance needs a distinct ``name`` so its
+    carry slots don't collide with the default "scalars" channel."""
+
+    conn_filter: tuple[int, ...] | None = None
+    name: str | None = None
 
     @property
     def key(self) -> str:
-        return "scalars"
+        return self.name or "scalars"
 
     def build(self, sim, ticks: int) -> dict:
-        return {"nq": sim.NQ}
+        built = {"nq": sim.NQ}
+        if self.conn_filter is not None:
+            built["mask"] = _conn_mask(self.conn_filter, sim.wl.n_conns)
+        return built
 
     def slots(self, built) -> dict:
         return {
@@ -171,8 +198,13 @@ class RunningScalars:
 
     def update(self, built, v: dict, probe: Probe) -> dict:
         d = probe.done_now
+        fct = probe.fct
+        if "mask" in built:
+            cohort = jnp.asarray(built["mask"])
+            d = d & cohort
+            fct = jnp.where(cohort, fct, 0)
         fct_hi, fct_lo = _acc_wide(
-            v["fct_sum_hi"], v["fct_sum_lo"], jnp.sum(probe.fct)
+            v["fct_sum_hi"], v["fct_sum_lo"], jnp.sum(fct)
         )  # fct is 0 where ~done
         q_hi, q_lo = _acc_wide(
             v["qlen_sum_hi"], v["qlen_sum_lo"], jnp.sum(probe.q_len)
@@ -181,10 +213,10 @@ class RunningScalars:
             "fct_count": v["fct_count"] + jnp.sum(d, dtype=jnp.int32),
             "fct_sum_hi": fct_hi, "fct_sum_lo": fct_lo,
             "fct_min": jnp.minimum(
-                v["fct_min"], jnp.min(jnp.where(d, probe.fct, BIG))
+                v["fct_min"], jnp.min(jnp.where(d, fct, BIG))
             ),
             "fct_max": jnp.maximum(
-                v["fct_max"], jnp.max(jnp.where(d, probe.fct, -1))
+                v["fct_max"], jnp.max(jnp.where(d, fct, -1))
             ),
             "done_tick_max": jnp.maximum(
                 v["done_tick_max"], jnp.max(jnp.where(d, probe.now, -1))
@@ -222,6 +254,10 @@ class Histogram:
     carry invariant to skipped post-quiescent ticks and (b) costs nothing.
     ``hi=None`` derives the top edge from the program (the scan horizon for
     FCT, the queue capacity for qlen).
+
+    ``conn_filter`` (source="fct" only) restricts the sketch to a cohort
+    of conn ids — fig05-style fg/bg mixed workloads get one histogram per
+    cohort, each with a distinct ``name`` so carry slots don't collide.
     """
 
     source: str = "fct"  # "fct" | "qlen"
@@ -230,6 +266,7 @@ class Histogram:
     hi: int | None = None
     spacing: str = "log"  # "log" | "linear"
     name: str | None = None
+    conn_filter: tuple[int, ...] | None = None
 
     @property
     def key(self) -> str:
@@ -238,6 +275,10 @@ class Histogram:
     def build(self, sim, ticks: int) -> dict:
         assert self.source in ("fct", "qlen"), self.source
         assert self.spacing in ("log", "linear"), self.spacing
+        if self.conn_filter is not None and self.source != "fct":
+            raise ValueError(
+                "conn_filter only applies to source='fct' histograms"
+            )
         hi = self.hi
         if hi is None:
             hi = ticks if self.source == "fct" else sim.cfg.queue_capacity
@@ -246,12 +287,15 @@ class Histogram:
             edges = np.geomspace(float(self.lo), float(hi), self.n_bins + 1)
         else:
             edges = np.linspace(float(self.lo), float(hi), self.n_bins + 1)
-        return {
+        built = {
             "edges": edges.astype(np.float32),
             # streams observed per tick (zero-count reconstruction); 0 for
             # event-driven sources (no implicit zero observations)
             "n_streams": sim.NQ if self.source == "qlen" else 0,
         }
+        if self.conn_filter is not None:
+            built["mask"] = _conn_mask(self.conn_filter, sim.wl.n_conns)
+        return built
 
     def slots(self, built) -> dict:
         # (hi, lo) split like RunningScalars: a qlen bin can receive up to
@@ -269,6 +313,8 @@ class Histogram:
     def update(self, built, v: dict, probe: Probe) -> dict:
         if self.source == "fct":
             vals, mask = probe.fct, probe.done_now
+            if "mask" in built:
+                mask = mask & jnp.asarray(built["mask"])
         else:
             vals, mask = probe.q_len, probe.q_len > 0
         idx = jnp.clip(
@@ -489,6 +535,29 @@ class TelemetrySpec:
 
     def build(self, sim, ticks: int) -> "TelemetryProgram":
         return TelemetryProgram(self, sim, ticks)
+
+    def with_cohorts(self, cohorts: dict, fct_bins: int = 64) -> "TelemetrySpec":
+        """Extend this spec with one FCT histogram + scalar pair per cohort.
+
+        ``cohorts`` maps a label to a tuple of conn ids — e.g. fig05's
+        fg/bg split: ``spec.with_cohorts({"fg": fg_ids, "bg": bg_ids})``
+        adds ``fct_hist_fg`` / ``scalars_fg`` (etc.) channels whose
+        sketches only observe that cohort's completions, so mixed-workload
+        figures (and chaos invariants) read per-cohort FCT distributions
+        straight from summary mode."""
+        extra = []
+        for label, ids in cohorts.items():
+            ids = tuple(int(i) for i in ids)
+            extra.append(
+                Histogram(
+                    source="fct", n_bins=fct_bins,
+                    name=f"fct_hist_{label}", conn_filter=ids,
+                )
+            )
+            extra.append(
+                RunningScalars(name=f"scalars_{label}", conn_filter=ids)
+            )
+        return TelemetrySpec(channels=self.channels + tuple(extra))
 
 
 class TelemetryProgram:

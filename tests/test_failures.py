@@ -1,0 +1,258 @@
+"""Expanded fault model (repro.netsim.failures + engine kind codes).
+
+The contract under test:
+
+* **Flapping == composed stack** — ``link_flapping`` materializes to the
+  exact kind-0 window rows of the hand-composed ``link_down`` stack, and
+  the two drive a sweep bit-identically (same pack plan, same RNG).
+* **Gray loss determinism** — kind-2 probabilistic drops come from the
+  engine's tick-keyed threefry stream (fold 3): the same seed reproduces
+  the same drops, and a kill/resume through the soak runtime is
+  bit-identical to the uninterrupted run while the gray window is live.
+* **Switch-level composition** — ``switch_down`` injected mid-run via
+  ``SoakRunner.inject`` equals declaring it statically.
+* **Validation** — ``FailureSchedule.validate`` raises ``ValueError``
+  naming the offending row for unknown kinds, inverted/negative windows,
+  out-of-range gray params and non-inert pads; builder arguments are
+  checked at construction.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.netsim import (
+    FailureSchedule, SoakConfig, SoakRunner, SweepCase, SweepEngine,
+    Topology, failures, workloads,
+)
+from repro.netsim.engine import GRAY_SCALE, K_DEGRADED, K_DOWN, K_GRAY
+
+CFG = FATTREE_32_CI
+TICKS = 360
+CHUNK = 120
+SLOTS = 12
+
+WL = workloads.permutation(32, 24, seed=3)
+
+
+def _case(name, fs, lb="reps", ticks=TICKS):
+    return SweepCase(
+        name=name, workload=WL, lb=lb, ticks=ticks, failures=fs, seeds=(5,),
+    )
+
+
+def _run(fs, lb="reps", ticks=TICKS):
+    eng = SweepEngine(CFG, [_case("cell", fs, lb, ticks)], devices=None,
+                      min_failure_slots=SLOTS)
+    res = eng.run(collect="summary", chunk=CHUNK)
+    state = jax.tree_util.tree_map(np.asarray, res.buckets[0].final_state)
+    tel = np.asarray(res.buckets[0].telemetry)
+    return res.summaries()["cell"][0], state, tel
+
+
+def _assert_states_equal(a, b):
+    for g, w in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# link_flapping
+# ---------------------------------------------------------------------------
+
+
+def test_flapping_materializes_down_windows():
+    fs = failures.link_flapping([3], start=40, end=400, period=120,
+                                down_ticks=30)
+    np.testing.assert_array_equal(fs.queue, [3, 3, 3])
+    np.testing.assert_array_equal(fs.start, [40, 160, 280])
+    np.testing.assert_array_equal(fs.end, [70, 190, 310])
+    assert (fs.kind == K_DOWN).all() and (fs.param == 0).all()
+    fs.validate(CFG.n_hosts * 100)  # plain kind-0 rows, nothing exotic
+
+
+def test_flapping_bit_equals_composed_stack_through_sweep():
+    q = int(Topology.build(CFG).t0_up_queues(0)[2])
+    flap = failures.link_flapping([q], start=24, end=TICKS, period=150,
+                                  down_ticks=40)
+    stack = FailureSchedule.concat(
+        failures.link_down([q], 24, 64),
+        failures.link_down([q], 174, 214),
+        failures.link_down([q], 324, 364),  # window may outlive `end`
+    )
+    np.testing.assert_array_equal(flap.start, stack.start)
+    np.testing.assert_array_equal(flap.end, stack.end)
+    sum_a, st_a, tel_a = _run(flap)
+    sum_b, st_b, tel_b = _run(stack)
+    assert repr(sum_a) == repr(sum_b)
+    _assert_states_equal(st_a, st_b)
+    np.testing.assert_array_equal(tel_a, tel_b)
+    assert sum_a.drops_fail > 0, "flap windows must actually drop traffic"
+
+
+def test_flapping_builder_rejects_bad_duty_cycle():
+    with pytest.raises(ValueError, match="down_ticks"):
+        failures.link_flapping([0], 0, 100, period=50, down_ticks=50)
+    with pytest.raises(ValueError, match="down_ticks"):
+        failures.link_flapping([0], 0, 100, period=50, down_ticks=0)
+    assert failures.link_flapping([0], 90, 80, 50, 10).queue.size == 0
+
+
+# ---------------------------------------------------------------------------
+# gray_loss
+# ---------------------------------------------------------------------------
+
+
+def test_gray_loss_rows_and_rate_mapping():
+    fs = failures.gray_loss([1, 5], start=10, end=200, rate=0.25)
+    assert (fs.kind == K_GRAY).all()
+    np.testing.assert_array_equal(fs.param, [16384, 16384])
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError, match="rate"):
+            failures.gray_loss([1], 0, 10, bad)
+
+
+def test_gray_loss_drops_deterministically():
+    # the window closes early enough for every dropped packet to be
+    # retransmitted: drop <= 160, RTO 400, horizon 720
+    topo = Topology.build(CFG)
+    qs = [int(topo.t0_up_queues(t)[0]) for t in range(CFG.n_tors)]
+    fs = failures.gray_loss(qs, start=0, end=160, rate=0.5)
+    sum_a, st_a, tel_a = _run(fs, ticks=720)
+    sum_b, st_b, tel_b = _run(fs, ticks=720)
+    assert sum_a.drops_fail > 0, "rate 0.5 over live uplinks must drop"
+    assert sum_a.completed == sum_a.n_conns, "gray loss is survivable"
+    assert repr(sum_a) == repr(sum_b)
+    _assert_states_equal(st_a, st_b)
+    np.testing.assert_array_equal(tel_a, tel_b)
+
+
+def test_gray_loss_kill_resume_bit_parity(tmp_path):
+    """Kill/resume lands mid-gray-window: the tick-keyed fold-3 stream
+    must reproduce the exact same per-packet drops after restore."""
+    topo = Topology.build(CFG)
+    qs = [int(topo.t0_up_queues(t)[0]) for t in range(CFG.n_tors)]
+    fs = failures.gray_loss(qs, start=0, end=TICKS, rate=0.4)
+
+    def engine():
+        return SweepEngine(CFG, [_case("cell", fs)], devices=None,
+                           min_failure_slots=SLOTS)
+
+    golden = engine().run(collect="summary", chunk=CHUNK)
+    g_state = jax.tree_util.tree_map(np.asarray, golden.buckets[0].final_state)
+    g_tel = np.asarray(golden.buckets[0].telemetry)
+
+    d = str(tmp_path / "ck")
+    first = SoakRunner(engine(), SoakConfig(chunk=CHUNK, ckpt_dir=d))
+    first.advance(CHUNK)  # die inside the gray window
+    del first
+    resumed = SoakRunner(engine(), SoakConfig(chunk=CHUNK, ckpt_dir=d)).resume()
+    assert resumed.cursor == CHUNK
+    resumed.advance(TICKS)
+    res = resumed.result()
+    assert repr(res.summaries()) == repr(golden.summaries())
+    _assert_states_equal(
+        jax.tree_util.tree_map(np.asarray, res.buckets[0].final_state), g_state
+    )
+    np.testing.assert_array_equal(np.asarray(res.buckets[0].telemetry), g_tel)
+
+
+# ---------------------------------------------------------------------------
+# switch-level composition
+# ---------------------------------------------------------------------------
+
+
+def test_switch_down_covers_all_tor_uplinks():
+    fs = failures.switch_down(CFG, 1, 50, 90)
+    topo = Topology.build(CFG)
+    np.testing.assert_array_equal(
+        np.sort(fs.queue), np.sort(topo.t0_up_queues(1))
+    )
+    assert (fs.kind == K_DOWN).all()
+    deg = failures.switch_degraded(CFG, 1, 50, 90)
+    np.testing.assert_array_equal(np.sort(deg.queue), np.sort(fs.queue))
+    assert (deg.kind == K_DEGRADED).all()
+
+
+def test_switch_down_inject_equals_static(tmp_path):
+    delta = failures.switch_down(CFG, 2, start=CHUNK + 8, end=CHUNK + 128)
+
+    def engine(extra=None):
+        fs = extra if extra is not None else FailureSchedule.none()
+        return SweepEngine(CFG, [_case("cell", fs)], devices=None,
+                           min_failure_slots=SLOTS)
+
+    static = engine(extra=delta).run(collect="summary", chunk=CHUNK)
+    soak = SoakRunner(
+        engine(), SoakConfig(chunk=CHUNK, ckpt_dir=str(tmp_path / "ck"))
+    )
+    soak.advance(CHUNK)
+    soak.inject(delta)
+    soak.advance(TICKS)
+    res = soak.result()
+    assert repr(res.summaries()) == repr(static.summaries())
+    _assert_states_equal(
+        jax.tree_util.tree_map(np.asarray, res.buckets[0].final_state),
+        jax.tree_util.tree_map(np.asarray, static.buckets[0].final_state),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.buckets[0].telemetry),
+        np.asarray(static.buckets[0].telemetry),
+    )
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def _sched(queue, start, end, kind, param=None):
+    n = len(queue)
+    return FailureSchedule(
+        queue=np.asarray(queue, np.int32),
+        start=np.asarray(start, np.int32),
+        end=np.asarray(end, np.int32),
+        kind=np.asarray(kind, np.int32),
+        param=None if param is None else np.asarray(param, np.int32),
+    )
+
+
+def test_validate_rejects_unknown_kind_naming_row():
+    fs = _sched([0, 1], [0, 0], [10, 10], [0, 9])
+    with pytest.raises(ValueError, match=r"row 1.*kind"):
+        fs.validate(8)
+
+
+def test_validate_rejects_inverted_and_negative_windows():
+    with pytest.raises(ValueError, match="row 0"):
+        _sched([0], [20], [10], [0]).validate(8)
+    with pytest.raises(ValueError, match="row 0"):
+        _sched([0], [-5], [10], [0]).validate(8)
+
+
+def test_validate_rejects_bad_gray_param():
+    with pytest.raises(ValueError, match=r"row 0.*param"):
+        _sched([0], [0], [10], [K_GRAY], [0]).validate(8)
+    with pytest.raises(ValueError, match=r"row 0.*param"):
+        _sched([0], [0], [10], [K_GRAY], [GRAY_SCALE + 1]).validate(8)
+    _sched([0], [0], [10], [K_GRAY], [GRAY_SCALE]).validate(8)  # 100% ok
+
+
+def test_validate_rejects_param_on_non_gray_rows():
+    with pytest.raises(ValueError, match=r"row 0.*param"):
+        _sched([0], [0], [10], [K_DOWN], [7]).validate(8)
+
+
+def test_validate_rejects_out_of_range_queue():
+    with pytest.raises(ValueError, match="row 0"):
+        _sched([99], [0], [10], [0]).validate(8)
+
+
+def test_simulator_build_rejects_bad_schedule():
+    from repro.netsim.engine import Simulator
+    from repro.core import make_lb
+
+    fs = _sched([0], [0], [10], [5])
+    with pytest.raises(ValueError, match="kind"):
+        Simulator(CFG, WL, make_lb("reps"), failures=fs)

@@ -405,7 +405,7 @@ def test_failure_schedule_pad_truncate_validate():
         queue=np.asarray([1], np.int32), start=np.asarray([5], np.int32),
         end=np.asarray([5], np.int32), kind=np.asarray([0], np.int32),
     )
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="row"):
         Simulator(
             FATTREE_32_CI, workloads.permutation(32, 16, seed=0),
             make_lb("ops", evs_size=FATTREE_32_CI.evs_size),

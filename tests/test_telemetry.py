@@ -360,3 +360,70 @@ def test_fig02_summary_grid_end_to_end():
 def test_fig07_summary_grid_end_to_end():
     ratios = _grid_roundtrip(_shrink(fig07.cases(CFG, smoke=True)))
     assert min(ratios) >= 10, ratios
+
+
+# ---------------------------------------------------------------------------
+# Per-cohort channel masks (fig05-style fg/bg mixed workloads).
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_masks_partition_fct_sketches():
+    """``with_cohorts`` adds per-cohort FCT histogram/scalar channels that
+    exactly partition the global ones: counts and FCT sums of fg + bg
+    equal the unfiltered channels, and each cohort sum matches the
+    state-path FCTs of its conn ids."""
+    import pytest
+
+    wl, bg = workloads.permutation_with_background(32, 24, 0.25, seed=4)
+    fg_ids = tuple(int(i) for i in np.nonzero(~bg)[0])
+    bg_ids = tuple(int(i) for i in np.nonzero(bg)[0])
+    spec = TelemetrySpec.default().with_cohorts({"fg": fg_ids, "bg": bg_ids})
+    case = _case("cell", wl, "reps", 360)
+    res = SweepEngine(CFG, [case], devices=None).run(
+        collect="summary", telemetry=spec, chunk=120
+    )
+    tel = res.telemetry_for("cell")
+
+    total = int(tel["fct_hist"]["counts"].sum())
+    fg_n = int(tel["fct_hist_fg"]["counts"].sum())
+    bg_n = int(tel["fct_hist_bg"]["counts"].sum())
+    assert total == wl.n_conns, "baseline grid must complete"
+    assert fg_n == len(fg_ids) and bg_n == len(bg_ids)
+    assert fg_n + bg_n == total
+
+    assert tel["scalars_fg"]["fct_count"] == len(fg_ids)
+    assert tel["scalars_bg"]["fct_count"] == len(bg_ids)
+    assert (
+        tel["scalars_fg"]["fct_sum"] + tel["scalars_bg"]["fct_sum"]
+        == tel["scalars"]["fct_sum"]
+    )
+
+    # state-path cross-check: cohort FCT sums from the final state
+    st = res.state_for("cell")
+    fct = np.asarray(st.c_done_tick) - np.asarray(wl.start)
+    assert tel["scalars_fg"]["fct_sum"] == int(fct[list(fg_ids)].sum())
+    assert tel["scalars_bg"]["fct_sum"] == int(fct[list(bg_ids)].sum())
+
+    # per-cohort histograms and scalars see disjoint mins/maxes
+    assert tel["scalars_fg"]["fct_max"] <= tel["scalars"]["fct_max"]
+    assert tel["scalars_bg"]["fct_max"] <= tel["scalars"]["fct_max"]
+
+
+def test_cohort_mask_validation():
+    """Out-of-range cohort ids are rejected at program build, and
+    ``conn_filter`` composes only with the FCT source."""
+    import pytest
+
+    from repro.netsim import Histogram, RunningScalars, Simulator
+    from repro.netsim.telemetry import TelemetrySpec as Spec
+
+    wl = workloads.permutation(32, 8, seed=0)
+    sim = Simulator(CFG, wl, make_lb("reps"))
+    bad = Spec(channels=(RunningScalars(name="s_x", conn_filter=(99,)),))
+    with pytest.raises(ValueError, match="conn"):
+        bad.build(sim, 100)
+    qlen = Spec(channels=(
+        Histogram(source="qlen", name="q_x", conn_filter=(0,)),
+    ))
+    with pytest.raises(ValueError, match="fct"):
+        qlen.build(sim, 100)
