@@ -1,0 +1,76 @@
+"""LB arena: every registered load balancer head-to-head (ROADMAP's
+"algorithm arena") — the paper's REPS claims pressure-tested against its
+literature (PRIME multi-part entropy, SeqBalance reorder-free re-pathing,
+CONGA-style flowlet tables) and the in-repo zoo, on one figure_grid
+submission.
+
+Three workload blocks × all LBs, a handful of compiled bucket scans:
+
+  * symmetric  — permutation traffic, the paper's §4.2 baseline regime;
+  * asymmetric — incast fan-in, persistent congestion at one downlink;
+  * failure    — permutation under randomly downed uplinks (§5 recovery).
+
+Per-cell columns report completion, FCT p99, and failure-recovery latency
+from the on-device telemetry sketch channels (`recovery_us` is NaN on the
+failure-free blocks, and whenever collect != "summary" the recovery column
+degrades to "-" since no sketches exist).  BENCH_SMOKE=1 shrinks horizons
+and drops the asymmetric block; LB columns always stay complete so the
+arena keeps covering the whole registry.
+"""
+from benchmarks.common import SMOKE, Rows, ci_cfg, figure_grid, msg, sweep_case
+from repro.core.load_balancers import REGISTRY
+from repro.netsim import failures, workloads
+
+# every registered single-LB contender ("mixed" needs cohort kwargs and is
+# a composition, not a contender); keep registry order for stable columns
+ARENA_LBS = [n for n in REGISTRY if n != "mixed"]
+
+LB_KW = {"reps": {"freezing_timeout": 800}}
+
+
+def cases(cfg, smoke=SMOKE):
+    """Declarative cell list for the arena grid (smoke = CI subset)."""
+    n = cfg.n_hosts
+    fs = failures.random_down_uplinks(cfg, 0.05, 150, failures.FOREVER, seed=7)
+    blocks = [
+        ("symmetric", workloads.permutation(n, msg(192, 1024), seed=1),
+         2500 if smoke else 8000, None),
+        ("failure", workloads.permutation(n, msg(192, 1024), seed=3),
+         3000 if smoke else 9000, fs),
+    ]
+    if not smoke:
+        blocks.insert(1, (
+            "asymmetric", workloads.incast(n, 8, msg(192, 1024)), 9000, None,
+        ))
+    out = []
+    for wname, wl, ticks, f in blocks:
+        for lbn in ARENA_LBS:
+            out.append(
+                sweep_case(f"arena/{wname}/{lbn}", wl, lbn, ticks, cfg,
+                           failures=f, **LB_KW.get(lbn, {}))
+            )
+    return out
+
+
+def _derive(case, s, res):
+    """Completion + sketch columns: FCT p99 and recovery latency."""
+    try:
+        rec = res.telemetry_for(case.name).get("recovery")
+        rec_us = f"{rec['recovery_us']:.1f}" if rec else "-"
+    except ValueError:  # collect != "summary": no sketches were reduced
+        rec_us = "-"
+    return (
+        f"completed={s.completed}/{s.n_conns};p99_fct={s.p99_fct_ticks:.0f};"
+        f"recovery_us={rec_us};timeouts={s.timeouts}"
+    )
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    cfg = ci_cfg()
+    figure_grid(rows, "arena", cfg, cases(cfg), derive_res=_derive)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

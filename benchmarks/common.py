@@ -160,13 +160,16 @@ def run_sweep(cfg, cases, packer=None, collect=None, kernels=None):
     return eng, res
 
 
-def sweep_rows(rows, res, fmt=None, derive=None, collect=None):
+def sweep_rows(rows, res, fmt=None, derive=None, collect=None,
+               derive_res=None):
     """Emit one row per sweep cell (seed-0 metrics == the serial run).
 
     ``fmt(name, summary) -> str`` picks the derived string per cell
     (default: completion format); ``derive(case, summary, state) -> str``
     overrides it when the string needs the cell's final state (fig03's
-    served shares, fig05's cohort FCTs).  Wall attribution: a cell's
+    served shares, fig05's cohort FCTs); ``derive_res(case, summary, res)
+    -> str`` when it needs the whole sweep result (the arena's telemetry
+    sketch columns via ``res.telemetry_for``).  Wall attribution: a cell's
     us_per_call is its bucket's exec wall split evenly over the bucket's
     cells; ticks_per_sec stays the fleet-aggregate definition, here
     bucket-aggregate (rows x ticks over bucket wall).  ``collect`` stamps
@@ -179,7 +182,9 @@ def sweep_rows(rows, res, fmt=None, derive=None, collect=None):
         tps = b.ticks_run * b.n_rows / max(b.exec_wall_s, 1e-9)
         for c in b.cells:
             s = sums[c.case.name][0]
-            if derive is not None:
+            if derive_res is not None:
+                d = derive_res(c.case, s, res)
+            elif derive is not None:
                 d = derive(c.case, s, res.state_for(c.case.name))
             elif fmt is not None:
                 d = fmt(c.case.name, s)
@@ -197,7 +202,7 @@ def sweep_rows(rows, res, fmt=None, derive=None, collect=None):
 
 
 def figure_grid(rows, fig, cfg, cases, fmt=None, derive=None, packer=None,
-                collect=None):
+                collect=None, derive_res=None):
     """Run a declarative figure grid (list of SweepCases) as one sweep
     submission and emit its rows plus a ``{fig}/sweep_total`` row.
 
@@ -240,7 +245,8 @@ def figure_grid(rows, fig, cfg, cases, fmt=None, derive=None, packer=None,
             collect=collect,
         )
         return eng, res
-    sweep_rows(rows, res, fmt=fmt, derive=derive, collect=collect)
+    sweep_rows(rows, res, fmt=fmt, derive=derive, collect=collect,
+               derive_res=derive_res)
     plan = eng.plan
     for i, b in enumerate(res.buckets):
         t, ad, nc, msg, f, w = b.plan.key

@@ -15,8 +15,8 @@ class ForcedFreezeReps(RepsLB):
         super().__init__(**kw)
         self.force_at = force_at
 
-    def on_ack(self, state, mask, ev, ecn, now):
-        state = super().on_ack(state, mask, ev, ecn, now)
+    def on_ack(self, state, mask, ev, ecn, now, key):
+        state = super().on_ack(state, mask, ev, ecn, now, key)
         force = jnp.asarray(now == self.force_at)
         all_conns = jnp.ones(state.head.shape, bool) & force
         return reps_core.on_failure_detection(self.cfg, state, all_conns, now)

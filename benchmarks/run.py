@@ -40,6 +40,7 @@ MODULES = [
     "fig08_extreme",
     "fig19_incremental",
     "fig02_symmetric",
+    "arena",
     "reps_channels_bench",
 ]
 

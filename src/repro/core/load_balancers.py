@@ -6,14 +6,23 @@ tick.  Interface:
 
     init_state(n_conns, key)                        -> state pytree
     choose_ev(state, mask, key, now)                -> (evs (N,), state)
-    on_ack(state, mask, ev, ecn, now)               -> state
-    on_timeout(state, mask, now)                    -> state
+    on_ack(state, mask, ev, ecn, now, key)          -> state
+    on_timeout(state, mask, now, key)               -> state
 
 ``mask`` selects the connections that send / got an ACK / timed out this
 tick (the netsim guarantees at most one such event per connection per tick,
 see DESIGN.md §5).  ``switch_adaptive`` marks in-network approaches
 (adaptive RoCE): the sender still stamps an EV but switches override the
 port choice with a local least-queue decision.
+
+Key-threading contract: every callback that may re-path receives a key
+derived from the engine's per-tick threefry stream (``fold_in(tick_key,
+2)`` for ``choose_ev``, ``fold_in(fold_in(tick_key, 4), round)`` per
+feedback round for ``on_ack``, ``fold_in(tick_key, 5)`` for
+``on_timeout``), so draws differ per seed, per sweep row, per tick and per
+feedback round.  ``fold_in`` derives keys without consuming randomness,
+so LBs that ignore the key are bit-identical to runs before the key was
+threaded.
 """
 from __future__ import annotations
 
@@ -26,6 +35,17 @@ from repro.utils import pytree_dataclass, static_field
 
 def _rand_evs(key, n, evs_size):
     return jax.random.randint(key, (n,), 0, evs_size, jnp.int32)
+
+
+def _mix32(x):
+    """Cheap int32 -> uint32 avalanche hash (xorshift-multiply finalizer)."""
+    u = x.astype(jnp.uint32)
+    u = u ^ (u >> jnp.uint32(16))
+    u = u * jnp.uint32(0x7FEB352D)
+    u = u ^ (u >> jnp.uint32(15))
+    u = u * jnp.uint32(0x846CA68B)
+    u = u ^ (u >> jnp.uint32(16))
+    return u
 
 
 class LoadBalancer:
@@ -41,10 +61,10 @@ class LoadBalancer:
     def choose_ev(self, state, mask, key, now):
         raise NotImplementedError
 
-    def on_ack(self, state, mask, ev, ecn, now):
+    def on_ack(self, state, mask, ev, ecn, now, key):
         return state
 
-    def on_timeout(self, state, mask, now):
+    def on_timeout(self, state, mask, now, key):
         return state
 
 
@@ -175,7 +195,7 @@ class RepsLB(LoadBalancer):
             return evs, state
         return reps_core.choose_ev(self.cfg, state, mask, key)
 
-    def on_ack(self, state, mask, ev, ecn, now):
+    def on_ack(self, state, mask, ev, ecn, now, key):
         if self.backend == "pallas":
             state, _ = self._kernel_tick(
                 state, mask, ev, ecn, None, None, None, now
@@ -183,7 +203,7 @@ class RepsLB(LoadBalancer):
             return state
         return reps_core.on_ack(self.cfg, state, mask, ev, ecn, now)
 
-    def on_timeout(self, state, mask, now):
+    def on_timeout(self, state, mask, now, key):
         if not self.enable_freezing:
             return state
         if self.backend == "pallas":
@@ -234,45 +254,45 @@ class PlbLB(LoadBalancer):
     def choose_ev(self, state, mask, key, now):
         return state.ev, state
 
-    def on_ack(self, state, mask, ev, ecn, now):
-        acks = jnp.where(mask, state.acks + 1, state.acks)
-        marked = jnp.where(mask & ecn, state.marked + 1, state.marked)
+    def on_ack(self, state, mask, ev, ecn, now, key):
+        # Reset-then-count: close out an epoch that has already ended
+        # before counting this tick's ACKs.  `epoch_over` depends only on
+        # `now`, so an idle gap spanning the boundary rolls the epoch over
+        # on the next ACK too — the completed epoch is judged on its own
+        # counters, never with the next burst's first ACK mixed in.
         epoch_over = now >= state.epoch_end
-        frac_bad = marked > (
-            jnp.ceil(acks.astype(jnp.float32) * self.ecn_frac_threshold)
+        frac_bad = state.marked > (
+            jnp.ceil(state.acks.astype(jnp.float32) * self.ecn_frac_threshold)
         ).astype(jnp.int32)
         bad_epochs = jnp.where(
             epoch_over,
-            jnp.where(frac_bad & (acks > 0), state.bad_epochs + 1, 0),
+            jnp.where(frac_bad & (state.acks > 0), state.bad_epochs + 1, 0),
             state.bad_epochs,
         )
+        acks = jnp.where(epoch_over, 0, state.acks)
+        marked = jnp.where(epoch_over, 0, state.marked)
+        epoch_end = jnp.where(
+            epoch_over, now + self.epoch_ticks, state.epoch_end
+        )
+        acks = jnp.where(mask, acks + 1, acks)
+        marked = jnp.where(mask & ecn, marked + 1, marked)
         repath = bad_epochs >= self.repath_after_epochs
         new_ev = jax.random.randint(
-            jax.random.fold_in(jax.random.PRNGKey(0), now),
-            state.ev.shape,
-            0,
-            self.evs_size,
-            jnp.int32,
+            key, state.ev.shape, 0, self.evs_size, jnp.int32
         )
         ev_out = jnp.where(repath, new_ev, state.ev)
         bad_epochs = jnp.where(repath, 0, bad_epochs)
         return PlbState(
             ev=ev_out,
-            acks=jnp.where(epoch_over, 0, acks),
-            marked=jnp.where(epoch_over, 0, marked),
-            epoch_end=jnp.where(
-                epoch_over, now + self.epoch_ticks, state.epoch_end
-            ),
+            acks=acks,
+            marked=marked,
+            epoch_end=epoch_end,
             bad_epochs=bad_epochs,
         )
 
-    def on_timeout(self, state, mask, now):
+    def on_timeout(self, state, mask, now, key):
         new_ev = jax.random.randint(
-            jax.random.fold_in(jax.random.PRNGKey(1), now),
-            state.ev.shape,
-            0,
-            self.evs_size,
-            jnp.int32,
+            key, state.ev.shape, 0, self.evs_size, jnp.int32
         )
         return state.replace(ev=jnp.where(mask, new_ev, state.ev))
 
@@ -341,16 +361,12 @@ class MptcpLB(LoadBalancer):
         rr = jnp.where(mask, state.rr + 1, state.rr)
         return ev, state.replace(rr=rr)
 
-    def on_timeout(self, state, mask, now):
+    def on_timeout(self, state, mask, now, key):
         # Re-hash the subflow at the cursor for timed-out connections.
         idx = state.rr % self.n_subflows
         onehot = jax.nn.one_hot(idx, self.n_subflows, dtype=jnp.bool_)
         new_evs = jax.random.randint(
-            jax.random.fold_in(jax.random.PRNGKey(2), now),
-            state.sub_evs.shape,
-            0,
-            self.evs_size,
-            jnp.int32,
+            key, state.sub_evs.shape, 0, self.evs_size, jnp.int32
         )
         sub_evs = jnp.where(mask[:, None] & onehot, new_evs, state.sub_evs)
         return state.replace(sub_evs=sub_evs)
@@ -388,7 +404,7 @@ class MprdmaLB(LoadBalancer):
         ev = jnp.where(bad1, cand2, cand1)  # one resample on blacklist hit
         return ev, state
 
-    def on_ack(self, state, mask, ev, ecn, now):
+    def on_ack(self, state, mask, ev, ecn, now, key):
         add = mask & ecn
         L = self.blacklist
         onehot = jax.nn.one_hot(state.bad_ptr % L, L, dtype=jnp.bool_)
@@ -429,10 +445,192 @@ class BitmapLB(LoadBalancer):
             ev = jnp.where(is_bad, cand, ev)
         return ev, state
 
-    def on_ack(self, state, mask, ev, ecn, now):
+    def on_ack(self, state, mask, ev, ecn, now, key):
         onehot = jax.nn.one_hot(ev, self.evs_size, dtype=jnp.bool_)
         bad = jnp.where(mask[:, None] & onehot, ecn[:, None], state.bad)
         return BitmapState(bad=bad)
+
+
+# ---------------------------------------------------------------------------
+# PRIME-like: multi-part entropy header (PAPERS.md).  The EV splits into a
+# per-flow part hashed at connection setup and a sub-entropy field of
+# ``sub_bits`` bits that rotates per packet through a hashed sequence —
+# per-packet path diversity over a bounded window of EVs, so the reorder
+# span stays bounded too.  An RTO re-hashes the flow part (the whole window
+# moves off the failed path, via the threaded engine key); an ECN-marked
+# ACK skips the rotation forward to leave the congested sub-path sooner.
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class PrimeState:
+    base: jax.Array  # (N,) int32 hashed per-flow part of the header
+    ctr: jax.Array  # (N,) int32 per-packet rotation counter
+
+
+class PrimeLB(LoadBalancer):
+    name = "prime"
+
+    def __init__(self, evs_size: int = 65536, sub_bits: int = 4):
+        super().__init__(evs_size)
+        assert 0 < (1 << sub_bits) <= evs_size, (sub_bits, evs_size)
+        self.sub_bits = sub_bits
+
+    def init_state(self, n_conns, key):
+        return PrimeState(
+            base=_rand_evs(key, n_conns, self.evs_size),
+            ctr=jnp.zeros((n_conns,), jnp.int32),
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        sub = (
+            _mix32(state.ctr) & jnp.uint32((1 << self.sub_bits) - 1)
+        ).astype(jnp.int32)
+        ev = (state.base + sub) % self.evs_size
+        return ev, state.replace(
+            ctr=jnp.where(mask, state.ctr + 1, state.ctr)
+        )
+
+    def on_ack(self, state, mask, ev, ecn, now, key):
+        return state.replace(
+            ctr=jnp.where(mask & ecn, state.ctr + 1, state.ctr)
+        )
+
+    def on_timeout(self, state, mask, now, key):
+        new_base = _rand_evs(key, state.base.shape[0], self.evs_size)
+        return state.replace(base=jnp.where(mask, new_base, state.base))
+
+
+# ---------------------------------------------------------------------------
+# SeqBalance-like: reorder-free congestion-aware re-pathing (PAPERS.md).
+# One EV per connection, re-drawn only at message boundaries (every
+# ``msg_pkts`` sends) when the window since the last boundary saw a high
+# ECN fraction — packets inside a message never straddle two paths.  An RTO
+# means the message is stalled anyway (nothing left to reorder), so it
+# re-paths immediately with the threaded engine key.
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class SeqBalanceState:
+    ev: jax.Array  # (N,) int32 current path
+    sent: jax.Array  # (N,) int32 sends since the last boundary
+    acks: jax.Array  # (N,) int32 ACKs since the last boundary
+    marked: jax.Array  # (N,) int32 ECN-marked ACKs since the last boundary
+
+
+class SeqBalanceLB(LoadBalancer):
+    name = "seqbalance"
+
+    def __init__(
+        self,
+        evs_size: int = 65536,
+        msg_pkts: int = 16,
+        ecn_frac_threshold: float = 0.25,
+    ):
+        super().__init__(evs_size)
+        self.msg_pkts = msg_pkts
+        self.ecn_frac_threshold = ecn_frac_threshold
+
+    def init_state(self, n_conns, key):
+        z = jnp.zeros((n_conns,), jnp.int32)
+        return SeqBalanceState(
+            ev=_rand_evs(key, n_conns, self.evs_size), sent=z, acks=z, marked=z
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        n = state.ev.shape[0]
+        boundary = mask & (state.sent >= self.msg_pkts)
+        congested = state.marked.astype(jnp.float32) > (
+            state.acks.astype(jnp.float32) * self.ecn_frac_threshold
+        )
+        repath = boundary & congested
+        ev = jnp.where(repath, _rand_evs(key, n, self.evs_size), state.ev)
+        sent = jnp.where(
+            mask, jnp.where(boundary, 1, state.sent + 1), state.sent
+        )
+        return ev, SeqBalanceState(
+            ev=ev,
+            sent=sent,
+            acks=jnp.where(boundary, 0, state.acks),
+            marked=jnp.where(boundary, 0, state.marked),
+        )
+
+    def on_ack(self, state, mask, ev, ecn, now, key):
+        return state.replace(
+            acks=jnp.where(mask, state.acks + 1, state.acks),
+            marked=jnp.where(mask & ecn, state.marked + 1, state.marked),
+        )
+
+    def on_timeout(self, state, mask, now, key):
+        new_ev = _rand_evs(key, state.ev.shape[0], self.evs_size)
+        return state.replace(
+            ev=jnp.where(mask, new_ev, state.ev),
+            acks=jnp.where(mask, 0, state.acks),
+            marked=jnp.where(mask, 0, state.marked),
+        )
+
+
+# ---------------------------------------------------------------------------
+# CONGA-style flowlet table: a small per-connection table of candidate EVs
+# with a cached congestion score fed by ECN marks (integer EWMA).  A flowlet
+# gap switches to the least-congested cached candidate instead of a uniform
+# redraw; an RTO re-hashes the active candidate (threaded engine key) and
+# clears its score so the fresh path starts unprejudiced.
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class FlowletTableState:
+    cand: jax.Array  # (N, T) int32 candidate EVs
+    score: jax.Array  # (N, T) int32 cached congestion score
+    cur: jax.Array  # (N,) int32 active candidate index
+    last_send: jax.Array  # (N,) int32 tick of previous send
+
+
+class FlowletTableLB(LoadBalancer):
+    name = "flowlet_table"
+    SCORE_MARK = 64  # score bump per ECN-marked ACK (decay is 1/4 per ACK)
+
+    def __init__(
+        self, evs_size: int = 65536, table: int = 4, gap_ticks: int = 32
+    ):
+        super().__init__(evs_size)
+        self.table = table
+        self.gap_ticks = gap_ticks
+
+    def init_state(self, n_conns, key):
+        return FlowletTableState(
+            cand=jax.random.randint(
+                key, (n_conns, self.table), 0, self.evs_size, jnp.int32
+            ),
+            score=jnp.zeros((n_conns, self.table), jnp.int32),
+            cur=jnp.zeros((n_conns,), jnp.int32),
+            last_send=jnp.full((n_conns,), -(10**6), jnp.int32),
+        )
+
+    def choose_ev(self, state, mask, key, now):
+        new_flowlet = mask & ((now - state.last_send) > self.gap_ticks)
+        best = jnp.argmin(state.score, axis=1).astype(jnp.int32)
+        cur = jnp.where(new_flowlet, best, state.cur)
+        ev = jnp.take_along_axis(state.cand, cur[:, None], axis=1)[:, 0]
+        return ev, state.replace(
+            cur=cur, last_send=jnp.where(mask, now, state.last_send)
+        )
+
+    def on_ack(self, state, mask, ev, ecn, now, key):
+        hit = mask[:, None] & (state.cand == ev[:, None])
+        decayed = (
+            state.score
+            - state.score // 4
+            + jnp.where(ecn, self.SCORE_MARK, 0)[:, None]
+        )
+        return state.replace(score=jnp.where(hit, decayed, state.score))
+
+    def on_timeout(self, state, mask, now, key):
+        onehot = jax.nn.one_hot(state.cur, self.table, dtype=jnp.bool_)
+        sel = mask[:, None] & onehot
+        new_cand = jax.random.randint(
+            key, state.cand.shape, 0, self.evs_size, jnp.int32
+        )
+        return state.replace(
+            cand=jnp.where(sel, new_cand, state.cand),
+            score=jnp.where(sel, 0, state.score),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -458,7 +656,18 @@ class SwitchLB(LoadBalancer):
             "adaptive LBs change the routing function, a static property); "
             "bucket them separately"
         )
-        super().__init__(max(v.evs_size for v in variants))
+        sizes = {int(v.evs_size) for v in variants}
+        if len(sizes) != 1:
+            raise ValueError(
+                "SwitchLB variants must share one evs_size (every branch "
+                "samples the same entropy space; a smaller variant would "
+                "silently draw out-of-range EVs): got "
+                + ", ".join(f"{v.name}={v.evs_size}" for v in variants)
+                + ".  Pass evs_size explicitly to each variant — note "
+                "BitmapLB defaults to 256 while the rest of the zoo "
+                "defaults to 65536."
+            )
+        super().__init__(sizes.pop())
         self.variants = variants
         self.switch_adaptive = flags.pop()
         self.name = "switch(" + "+".join(v.name for v in variants) + ")"
@@ -497,24 +706,24 @@ class SwitchLB(LoadBalancer):
         )
         return evs, (bidx, states)
 
-    def on_ack(self, state, mask, ev, ecn, now):
+    def on_ack(self, state, mask, ev, ecn, now, key):
         bidx, states = state
         _, states = self._dispatch(
             bidx, states,
             lambda i, s: (
                 jnp.zeros((), jnp.int32),
-                self.variants[i].on_ack(s, mask, ev, ecn, now),
+                self.variants[i].on_ack(s, mask, ev, ecn, now, key),
             ),
         )
         return (bidx, states)
 
-    def on_timeout(self, state, mask, now):
+    def on_timeout(self, state, mask, now, key):
         bidx, states = state
         _, states = self._dispatch(
             bidx, states,
             lambda i, s: (
                 jnp.zeros((), jnp.int32),
-                self.variants[i].on_timeout(s, mask, now),
+                self.variants[i].on_timeout(s, mask, now, key),
             ),
         )
         return (bidx, states)
@@ -542,6 +751,9 @@ REGISTRY = {
         MprdmaLB,
         BitmapLB,
         AdaptiveRoceLB,
+        PrimeLB,
+        SeqBalanceLB,
+        FlowletTableLB,
     ]
 }
 

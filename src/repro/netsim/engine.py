@@ -858,13 +858,20 @@ class Simulator:
 
         # LB + CC updates: up to `feedback_rounds` exact rounds of one ACK
         # event per connection — round r's per-conn event is table row r.
+        # Each round gets its own key off the tick stream (fold 4) so
+        # repath draws differ per seed / row / tick / round; key-ignoring
+        # LBs are bit-identical (fold_in consumes no randomness).
+        k_ack = jax.random.fold_in(key, 4)
         for r in range(R_fb):
             conn_mask = tbl[1, r, :NC] > 0
             conn_ev = tbl[2, r, :NC]
             conn_ecn = tbl[3, r, :NC] > 0
             conn_rtt = tbl[4, r, :NC]
             c_cwnd, c_alpha = self._cc_on_ack(c_cwnd, c_alpha, conn_mask, conn_ecn, conn_rtt)
-            lb_state = self.lb.on_ack(lb_state, conn_mask, conn_ev, conn_ecn, now)
+            lb_state = self.lb.on_ack(
+                lb_state, conn_mask, conn_ev, conn_ecn, now,
+                jax.random.fold_in(k_ack, r),
+            )
         unprocessed = jnp.sum(
             (e_is_ack & (e_rank >= R_fb)).astype(jnp.int32)
         )
@@ -911,7 +918,9 @@ class Simulator:
         c_cwnd = jnp.clip(
             c_cwnd - rto_per_conn.astype(jnp.float32), 1.0, float(cfg.max_cwnd_pkts)
         )
-        lb_state = self.lb.on_timeout(lb_state, rto_per_conn > 0, now)
+        lb_state = self.lb.on_timeout(
+            lb_state, rto_per_conn > 0, now, jax.random.fold_in(key, 5)
+        )
         timeouts_d = jnp.sum(rto.astype(jnp.int32))
         # orphan in-network packets; free LOST_WAIT ones — write the two
         # dense packet columns (state / orphan) back once

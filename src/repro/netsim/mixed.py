@@ -71,16 +71,22 @@ class MixedLB(LoadBalancer):
         ev_b, sb = self.lb_b.choose_ev(sb, mask & bm, kb, now)
         return jnp.where(bm, ev_b, ev_a), (sa, sb, bm)
 
-    def on_ack(self, state, mask, ev, ecn, now):
+    def on_ack(self, state, mask, ev, ecn, now, key):
+        import jax
+
         sa, sb, bm = state
-        sa = self.lb_a.on_ack(sa, mask & ~bm, ev, ecn, now)
-        sb = self.lb_b.on_ack(sb, mask & bm, ev, ecn, now)
+        ka, kb = jax.random.split(key)
+        sa = self.lb_a.on_ack(sa, mask & ~bm, ev, ecn, now, ka)
+        sb = self.lb_b.on_ack(sb, mask & bm, ev, ecn, now, kb)
         return (sa, sb, bm)
 
-    def on_timeout(self, state, mask, now):
+    def on_timeout(self, state, mask, now, key):
+        import jax
+
         sa, sb, bm = state
-        sa = self.lb_a.on_timeout(sa, mask & ~bm, now)
-        sb = self.lb_b.on_timeout(sb, mask & bm, now)
+        ka, kb = jax.random.split(key)
+        sa = self.lb_a.on_timeout(sa, mask & ~bm, now, ka)
+        sb = self.lb_b.on_timeout(sb, mask & bm, now, kb)
         return (sa, sb, bm)
 
 

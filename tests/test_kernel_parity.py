@@ -140,10 +140,10 @@ def test_repslb_backends_bit_identical():
         tm = jax.random.bernoulli(jax.random.fold_in(k, 4), 0.3, (N,))
         sm = jax.random.bernoulli(jax.random.fold_in(k, 5), 0.7, (N,))
         now = jnp.int32(t)
-        sj = lbj.on_ack(sj, am, ev, ecn, now)
-        sp = lbp.on_ack(sp, am, ev, ecn, now)
-        sj = lbj.on_timeout(sj, tm, now)
-        sp = lbp.on_timeout(sp, tm, now)
+        sj = lbj.on_ack(sj, am, ev, ecn, now, jax.random.fold_in(k, 7))
+        sp = lbp.on_ack(sp, am, ev, ecn, now, jax.random.fold_in(k, 7))
+        sj = lbj.on_timeout(sj, tm, now, jax.random.fold_in(k, 8))
+        sp = lbp.on_timeout(sp, tm, now, jax.random.fold_in(k, 8))
         ej, sj = lbj.choose_ev(sj, sm, jax.random.fold_in(k, 6), now)
         ep, sp = lbp.choose_ev(sp, sm, jax.random.fold_in(k, 6), now)
         m = np.asarray(sm)

@@ -1,0 +1,213 @@
+"""PR 8 regressions: the threaded LB RNG (hardcoded PRNGKey(0/1/2) bugfix),
+PLB's reset-then-count epoch rollover, SwitchLB evs_size validation, and
+unit behavior of the arena contenders (prime / seqbalance / flowlet_table).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.core import make_lb
+from repro.core.load_balancers import MptcpLB, PlbLB, SwitchLB
+from repro.netsim import FleetRunner, workloads
+
+CFG = FATTREE_32_CI
+
+
+# ---------------------------------------------------------------------------
+# Headline bugfix: repath draws must come from the threaded engine key.
+# ---------------------------------------------------------------------------
+
+
+def test_repath_draws_are_keyed_not_hardcoded():
+    """plb/mptcp re-path EVs depend on the threaded per-run key.
+
+    The old code drew from ``fold_in(PRNGKey(0|1|2), now)`` — a function of
+    ``now`` alone — so every seed, sweep row, and connection drew the same
+    "random" new EV at the same tick (demonstrated below), and a fleet's
+    vmap-over-seeds averaged N copies of one correlated trajectory.
+    """
+    now = jnp.int32(37)
+    # The old scheme, reproduced: byte-identical across any two "runs"
+    # because nothing run-specific ever entered the key.
+    old_run_a = jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), now), (8,), 0, 65536
+    )
+    old_run_b = jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), now), (8,), 0, 65536
+    )
+    np.testing.assert_array_equal(np.asarray(old_run_a), np.asarray(old_run_b))
+
+    # The fix: the engine threads fold_in(tick_key, 5) into on_timeout, and
+    # tick_key = fold_in(PRNGKey(seed), tick) — two seeds, two draws.
+    def engine_key(seed, tick, slot):
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), tick), slot
+        )
+
+    mask = jnp.ones((8,), bool)
+    plb = PlbLB(evs_size=65536)
+    st = plb.init_state(8, jax.random.PRNGKey(0))
+    ev_a = plb.on_timeout(st, mask, now, engine_key(0, 37, 5)).ev
+    ev_b = plb.on_timeout(st, mask, now, engine_key(1, 37, 5)).ev
+    ev_a2 = plb.on_timeout(st, mask, now, engine_key(0, 37, 5)).ev
+    assert not np.array_equal(np.asarray(ev_a), np.asarray(ev_b))
+    np.testing.assert_array_equal(np.asarray(ev_a), np.asarray(ev_a2))
+
+    mptcp = MptcpLB(evs_size=65536)
+    stm = mptcp.init_state(8, jax.random.PRNGKey(0))
+    sub_a = mptcp.on_timeout(stm, mask, now, engine_key(0, 37, 5)).sub_evs
+    sub_b = mptcp.on_timeout(stm, mask, now, engine_key(1, 37, 5)).sub_evs
+    assert not np.array_equal(np.asarray(sub_a), np.asarray(sub_b))
+
+
+@pytest.mark.parametrize("lbn", ["plb", "mptcp"])
+def test_fleet_seeds_decorrelated_under_congestion(lbn):
+    """FleetRunner per-seed rows must not be bit-identical for plb/mptcp
+    once congestion makes them re-path (the repath draw is now per-seed)."""
+    cfg = CFG.replace(queue_capacity=16)
+    wl = workloads.incast(32, 8, 48)
+    fleet = FleetRunner(
+        cfg, wl, make_lb(lbn, evs_size=CFG.evs_size), seeds=(0, 1)
+    )
+    states, _ = fleet.run(1200)
+    jax.block_until_ready(states.c_done)
+    sums = fleet.summaries(states)
+    # the congested incast actually exercised the repath paths
+    assert all(s.ecn_marks > 0 for s in sums), sums
+    if lbn == "mptcp":
+        assert all(s.timeouts > 0 for s in sums), sums
+    evs = (
+        states.lb_state.ev if lbn == "plb" else states.lb_state.sub_evs
+    )
+    assert not np.array_equal(np.asarray(evs[0]), np.asarray(evs[1]))
+    assert not np.array_equal(
+        np.asarray(states.c_done_tick[0]), np.asarray(states.c_done_tick[1])
+    )
+
+
+# ---------------------------------------------------------------------------
+# PLB epoch rollover: reset-then-count across an idle gap.
+# ---------------------------------------------------------------------------
+
+
+def test_plb_idle_gap_rollover_resets_then_counts():
+    """An idle gap spanning the epoch boundary: the completed epoch is
+    judged on its *own* counters, then the first ACK of the next burst
+    counts into a fresh epoch.  The pre-fix order (count-then-judge) mixed
+    that clean ACK into the stale epoch, flipping the verdict here."""
+    plb = PlbLB(
+        evs_size=65536, epoch_ticks=64, ecn_frac_threshold=0.5,
+        repath_after_epochs=1,
+    )
+    st = plb.init_state(1, jax.random.PRNGKey(0))
+    mask = jnp.ones((1,), bool)
+    ev = jnp.zeros((1,), jnp.int32)
+    k = jax.random.PRNGKey(9)
+    marked = jnp.ones((1,), bool)
+    clean = jnp.zeros((1,), bool)
+    # burst 1 inside epoch 0: two ACKs, both ECN-marked (2/2 > 50%)
+    for t in (10, 11):
+        st = plb.on_ack(
+            st, mask, ev, marked, jnp.int32(t), jax.random.fold_in(k, t)
+        )
+    assert int(st.acks[0]) == 2 and int(st.marked[0]) == 2
+    ev_before = int(st.ev[0])
+    # idle past epoch_end (64); the next burst's first ACK is clean.
+    # Old order: acks=3/marked=2 -> 2 > ceil(1.5)=2 is False -> no repath.
+    # Reset-then-count: stale epoch judged at 2/2 -> bad -> repath fires,
+    # and the clean ACK opens the fresh epoch.
+    st = plb.on_ack(
+        st, mask, ev, clean, jnp.int32(200), jax.random.fold_in(k, 200)
+    )
+    assert int(st.ev[0]) != ev_before, "stale congested epoch must repath"
+    assert int(st.acks[0]) == 1 and int(st.marked[0]) == 0
+    assert int(st.epoch_end[0]) == 200 + 64
+    assert int(st.bad_epochs[0]) == 0  # consumed by the repath
+
+
+# ---------------------------------------------------------------------------
+# SwitchLB construction: homogeneous evs_size.
+# ---------------------------------------------------------------------------
+
+
+def test_switchlb_rejects_mismatched_evs_size():
+    """BitmapLB's 256 default silently sampled out-of-range next to 65536
+    variants under the old max() rule — now an actionable ValueError."""
+    with pytest.raises(ValueError, match="evs_size"):
+        SwitchLB([make_lb("ops"), make_lb("bitmap")])
+    # homogeneous sizes construct fine (and keep that size)
+    sw = SwitchLB(
+        [make_lb("ops", evs_size=256), make_lb("bitmap", evs_size=256)]
+    )
+    assert sw.evs_size == 256
+
+
+# ---------------------------------------------------------------------------
+# Arena contenders: unit behavior.
+# ---------------------------------------------------------------------------
+
+
+def test_prime_rotates_within_window_and_rehashes_on_rto():
+    lb = make_lb("prime", evs_size=4096, sub_bits=3)
+    st = lb.init_state(4, jax.random.PRNGKey(1))
+    base0 = np.asarray(st.base).copy()
+    mask = jnp.ones((4,), bool)
+    evs = []
+    for t in range(8):
+        ev, st = lb.choose_ev(st, mask, jax.random.PRNGKey(t), jnp.int32(t))
+        evs.append(np.asarray(ev))
+    evs = np.stack(evs)
+    # the flow part never moves without a timeout...
+    np.testing.assert_array_equal(np.asarray(st.base), base0)
+    # ...and packets spray inside the 2**sub_bits window anchored at it
+    off = (evs - base0[None, :]) % 4096
+    assert (off < 8).all(), off
+    assert len(np.unique(evs[:, 0])) > 2, "per-packet sub-entropy rotation"
+    # an RTO re-hashes the flow part via the threaded key
+    st2 = lb.on_timeout(st, mask, jnp.int32(99), jax.random.PRNGKey(7))
+    assert not np.array_equal(np.asarray(st2.base), base0)
+
+
+def test_seqbalance_repaths_only_at_message_boundaries():
+    lb = make_lb(
+        "seqbalance", evs_size=65536, msg_pkts=4, ecn_frac_threshold=0.25
+    )
+    st = lb.init_state(2, jax.random.PRNGKey(0))
+    mask = jnp.ones((2,), bool)
+    ecn = jnp.ones((2,), bool)
+    ev0 = np.asarray(st.ev).copy()
+    for t in range(4):
+        ev, st = lb.choose_ev(
+            st, mask, jax.random.fold_in(jax.random.PRNGKey(1), t),
+            jnp.int32(t),
+        )
+        # congested or not, no intra-message re-path (no reordering)
+        np.testing.assert_array_equal(np.asarray(ev), ev0)
+        st = lb.on_ack(
+            st, mask, ev, ecn, jnp.int32(t),
+            jax.random.fold_in(jax.random.PRNGKey(2), t),
+        )
+    # the 5th send crosses the boundary with a fully-marked window
+    ev, st = lb.choose_ev(st, mask, jax.random.PRNGKey(3), jnp.int32(4))
+    assert not np.array_equal(np.asarray(ev), ev0)
+
+
+def test_flowlet_table_prefers_uncongested_candidate():
+    lb = make_lb("flowlet_table", evs_size=65536, table=4, gap_ticks=8)
+    st = lb.init_state(1, jax.random.PRNGKey(0))
+    mask = jnp.ones((1,), bool)
+    ecn = jnp.ones((1,), bool)
+    ev, st = lb.choose_ev(st, mask, jax.random.PRNGKey(1), jnp.int32(0))
+    for t in range(1, 4):  # ECN-mark the active candidate's cached score
+        st = lb.on_ack(st, mask, ev, ecn, jnp.int32(t), jax.random.PRNGKey(t))
+    # after a flowlet gap the cached feedback steers off the marked EV
+    ev2, st = lb.choose_ev(st, mask, jax.random.PRNGKey(9), jnp.int32(100))
+    assert int(ev2[0]) != int(ev[0])
+    # an RTO re-hashes the active candidate (threaded key), score cleared
+    cand_before = np.asarray(st.cand).copy()
+    st = lb.on_timeout(st, mask, jnp.int32(200), jax.random.PRNGKey(5))
+    cur = int(st.cur[0])
+    assert int(np.asarray(st.cand)[0, cur]) != int(cand_before[0, cur])
+    assert int(st.score[0, cur]) == 0

@@ -104,6 +104,52 @@ def test_sweep_parity_failures_and_seeds():
         )
 
 
+def test_sweep_parity_new_contenders():
+    """PR 8 arena contenders (prime / seqbalance / flowlet_table) behind
+    the lax.switch dispatch: sweep rows equal plain-LB serial runs
+    bit-for-bit — across ≥2 shape buckets, one horizon-merged (frozen)
+    row, and a permanent failure schedule — including the threaded
+    on_ack/on_timeout engine keys through SwitchLB._dispatch."""
+    topo = Topology.build(CFG)
+    fs = failures.link_down(
+        list(topo.t0_up_queues(0)[:2]), 100, failures.FOREVER
+    )
+    wl_p = workloads.permutation(32, 48, seed=1)
+    wl_i = workloads.incast(32, 5, 48)
+    cases = [
+        _case("n/prime", wl_p, "prime", 600),
+        _case("n/seqbalance", wl_p, "seqbalance", 600),
+        _case("n/flowlet_table", wl_p, "flowlet_table", 600),
+        # short horizon, same shape family: freezes inside the 600 bucket
+        _case("n/short/prime", wl_p, "prime", 300),
+        # failure schedule exercises the keyed on_timeout re-hash paths
+        _case("n/fail/prime", wl_p, "prime", 700, fs=fs),
+        _case("n/fail/seqbalance", wl_p, "seqbalance", 700, fs=fs),
+        _case("n/fail/flowlet_table", wl_p, "flowlet_table", 700, fs=fs),
+        # distinct conn-count bucket
+        _case("n/incast/seqbalance", wl_i, "seqbalance", 400),
+    ]
+    eng = SweepEngine(CFG, cases)
+    assert len(eng.buckets) >= 2, eng.plan.describe()
+    assert any(b.program.masked for b in eng.buckets), "no frozen row"
+    res = eng.run(collect="none")
+    for c in cases:
+        _assert_cell_matches_serial(eng, res, c.name, c.ticks, traces=False)
+    # the active branch's LB pytree equals the plain serial variant's —
+    # the switch passed the same threaded keys the variant sees serially
+    for name in ("n/fail/prime", "n/fail/flowlet_table"):
+        ref = eng.serial_sim(name)
+        st, _ = ref.run(700)
+        jax.block_until_ready(st.c_done)
+        bidx, variant_states = res.state_for(name).lb_state
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)
+            ),
+            st.lb_state, variant_states[int(bidx)],
+        )
+
+
 def test_sweep_early_exit_is_fixed_point():
     """Quiescence early exit must leave every engine-state leaf (everything
     but LB-internal clocks) bit-identical to running the full horizon."""
