@@ -46,6 +46,13 @@ assert COLLECT in ("none", "summary", "full"), COLLECT
 # CI gate compares interpret-mode throughput against compiled baselines).
 KERNELS = os.environ.get("BENCH_KERNELS", "auto")
 assert KERNELS in ("auto", "jnp", "pallas"), KERNELS
+# BENCH_TRACE>0 folds the on-device flight recorder (repro.netsim.tracer)
+# into summary-mode figure grids with that ring size (also the `--trace`
+# flag of benchmarks.run).  Tracing is observation-only — every metric is
+# bit-identical on or off — but it adds per-tick recorder work by design,
+# so every row is stamped with its trace context and the CI throughput
+# gates compare trace-off rows only.
+TRACE = max(0, int(os.environ.get("BENCH_TRACE", "0")))
 # BENCH_MEASURED_COSTS=1 feeds the committed BENCH_netsim.json bucket rows
 # (measured_row_tick_us) back into the packer's cost model in place of the
 # footprint estimate (sweep.pack measured_costs).  Off by default for the
@@ -156,8 +163,21 @@ def run_sweep(cfg, cases, packer=None, collect=None, kernels=None):
         cfg, cases, packer=packer, kernels_backend=kernels or KERNELS,
         measured_costs=measured_costs(),
     )
-    res = eng.run(collect=collect, early_exit=collect != "full")
+    res = eng.run(
+        collect=collect, early_exit=collect != "full", trace=trace_spec(collect)
+    )
     return eng, res
+
+
+def trace_spec(collect=None):
+    """The figure grids' flight-recorder spec: a ``TraceSpec`` with the
+    BENCH_TRACE ring size when tracing is on (summary mode only — the
+    recorder rides the telemetry carry), else None."""
+    if TRACE <= 0 or (collect or COLLECT) != "summary":
+        return None
+    from repro.netsim.tracer import TraceSpec
+
+    return TraceSpec(ring=TRACE)
 
 
 def sweep_rows(rows, res, fmt=None, derive=None, collect=None,
@@ -303,7 +323,7 @@ class Rows:
             {
                 "name": name, "us_per_call": us, "derived": derived,
                 "seeds": SEEDS, "full_scale": FULL, "smoke": SMOKE,
-                "collect": COLLECT,
+                "collect": COLLECT, "trace": TRACE,
                 **extra,
             }
         )

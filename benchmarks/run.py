@@ -13,6 +13,9 @@ on-device telemetry sketch channels into the scans
 (repro.netsim.telemetry) and builds figure metrics from the sketches,
 "none" keeps state-built summaries only, "full" streams raw traces as a
 parity reference and forgoes quiescence early exit.
+``--trace N`` (or BENCH_TRACE) folds the on-device flight recorder into
+summary-mode grids with an N-slot ring; rows are stamped with their trace
+context and CI throughput gates only compare trace-off rows.
 """
 import argparse
 import json
@@ -56,7 +59,18 @@ def main(argv=None) -> None:
         help="sweep collection mode for figure grids (default: "
         "BENCH_COLLECT or 'summary')",
     )
+    ap.add_argument(
+        "--trace",
+        type=int,
+        default=int(os.environ.get("BENCH_TRACE", "0")),
+        help="flight-recorder ring size for summary-mode figure grids "
+        "(0 = off, the default; also BENCH_TRACE).  Observation-only: "
+        "metrics are bit-identical either way; rows are stamped with the "
+        "trace context so CI throughput gates skip traced rows.",
+    )
     args = ap.parse_args(argv)
+    if args.trace < 0:
+        ap.error(f"--trace must be >= 0, got {args.trace}")
     if args.collect not in ("none", "summary", "full"):
         # argparse validates `choices` only for flag-provided values, not
         # for the BENCH_COLLECT-derived default
@@ -67,9 +81,11 @@ def main(argv=None) -> None:
     # Programmatic callers may have imported benchmarks.common already — its
     # COLLECT global is read at call time, so patch it too.
     os.environ["BENCH_COLLECT"] = args.collect
+    os.environ["BENCH_TRACE"] = str(args.trace)
     if "benchmarks.common" in sys.modules:
         sys.modules["benchmarks.common"].COLLECT = args.collect
-    from benchmarks.common import COLLECT, FULL, SEEDS, SMOKE, Rows
+        sys.modules["benchmarks.common"].TRACE = args.trace
+    from benchmarks.common import COLLECT, FULL, SEEDS, SMOKE, TRACE, Rows
 
     only = os.environ.get("BENCH_ONLY")
     selected = MODULES
@@ -139,6 +155,7 @@ def main(argv=None) -> None:
             "smoke": _row_consensus("smoke", SMOKE),
             "seeds": _row_consensus("seeds", SEEDS),
             "collect": _row_consensus("collect", COLLECT),
+            "trace": _row_consensus("trace", TRACE),
             "modules": modules,
             # figures that ran as sweep batches (figure_grid emits one
             # aggregate row per figure; CI gates these)

@@ -33,6 +33,7 @@ import os
 
 from benchmarks.common import ci_cfg, msg, sweep_case
 from repro.netsim import SoakConfig, SoakRunner, SweepEngine, failures, workloads
+from repro.netsim.tracer import TraceSpec
 
 LBS = ["ops", "reps"]
 MIN_FAILURE_SLOTS = 16  # headroom for --inject-spine deltas
@@ -103,6 +104,12 @@ def main(argv=None):
     ap.add_argument("--inject-at", type=int, default=None,
                     help="cursor tick for --inject-spine (defaults to one "
                          "chunk in; must be a boundary the run reaches)")
+    ap.add_argument("--trace", type=int, default=0,
+                    help="flight-recorder ring size (0 = off): carry the "
+                         "on-device tracer and stream flight_*.npz parts "
+                         "under <ckpt>/flight.  Observation-only — the "
+                         "emitted record is byte-identical traced or not "
+                         "(the CI trace-smoke job diffs the two).")
     ap.add_argument("--out", default=None, help="write the record JSON here")
     args = ap.parse_args(argv)
 
@@ -110,8 +117,9 @@ def main(argv=None):
     engine = SweepEngine(
         cfg, cases(cfg, args.ticks), min_failure_slots=MIN_FAILURE_SLOTS
     )
+    trace = TraceSpec(ring=args.trace) if args.trace else None
     soak = SoakRunner(
-        engine, SoakConfig(chunk=args.chunk, ckpt_dir=args.ckpt)
+        engine, SoakConfig(chunk=args.chunk, ckpt_dir=args.ckpt, trace=trace)
     )
     if args.resume:
         soak.resume()

@@ -32,6 +32,33 @@ import jax.numpy as jnp
 from repro.core import reps as reps_core
 from repro.utils import pytree_dataclass, static_field
 
+# Trace-event kinds reported by the optional LoadBalancer.trace port (one
+# int32 count per kind, see trace() below).  The netsim tracer maps these to
+# ring-buffer event codes; keep the numbering stable — it is serialized into
+# flight-recorder part files.
+TR_EV_HIT = 0  # REPS: popped the oldest *valid* cached EV
+TR_EV_MISS = 1  # REPS: explored a fresh uniform EV
+TR_EV_RECYCLE = 2  # REPS: freezing-mode reuse of a (possibly invalid) slot
+TR_EV_FREEZE = 3  # REPS: entered freezing mode (failure detected)
+TR_REPATH_ACK_ECN = 4  # re-path decided from ECN feedback on ACKs
+TR_REPATH_RTO = 5  # re-path decided from a retransmission timeout
+TR_REPATH_FLOWLET = 6  # re-path decided from a flowlet gap expiry
+TR_REPATH_EPOCH = 7  # re-path decided at an epoch / message boundary
+N_TRACE_KINDS = 8
+
+
+def _trace_counts(*pairs):
+    """Build a (N_TRACE_KINDS,) int32 count vector from (kind, mask) pairs.
+
+    Every mask MUST already be gated on the site's event mask so the result
+    is all-zero on quiescent ticks (the tracer carry must be a bitwise no-op
+    when nothing happens, same contract as the telemetry channels).
+    """
+    out = jnp.zeros((N_TRACE_KINDS,), jnp.int32)
+    for kind, m in pairs:
+        out = out.at[kind].set(jnp.sum(m.astype(jnp.int32)))
+    return out
+
 
 def _rand_evs(key, n, evs_size):
     return jax.random.randint(key, (n,), 0, evs_size, jnp.int32)
@@ -66,6 +93,22 @@ class LoadBalancer:
 
     def on_timeout(self, state, mask, now, key):
         return state
+
+    def trace(self, site, prev, new, mask):
+        """Optional observation-only trace port (flight recorder).
+
+        ``site`` is a *static* string naming the engine call site just
+        executed ("choose" | "ack" | "timeout"); ``prev``/``new`` are the LB
+        state before/after that call and ``mask`` is the event mask the call
+        received.  Returns (N_TRACE_KINDS,) int32 per-kind decision counts
+        summed over connections.  Contract: pure state-diff observation (no
+        RNG, no state change) and every count gated on ``mask`` so the
+        result is all-zero whenever ``mask`` is — LBs whose state drifts on
+        idle ticks (e.g. PLB epoch rollover) must not emit events the
+        quiescence early-exit would skip.
+        """
+        del site, prev, new, mask
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +256,23 @@ class RepsLB(LoadBalancer):
             return state
         return reps_core.on_failure_detection(self.cfg, state, mask, now)
 
+    def trace(self, site, prev, new, mask):
+        # Pure REPSState diffs, so both backends (jnp / pallas, bit-equal
+        # states) report identical events.  choose_ev mutates num_valid only
+        # via pop-oldest-valid (hit) and head only via freezing-mode reuse
+        # (recycle); everything else under the mask explored fresh entropy.
+        if site == "choose":
+            hit = mask & (new.num_valid < prev.num_valid)
+            recycle = mask & (new.head != prev.head)
+            miss = mask & ~hit & ~recycle
+            return _trace_counts(
+                (TR_EV_HIT, hit), (TR_EV_RECYCLE, recycle), (TR_EV_MISS, miss)
+            )
+        if site == "timeout":
+            freeze = mask & new.is_freezing & ~prev.is_freezing
+            return _trace_counts((TR_EV_FREEZE, freeze))
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
+
 
 # ---------------------------------------------------------------------------
 # PLB / FlowBender-style: per-connection EV, re-path when an epoch sees a
@@ -296,6 +356,17 @@ class PlbLB(LoadBalancer):
         )
         return state.replace(ev=jnp.where(mask, new_ev, state.ev))
 
+    def trace(self, site, prev, new, mask):
+        # A PLB repath can technically land on a feedback round where the
+        # repathing connection's own ACK mask is false (bad_epochs carried
+        # from earlier rounds); the mask gate drops those so idle-tick epoch
+        # rollovers never emit events — tracing is best-effort observation.
+        if site == "ack":
+            return _trace_counts((TR_REPATH_ACK_ECN, mask & (new.ev != prev.ev)))
+        if site == "timeout":
+            return _trace_counts((TR_REPATH_RTO, mask))
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
+
 
 # ---------------------------------------------------------------------------
 # Flowlet switching: new random EV whenever the inter-send gap exceeds the
@@ -327,6 +398,11 @@ class FlowletLB(LoadBalancer):
         return ev, FlowletState(
             ev=ev, last_send=jnp.where(mask, now, state.last_send)
         )
+
+    def trace(self, site, prev, new, mask):
+        if site == "choose":
+            return _trace_counts((TR_REPATH_FLOWLET, mask & (new.ev != prev.ev)))
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -370,6 +446,11 @@ class MptcpLB(LoadBalancer):
         )
         sub_evs = jnp.where(mask[:, None] & onehot, new_evs, state.sub_evs)
         return state.replace(sub_evs=sub_evs)
+
+    def trace(self, site, prev, new, mask):
+        if site == "timeout":
+            return _trace_counts((TR_REPATH_RTO, mask))
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -498,6 +579,13 @@ class PrimeLB(LoadBalancer):
         new_base = _rand_evs(key, state.base.shape[0], self.evs_size)
         return state.replace(base=jnp.where(mask, new_base, state.base))
 
+    def trace(self, site, prev, new, mask):
+        if site == "ack":  # ECN-skip advances the sub-entropy rotation
+            return _trace_counts((TR_REPATH_ACK_ECN, mask & (new.ctr != prev.ctr)))
+        if site == "timeout":  # flow-part re-hash moves the whole window
+            return _trace_counts((TR_REPATH_RTO, mask))
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
+
 
 # ---------------------------------------------------------------------------
 # SeqBalance-like: reorder-free congestion-aware re-pathing (PAPERS.md).
@@ -566,6 +654,13 @@ class SeqBalanceLB(LoadBalancer):
             marked=jnp.where(mask, 0, state.marked),
         )
 
+    def trace(self, site, prev, new, mask):
+        if site == "choose":  # congestion-triggered message-boundary repath
+            return _trace_counts((TR_REPATH_EPOCH, mask & (new.ev != prev.ev)))
+        if site == "timeout":
+            return _trace_counts((TR_REPATH_RTO, mask))
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
+
 
 # ---------------------------------------------------------------------------
 # CONGA-style flowlet table: a small per-connection table of candidate EVs
@@ -631,6 +726,13 @@ class FlowletTableLB(LoadBalancer):
             cand=jnp.where(sel, new_cand, state.cand),
             score=jnp.where(sel, 0, state.score),
         )
+
+    def trace(self, site, prev, new, mask):
+        if site == "choose":  # flowlet gap switched to another candidate
+            return _trace_counts((TR_REPATH_FLOWLET, mask & (new.cur != prev.cur)))
+        if site == "timeout":  # active candidate re-hashed + score cleared
+            return _trace_counts((TR_REPATH_RTO, mask))
+        return jnp.zeros((N_TRACE_KINDS,), jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -727,6 +829,23 @@ class SwitchLB(LoadBalancer):
             ),
         )
         return (bidx, states)
+
+    def trace(self, site, prev, new, mask):
+        # Only the active branch mutated its state slot, so only its trace
+        # port sees a diff — the switch picks exactly that variant's counts.
+        bidx = new[0]
+
+        def mk(i):
+            def br(_):
+                return self.variants[i].trace(site, prev[1][i], new[1][i], mask)
+
+            return br
+
+        return jax.lax.switch(
+            bidx,
+            [mk(i) for i in range(len(self.variants))],
+            jnp.zeros((), jnp.int32),
+        )
 
 
 # ---------------------------------------------------------------------------

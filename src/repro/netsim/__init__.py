@@ -1,4 +1,4 @@
-from repro.netsim import failures, metrics, telemetry, workloads
+from repro.netsim import failures, metrics, telemetry, tracer, workloads
 from repro.netsim.chaos import (
     ChaosCampaign, ChaosFault, ChaosInvariants, ChaosScenario, Violation,
     known_bad_scenario,
@@ -21,9 +21,10 @@ from repro.netsim.telemetry import (
     sketch_percentile,
 )
 from repro.netsim.topology import Topology, ecmp_hash, mix32
+from repro.netsim.tracer import TracerProgram, TraceSpec
 
 __all__ = [
-    "failures", "metrics", "telemetry", "workloads",
+    "failures", "metrics", "telemetry", "tracer", "workloads",
     "ChaosCampaign", "ChaosFault", "ChaosInvariants", "ChaosScenario",
     "Violation", "known_bad_scenario",
     "TICK_NS", "SimConfig", "ns_to_ticks", "us_to_ticks",
@@ -39,4 +40,5 @@ __all__ = [
     "TelemetryProgram", "TelemetrySpec", "WindowedSeries",
     "sketch_bin_index", "sketch_percentile",
     "Topology", "ecmp_hash", "mix32",
+    "TracerProgram", "TraceSpec",
 ]

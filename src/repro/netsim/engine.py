@@ -498,6 +498,22 @@ class Probe(NamedTuple):
     fct: jax.Array  # (NC,) int32 — done tick - start where done_now, else 0
 
 
+class TickEvents(NamedTuple):
+    """Per-tick decision-event counts for the flight recorder
+    (repro.netsim.tracer).
+
+    Observation-only companions to ``Probe``: derived from state diffs
+    around the LB call sites (the optional ``LoadBalancer.trace`` port) and
+    the scenario's failure windows, never fed back into the simulation.
+    Same quiescence contract as ``Probe`` — all-zero on a quiescent tick —
+    so the tracer carry stays compatible with early exit and per-row
+    horizon freezing.
+    """
+
+    lb: jax.Array  # (N_TRACE_KINDS,) int32 LB decision counts this tick
+    fail_start: jax.Array  # () int32 — queues whose failure window opens now
+
+
 class Simulator:
     """Builds and runs one simulation scenario.
 
@@ -770,7 +786,8 @@ class Simulator:
         tick: jax.Array,
         base_key: jax.Array,
         scn: ScenarioArrays,
-    ) -> tuple[SimState, TickTrace]:
+        emit_events: bool = False,
+    ) -> tuple:
         """One tick, pure in (state, tick, key, scenario arrays).
 
         Static structure (cfg, topology, shapes, LB object) still lives on
@@ -778,6 +795,14 @@ class Simulator:
         shapes* arrives via ``scn`` — which is what the sweep engine vmaps
         over to batch heterogeneous (workload, lb, failures) cells into one
         compiled scan (repro.netsim.sweep).
+
+        ``emit_events`` is a *static* flag: when False (the default) the
+        compiled computation is byte-for-byte today's — no trace-port calls
+        are staged at all.  When True the return grows a third element, a
+        ``TickEvents`` of observation-only decision counts gathered from
+        LB-state diffs around the three LB call sites (``fold_in`` key
+        derivation consumes no randomness and the trace port draws none, so
+        the (state, trace) pair is bit-identical either way).
         """
         cfg, topo = self.cfg, self.topo
         NP, NQ, NH = self.NP, self.NQ, self.NH
@@ -794,6 +819,11 @@ class Simulator:
             c_done_tick, c_rtx_count, c_rtx, c_rcv, c_cwnd, c_alpha,
             h_rr, lb_state, fl, fl_head, fl_count, s_stats,
         ) = state[1:]
+
+        if emit_events:
+            from repro.core.load_balancers import N_TRACE_KINDS
+
+            lb_counts = jnp.zeros((N_TRACE_KINDS,), jnp.int32)
 
         # =============== 1. feedback (ACK / NACK) =====================
         p_state = pkt[PS]
@@ -868,10 +898,15 @@ class Simulator:
             conn_ecn = tbl[3, r, :NC] > 0
             conn_rtt = tbl[4, r, :NC]
             c_cwnd, c_alpha = self._cc_on_ack(c_cwnd, c_alpha, conn_mask, conn_ecn, conn_rtt)
+            prev_lb = lb_state
             lb_state = self.lb.on_ack(
                 lb_state, conn_mask, conn_ev, conn_ecn, now,
                 jax.random.fold_in(k_ack, r),
             )
+            if emit_events:
+                lb_counts = lb_counts + self.lb.trace(
+                    "ack", prev_lb, lb_state, conn_mask
+                )
         unprocessed = jnp.sum(
             (e_is_ack & (e_rank >= R_fb)).astype(jnp.int32)
         )
@@ -918,9 +953,14 @@ class Simulator:
         c_cwnd = jnp.clip(
             c_cwnd - rto_per_conn.astype(jnp.float32), 1.0, float(cfg.max_cwnd_pkts)
         )
+        prev_lb = lb_state
         lb_state = self.lb.on_timeout(
             lb_state, rto_per_conn > 0, now, jax.random.fold_in(key, 5)
         )
+        if emit_events:
+            lb_counts = lb_counts + self.lb.trace(
+                "timeout", prev_lb, lb_state, rto_per_conn > 0
+            )
         timeouts_d = jnp.sum(rto.astype(jnp.int32))
         # orphan in-network packets; free LOST_WAIT ones — write the two
         # dense packet columns (state / orphan) back once
@@ -1180,9 +1220,14 @@ class Simulator:
         injected_d = n_alloc
 
         # the load balancer stamps the EV (REPS Algorithm 2)
+        prev_lb = lb_state
         evs, lb_state = self.lb.choose_ev(
             lb_state, send_mask, jax.random.fold_in(key, 2), now
         )
+        if emit_events:
+            lb_counts = lb_counts + self.lb.trace(
+                "choose", prev_lb, lb_state, send_mask
+            )
         pkt_ev = evs[pick_cc]
 
         wslot = jnp.where(sendh, slot_p, NP)
@@ -1250,6 +1295,21 @@ class Simulator:
             watch_qlen=q_len[scn.watch],
             watch_served=serve[scn.watch].astype(jnp.int32),
         )
+        if emit_events:
+            # failure-window activation edge, deduped per queue exactly like
+            # the service stage's scatter-max (pad rows repeat row 0 and
+            # union away, so counts match the declared schedule).
+            f_on = (scn.f_start == now) & (now < scn.f_end)
+            fail_q = (
+                jnp.zeros((NQ + 1,), jnp.bool_)
+                .at[jnp.where(f_on, scn.f_queue, NQ)]
+                .max(True, mode="drop")[:NQ]
+            )
+            events = TickEvents(
+                lb=lb_counts,
+                fail_start=jnp.sum(fail_q.astype(jnp.int32)),
+            )
+            return new_state, trace, events
         return new_state, trace
 
     # ------------------------------------------------------------------
@@ -1293,6 +1353,20 @@ class Simulator:
         ``TickTrace`` is dead code XLA eliminates)."""
         new, _ = self.step_scenario(state, tick, base_key, scn)
         return new, self.probe(state, new, tick, scn)
+
+    def step_events(
+        self,
+        state: SimState,
+        tick: jax.Array,
+        base_key: jax.Array,
+        scn: ScenarioArrays,
+    ) -> tuple[SimState, Probe, "TickEvents"]:
+        """``step_probe`` plus the flight recorder's ``TickEvents`` — the
+        tick body the sweep engine scans when a ``TraceSpec`` is active."""
+        new, _, events = self.step_scenario(
+            state, tick, base_key, scn, emit_events=True
+        )
+        return new, self.probe(state, new, tick, scn), events
 
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=(0, 1))

@@ -89,6 +89,12 @@ class MixedLB(LoadBalancer):
         sb = self.lb_b.on_timeout(sb, mask & bm, now, kb)
         return (sa, sb, bm)
 
+    def trace(self, site, prev, new, mask):
+        bm = new[2]
+        return self.lb_a.trace(site, prev[0], new[0], mask & ~bm) + self.lb_b.trace(
+            site, prev[1], new[1], mask & bm
+        )
+
 
 def _make_mixed(
     fg: str = "ops",

@@ -54,13 +54,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro.netsim.config import TICK_NS
 from repro.netsim.engine import FailureSchedule, TickTrace
 from repro.netsim.failures import truncate_dead
 from repro.netsim.sweep import SweepEngine, SweepResult
 from repro.netsim.telemetry import TelemetrySpec
 from repro.netsim.topology import Topology
+from repro.netsim.tracer import CODE_NAMES, TraceSpec
 
 _TRACE_RE = re.compile(r"^trace_b(\d+)_t(\d{9})_n(\d+)\.npz$")
+_FLIGHT_RE = re.compile(r"^flight_b(\d+)_t(\d{9})_n(\d+)\.npz$")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +82,20 @@ class SoakConfig:
                     complete stream.
     telemetry:      TelemetrySpec for collect="summary" (default spec when
                     None).
+    trace:          optional ``tracer.TraceSpec`` (summary mode only): carry
+                    the on-device flight-recorder ring per row, draining it
+                    incrementally — every chunk boundary decodes each row's
+                    new ring segment and appends it to an atomic
+                    ``flight/flight_b*_t*_n*.npz`` part file before the
+                    checkpoint commits, so kill/resume replays are
+                    seamless and the streamed event log is complete even
+                    though the on-device ring is bounded.  Observation-only:
+                    all carries and derived metrics are bit-identical with
+                    tracing on or off.
+    stream_series:  also write the chunk's *completed* telemetry windows
+                    (``TelemetryProgram.stream_rows``) into each flight
+                    part, so dashboards tail windowed series without
+                    polling the device.
     async_save:     snapshot to host synchronously but write in a
                     background thread (``checkpoint.save_async``); the
                     runner joins — and re-raises worker IO errors — before
@@ -92,6 +109,8 @@ class SoakConfig:
     keep: int = 3
     collect: str = "summary"
     telemetry: Optional[TelemetrySpec] = None
+    trace: Optional[TraceSpec] = None
+    stream_series: bool = True
     async_save: bool = False
     save_retries: int = 2
     save_backoff_s: float = 0.05
@@ -112,13 +131,19 @@ class SoakRunner:
             if self.config.collect == "summary"
             else None
         )
+        self.trace = self.config.trace
+        if self.trace is not None and self.config.collect != "summary":
+            raise ValueError(
+                "SoakConfig.trace requires collect='summary' (the flight "
+                "recorder rides the telemetry carry contract)"
+            )
         self.cursor = 0
         self.injections: list[dict] = []
         self.fingerprint = self._fingerprint()
         # device-side carries, one per bucket, advanced in lock-step with
         # `cursor` (a bucket past its own horizon simply stops advancing)
         self.carries = [
-            engine.bucket_carry(b, self.config.collect, self.spec)
+            engine.bucket_carry(b, self.config.collect, self.spec, self.trace)
             for b in engine.buckets
         ]
         # collect="full": per-bucket [(t0, n, host TickTrace)] in window
@@ -127,6 +152,16 @@ class SoakRunner:
         self.trace_parts: list[list[tuple[int, int, Any]]] = [
             [] for _ in engine.buckets
         ]
+        # tracing: per-bucket per-kept-row flight-ring push cursor through
+        # which events have been flushed to part files (restored from the
+        # ring carry itself on resume — flushes always precede the commit)
+        self._flight_cursors: list[np.ndarray] = [
+            np.zeros((b.n_rows,), np.int64) for b in engine.buckets
+        ]
+        # jitted row-gather readers for inspect()/flight flushes, cached per
+        # (bucket, rows, carry shape) so dashboard polls never recompile
+        self._row_readers: dict = {}
+        self._flight_meta_written = False
         self._pending: Optional[ckpt.SaveHandle] = None
         self._finalized = False
 
@@ -172,6 +207,11 @@ class SoakRunner:
             h.update(np.ascontiguousarray(
                 eng._watch_for(case), np.int64).tobytes())
         h.update(repr((self.config.collect, self.spec)).encode())
+        # appended only when tracing so trace-off digests (and their old
+        # snapshots) stay valid; the ring carry changes snapshot shapes, so
+        # a trace-on snapshot must never restore onto a trace-off runner
+        if self.trace is not None:
+            h.update(repr(self.trace).encode())
         return h.hexdigest()
 
     # ------------------------------------------------------------------
@@ -192,13 +232,15 @@ class SoakRunner:
                     continue  # bucket already at its own horizon
                 carry, traces = self.engine.run_chunk(
                     bucket, self.carries[bi], t0, n,
-                    self.config.collect, self.spec,
+                    self.config.collect, self.spec, self.trace,
                 )
                 self.carries[bi] = carry
                 if self.config.collect == "full":
                     part = jax.device_get(traces)
                     self.trace_parts[bi].append((t0, n, part))
                     self._write_trace_part(bi, t0, n, part)
+                if self.trace is not None:
+                    self._flush_flight_part(bi, t0, n)
             self.cursor = t0 + step
             self._checkpoint()
         return self.cursor
@@ -227,20 +269,38 @@ class SoakRunner:
         )
         self._checkpoint()
 
+    def _gather_rows(self, rows: tuple, arr) -> np.ndarray:
+        """Device-side row gather + transfer of only the requested rows.
+        The jitted gather is cached per row set, so repeated ``inspect``
+        polls (the dashboard's steady state) never recompile and never
+        transfer a bucket's padded rows."""
+        fn = self._row_readers.get(rows)
+        if fn is None:
+            idx = jnp.asarray(rows, jnp.int32)
+            fn = jax.jit(lambda a: jnp.take(a, idx, axis=0))
+            self._row_readers[rows] = fn
+        return np.asarray(jax.device_get(fn(arr)))
+
     def inspect(self) -> dict[str, dict]:
         """Live per-cell view at the current cursor, without disturbing the
-        run: ``{cell name: {cursor, ticks, done, telemetry}}`` where
-        ``telemetry`` (summary mode, seed 0) is the sketch channels
+        run: ``{cell name: {cursor, ticks, done, telemetry[, flight]}}``
+        where ``telemetry`` (summary mode, seed 0) is the sketch channels
         finalized at ``min(cursor, cell ticks)`` — e.g. the RecoveryTracker
-        latency is readable as soon as redelivery happened."""
+        latency is readable as soon as redelivery happened — and
+        ``flight`` (when tracing) is the row's decoded ring tail plus the
+        failure-edge ticks."""
         out: dict[str, dict] = {}
         summary = self.config.collect == "summary"
         for bi, bucket in enumerate(self.engine.buckets):
-            tel = None
+            tel = trc = None
+            rows = tuple(int(c.rows[0]) for c in bucket.cells)
             if summary:
                 tel_prog = self.engine._tel_prog(bucket.program, self.spec)
-                tel = jax.device_get(self.carries[bi][1])
-            for c in bucket.cells:
+                tel = self._gather_rows(rows, self.carries[bi][1])
+            if self.trace is not None:
+                trc_prog = self.engine._trc_prog(bucket.program, self.trace)
+                trc = self._gather_rows(rows, self.carries[bi][2])
+            for ci, c in enumerate(bucket.cells):
                 cell_cursor = min(self.cursor, c.case.ticks)
                 info: dict[str, Any] = {
                     "cursor": cell_cursor,
@@ -249,8 +309,10 @@ class SoakRunner:
                 }
                 if summary:
                     info["telemetry"] = tel_prog.live_row(
-                        tel[c.rows[0]], cell_cursor
+                        tel[ci], cell_cursor
                     )
+                if trc is not None:
+                    info["flight"] = trc_prog.decode_row(trc[ci])
                 out[c.case.name] = info
         return out
 
@@ -270,7 +332,7 @@ class SoakRunner:
                 chunks = [p for _, _, p in self._contiguous_parts(bi)]
             self.engine.finalize_bucket(
                 bucket, self.carries[bi], self.config.collect,
-                bucket.ticks, chunks, self.spec,
+                bucket.ticks, chunks, self.spec, self.trace,
             )
             self.carries[bi] = None  # host copies now own the data
         self._finalized = True
@@ -423,6 +485,8 @@ class SoakRunner:
         self.cursor = int(step)
         if self.config.collect == "full":
             self._load_trace_parts()
+        if self.trace is not None:
+            self._load_flight_state()
         return self
 
     # ------------------------------------------------------------------
@@ -477,6 +541,143 @@ class SoakRunner:
             sorted(parts.get(bi, []))
             for bi in range(len(self.engine.buckets))
         ]
+
+    # ------------------------------------------------------------------
+    # Flight-recorder streaming (trace=TraceSpec(...)).
+    # ------------------------------------------------------------------
+    def _flight_dir(self) -> Optional[str]:
+        if self.config.ckpt_dir is None:
+            return None
+        d = os.path.join(self.config.ckpt_dir, "flight")
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def _write_flight_meta(self) -> None:
+        """One-time sidecar mapping the streamed part files back to cells:
+        event code table, tick duration, and each bucket's kept-row → cell
+        assignment (so consumers never need the engine to decode parts)."""
+        d = self._flight_dir()
+        if d is None or self._flight_meta_written:
+            return
+        import json
+
+        meta = {
+            "tick_ns": TICK_NS,
+            "ring": int(self.trace.ring),
+            "marker_every": int(self.trace.marker_every),
+            "codes": {str(k): v for k, v in CODE_NAMES.items()},
+            "buckets": [
+                {
+                    "cells": [
+                        {
+                            "name": c.case.name,
+                            "ticks": int(c.case.ticks),
+                            "seeds": [int(s) for s in c.case.seeds],
+                            "rows": [int(r) for r in c.rows],
+                        }
+                        for c in b.cells
+                    ],
+                    "n_rows": int(b.n_rows),
+                }
+                for b in self.engine.buckets
+            ],
+        }
+        tmp = os.path.join(d, "flight_meta.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=1)
+        os.replace(tmp, os.path.join(d, "flight_meta.json"))
+        self._flight_meta_written = True
+
+    def _flush_flight_part(self, bi: int, t0: int, n: int) -> None:
+        """Drain the window's new ring events for every kept row of one
+        bucket into an atomic ``flight_b*_t*_n*.npz`` part.  Runs *before*
+        the window's checkpoint commits (same ordering as the full-trace
+        parts), so after a kill the restored ring cursors always equal the
+        flushed-through cursors and re-executed windows rewrite the same
+        deterministic bytes.  Stale parts from a killed timeline are
+        deleted on resume.  ``lost`` counts ring overwrites within the
+        window (> ring pushes between flushes) — reported, never silent."""
+        d = self._flight_dir()
+        if d is None:
+            return
+        self._write_flight_meta()
+        bucket = self.engine.buckets[bi]
+        trc_prog = self.engine._trc_prog(bucket.program, self.trace)
+        rows = tuple(range(bucket.n_rows))
+        flat = self._gather_rows(rows, self.carries[bi][2])
+        since = self._flight_cursors[bi]
+        ev_row, ev_seq, ev_tick, ev_code, ev_val = [], [], [], [], []
+        cursor = np.zeros((bucket.n_rows,), np.int64)
+        lost = np.zeros((bucket.n_rows,), np.int64)
+        first_drop = np.zeros((bucket.n_rows,), np.int64)
+        first_red = np.zeros((bucket.n_rows,), np.int64)
+        for r in range(bucket.n_rows):
+            ev = trc_prog.decode_row(flat[r], since=int(since[r]))
+            cursor[r], lost[r] = ev["cursor"], ev["lost"]
+            first_drop[r] = ev["first_drop_tick"]
+            first_red[r] = ev["first_redeliver_tick"]
+            ev_row.append(np.full(ev["seq"].shape, r, np.int32))
+            ev_seq.append(ev["seq"])
+            ev_tick.append(ev["tick"])
+            ev_code.append(ev["code"])
+            ev_val.append(ev["value"])
+        part = {
+            "row": np.concatenate(ev_row) if ev_row else np.zeros(0, np.int32),
+            "seq": np.concatenate(ev_seq),
+            "tick": np.concatenate(ev_tick),
+            "code": np.concatenate(ev_code),
+            "value": np.concatenate(ev_val),
+            "since": since.copy(),
+            "cursor": cursor,
+            "lost": lost,
+            "first_drop_tick": first_drop,
+            "first_redeliver_tick": first_red,
+        }
+        if self.config.stream_series and self.spec is not None:
+            tel_prog = self.engine._tel_prog(bucket.program, self.spec)
+            tel = self._gather_rows(rows, self.carries[bi][1])
+            per_row = [
+                tel_prog.stream_rows(tel[r], t0, t0 + n)
+                for r in range(bucket.n_rows)
+            ]
+            for key, s in per_row[0].items():
+                part[f"series_{key}_lo"] = np.asarray(s["lo"], np.int64)
+                part[f"series_{key}_stride"] = np.asarray(
+                    s["stride"], np.int64
+                )
+                for f in ("util", "qlen_sum", "stats"):
+                    part[f"series_{key}_{f}"] = np.stack(
+                        [pr[key][f] for pr in per_row]
+                    )
+        fname = f"flight_b{bi}_t{t0:09d}_n{n}.npz"
+        tmp = os.path.join(d, fname + ".tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **part)
+        os.replace(tmp, os.path.join(d, fname))
+        self._flight_cursors[bi] = cursor
+
+    def _load_flight_state(self) -> None:
+        """Resume-side cleanup: restore per-row flushed-through cursors
+        from the restored ring carries (flushes always precede the commit,
+        so they agree), and delete parts at/after the restored cursor —
+        those windows will be re-executed and rewritten bit-identically."""
+        for bi, bucket in enumerate(self.engine.buckets):
+            flat = self._gather_rows(
+                tuple(range(bucket.n_rows)), self.carries[bi][2]
+            )
+            self._flight_cursors[bi] = np.asarray(flat[:, 0], np.int64)
+        d = self._flight_dir()
+        if d is None:
+            return
+        for fname in sorted(os.listdir(d)):
+            m = _FLIGHT_RE.match(fname)
+            if m is None:
+                if fname.endswith(".tmp"):
+                    os.unlink(os.path.join(d, fname))
+                continue
+            if int(m.group(2)) >= self.cursor:
+                os.unlink(os.path.join(d, fname))
+        self._flight_meta_written = False  # rewrite (same bytes) next flush
 
     def _contiguous_parts(self, bi: int) -> list[tuple[int, int, Any]]:
         """The bucket's parts in window order, asserted to tile

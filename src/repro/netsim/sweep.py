@@ -100,6 +100,7 @@ from repro.netsim.engine import (
 from repro.netsim.failures import truncate_dead
 from repro.netsim.metrics import RunSummary, summarize, summarize_sketch
 from repro.netsim.telemetry import TelemetrySpec
+from repro.netsim.tracer import TraceSpec
 from repro.utils import compat
 
 # padded conns start here: far beyond any sweep horizon, still well inside
@@ -695,6 +696,7 @@ class _Program:
     chunk_fns: dict = dataclasses.field(default_factory=dict)
     quiescent_fn: Any = None
     tel_progs: dict = dataclasses.field(default_factory=dict)  # spec -> prog
+    trc_progs: dict = dataclasses.field(default_factory=dict)  # TraceSpec -> prog
 
 
 @dataclasses.dataclass
@@ -713,6 +715,8 @@ class _Bucket:
     traces: Any = None  # host-side TickTrace, leaves (ticks, R, ...) or None
     telemetry: Any = None  # host-side (R, size) int32 sketch carries or None
     tel_prog: Any = None  # TelemetryProgram that owns `telemetry`'s layout
+    trace_rows: Any = None  # host-side (R, size) int32 flight-ring carries
+    trc_prog: Any = None  # TracerProgram that owns `trace_rows`'s layout
     exec_wall_s: float = 0.0
     compile_wall_s: float = 0.0
     ticks_run: int = 0  # == ticks unless early exit fired sooner
@@ -771,6 +775,19 @@ class SweepResult:
         return jax.tree_util.tree_map(
             lambda x: x[: c.case.ticks, row], b.traces
         )
+
+    def flight_for(self, name: str, seed_idx: int = 0, since: int = 0) -> dict:
+        """Decoded flight-recorder events for one cell row (run with a
+        ``trace=TraceSpec(...)``): ``{seq, tick, code, value, cursor, lost,
+        first_drop_tick, first_redeliver_tick}`` in push order — see
+        ``tracer.TracerProgram.decode_row``."""
+        b, c = self._find(name)
+        if b.trace_rows is None:
+            raise ValueError(
+                "no flight-recorder events were collected for this sweep; "
+                "run with trace=TraceSpec(...)"
+            )
+        return b.trc_prog.decode_row(b.trace_rows[c.rows[seed_idx]], since)
 
     def telemetry_for(self, name: str, seed_idx: int = 0) -> dict:
         """Finalized sketch channels for one cell row.
@@ -1133,19 +1150,30 @@ class SweepEngine:
             prog.tel_progs[spec] = spec.build(prog.sim, prog.sim_ticks)
         return prog.tel_progs[spec]
 
+    def _trc_prog(self, prog: _Program, trace: TraceSpec):
+        """The program's TracerProgram for a TraceSpec (built once)."""
+        if trace not in prog.trc_progs:
+            prog.trc_progs[trace] = trace.build(prog.sim, prog.sim_ticks)
+        return prog.trc_progs[trace]
+
     def _make_chunk_fn(
         self, prog: _Program, n: int, collect: str,
-        spec: TelemetrySpec | None = None,
+        spec: TelemetrySpec | None = None, trace: TraceSpec | None = None,
     ):
         """Compiled runner for one chunk of ``n`` ticks: carries donated
-        states (plus the stacked telemetry sketches in summary mode),
-        returns (carry, traces-or-None).  Shared by every bucket of the
-        program's split group (same shapes, same padded rows)."""
+        states (plus the stacked telemetry sketches in summary mode, plus
+        the flight-recorder rings when tracing), returns (carry,
+        traces-or-None).  Shared by every bucket of the program's split
+        group (same shapes, same padded rows)."""
         sim = prog.sim
         full = collect == "full"
         summary = collect == "summary"
         masked = prog.masked
-        if summary:
+        if summary and trace is not None:
+            vstep = jax.vmap(sim.step_events, in_axes=(0, None, 0, 0))
+            tel_update = jax.vmap(self._tel_prog(prog, spec).update)
+            trc_update = jax.vmap(self._trc_prog(prog, trace).update)
+        elif summary:
             vstep = jax.vmap(sim.step_probe, in_axes=(0, None, 0, 0))
             tel_update = jax.vmap(self._tel_prog(prog, spec).update)
         else:
@@ -1164,7 +1192,16 @@ class SweepEngine:
 
         def body(carry, keys, scn, horizon, t0):
             def tick(carry, t):
-                if summary:
+                if summary and trace is not None:
+                    states, tel, trc = carry
+                    new_states, probe, events = vstep(states, t, keys, scn)
+                    new_carry = (
+                        new_states,
+                        tel_update(tel, probe),
+                        trc_update(trc, probe, events),
+                    )
+                    tr = None
+                elif summary:
                     states, tel = carry
                     new_states, probe = vstep(states, t, keys, scn)
                     new_carry = (new_states, tel_update(tel, probe))
@@ -1226,6 +1263,7 @@ class SweepEngine:
         chunk: int | None = None,
         early_exit: bool = False,
         telemetry: TelemetrySpec | None = None,
+        trace: TraceSpec | None = None,
     ) -> SweepResult:
         """Execute every bucket.  The three-mode ``collect`` contract:
 
@@ -1243,11 +1281,21 @@ class SweepEngine:
         bucket at the first chunk boundary where every row has reached its
         fixed point (see _make_quiescent_fn); all reported metrics are
         bit-identical to running the full horizon.
+
+        ``trace`` (a ``tracer.TraceSpec``, summary mode only) additionally
+        carries the flight-recorder ring per row; decoded events come back
+        via ``SweepResult.flight_for``.  Tracing is observation-only: every
+        state / telemetry array is bit-identical with it on or off.
         """
         if collect not in ("none", "summary", "full"):
             raise ValueError(
                 f"collect must be 'none', 'summary' or 'full', got "
                 f"{collect!r}"
+            )
+        if trace is not None and collect != "summary":
+            raise ValueError(
+                "trace=TraceSpec(...) requires collect='summary' (the "
+                "flight recorder rides the telemetry carry contract)"
             )
         if early_exit and collect == "full":
             raise ValueError(
@@ -1268,7 +1316,7 @@ class SweepEngine:
             else None
         )
         for bucket in self.buckets:
-            self._run_bucket(bucket, collect, chunk, early_exit, spec)
+            self._run_bucket(bucket, collect, chunk, early_exit, spec, trace)
         return SweepResult(self)
 
     # ------------------------------------------------------------------
@@ -1282,35 +1330,44 @@ class SweepEngine:
     # ------------------------------------------------------------------
     def bucket_carry(
         self, bucket: _Bucket, collect: str = "none",
-        spec: TelemetrySpec | None = None,
+        spec: TelemetrySpec | None = None, trace: TraceSpec | None = None,
     ):
         """The bucket's t=0 scan carry: vmapped per-row init states, plus
-        the stacked telemetry sketch carry in summary mode."""
+        the stacked telemetry sketch carry in summary mode, plus the
+        flight-recorder ring carry when tracing."""
         carry = self._init_states(bucket)
         if collect == "summary":
             tel_prog = self._tel_prog(bucket.program, spec)
             tel0 = jnp.tile(
                 tel_prog.init()[None], (bucket.plan.n_padded_rows, 1)
             )
-            carry = (carry, tel0)
+            if trace is not None:
+                trc_prog = self._trc_prog(bucket.program, trace)
+                trc0 = jnp.tile(
+                    trc_prog.init()[None], (bucket.plan.n_padded_rows, 1)
+                )
+                carry = (carry, tel0, trc0)
+            else:
+                carry = (carry, tel0)
         return carry
 
     def chunk_runner(
         self, bucket: _Bucket, n: int, collect: str = "none",
         spec: TelemetrySpec | None = None, example_carry=None,
+        trace: TraceSpec | None = None,
     ):
         """The compiled ``(carry, keys, scn, horizons, t0) -> (carry,
         traces)`` executable for an ``n``-tick chunk.  AOT-compiled once
-        per (n, collect, spec) and shared by every sub-bucket of the
+        per (n, collect, spec, trace) and shared by every sub-bucket of the
         program's split group (same shapes, same padded rows); the carry is
         donated on call.  ``example_carry`` supplies lowering shapes (a
         fresh ``bucket_carry`` is built when omitted)."""
         prog = bucket.program
-        ck = (n, collect, spec)
+        ck = (n, collect, spec, trace)
         if ck not in prog.chunk_fns:
             if example_carry is None:
-                example_carry = self.bucket_carry(bucket, collect, spec)
-            fn = self._make_chunk_fn(prog, n, collect, spec)
+                example_carry = self.bucket_carry(bucket, collect, spec, trace)
+            fn = self._make_chunk_fn(prog, n, collect, spec, trace)
             prog.chunk_fns[ck] = fn.lower(
                 example_carry, bucket.keys, bucket.scn,
                 jnp.asarray(bucket.horizons), jnp.zeros((), jnp.int32),
@@ -1320,6 +1377,7 @@ class SweepEngine:
     def run_chunk(
         self, bucket: _Bucket, carry, t0: int, n: int,
         collect: str = "none", spec: TelemetrySpec | None = None,
+        trace: TraceSpec | None = None,
     ):
         """Advance one bucket's carry over ticks ``[t0, t0 + n)``.  Returns
         ``(carry, traces)``; ``carry`` is donated (the passed-in buffers
@@ -1327,7 +1385,9 @@ class SweepEngine:
         calling).  Rows whose own horizon lies inside the window freeze
         bit-exactly there (heterogeneous buckets), so driving a bucket to
         its horizon in any chunking yields identical results."""
-        fn = self.chunk_runner(bucket, n, collect, spec, example_carry=carry)
+        fn = self.chunk_runner(
+            bucket, n, collect, spec, example_carry=carry, trace=trace
+        )
         return fn(
             carry, bucket.keys, bucket.scn, jnp.asarray(bucket.horizons),
             jnp.asarray(t0, jnp.int32),
@@ -1336,10 +1396,11 @@ class SweepEngine:
     def finalize_bucket(
         self, bucket: _Bucket, carry, collect: str, ticks_run: int,
         trace_chunks=None, spec: TelemetrySpec | None = None,
+        trace: TraceSpec | None = None,
     ):
         """Publish a finished carry onto the bucket (one host transfer):
-        ``final_state`` / ``telemetry`` / ``traces`` as ``SweepResult``
-        expects, pad rows dropped."""
+        ``final_state`` / ``telemetry`` / ``traces`` / ``trace_rows`` as
+        ``SweepResult`` expects, pad rows dropped."""
         summary = collect == "summary"
         host = jax.device_get(carry)  # one transfer for the bucket
         keep = bucket.n_rows
@@ -1351,6 +1412,9 @@ class SweepEngine:
         if summary:
             bucket.telemetry = host[1][:keep]
             bucket.tel_prog = self._tel_prog(bucket.program, spec)
+            if trace is not None:
+                bucket.trace_rows = host[2][:keep]
+                bucket.trc_prog = self._trc_prog(bucket.program, trace)
         if collect == "full" and trace_chunks:
             bucket.traces = jax.tree_util.tree_map(
                 lambda *xs: np.concatenate(xs, axis=0)[:, :keep],
@@ -1360,6 +1424,7 @@ class SweepEngine:
     def _run_bucket(
         self, bucket: _Bucket, collect: str, chunk: int | None,
         early_exit: bool = False, spec: TelemetrySpec | None = None,
+        trace: TraceSpec | None = None,
     ):
         prog = bucket.program
         ticks = bucket.ticks
@@ -1373,11 +1438,13 @@ class SweepEngine:
             sizes.append(ticks % chunk)
 
         t_c0 = time.time()
-        carry = self.bucket_carry(bucket, collect, spec)
+        carry = self.bucket_carry(bucket, collect, spec, trace)
         # AOT-compile each distinct chunk length (usually 1-2) untimed;
         # sub-buckets of a split group share the compiled executables.
         for n in sorted(set(sizes)):
-            self.chunk_runner(bucket, n, collect, spec, example_carry=carry)
+            self.chunk_runner(
+                bucket, n, collect, spec, example_carry=carry, trace=trace
+            )
         if early_exit and prog.quiescent_fn is None:
             prog.quiescent_fn = self._make_quiescent_fn(prog)
         quiescent = prog.quiescent_fn if early_exit else None
@@ -1389,7 +1456,7 @@ class SweepEngine:
         t_e0 = time.time()
         for n in sizes:
             carry, traces = self.run_chunk(
-                bucket, carry, offset, n, collect, spec
+                bucket, carry, offset, n, collect, spec, trace
             )
             offset += n
             if collect == "full":
@@ -1408,5 +1475,5 @@ class SweepEngine:
         jax.block_until_ready(states.c_done)
         bucket.exec_wall_s = time.time() - t_e0
         self.finalize_bucket(
-            bucket, carry, collect, offset, trace_chunks, spec
+            bucket, carry, collect, offset, trace_chunks, spec, trace
         )

@@ -648,6 +648,39 @@ class TelemetryProgram:
         redelivery happened, without waiting for the horizon."""
         return self.finalize_row(flat, min(int(cursor), self.ticks))
 
+    def stream_rows(self, flat: np.ndarray, t0: int, t1: int) -> dict:
+        """Windowed-series rows *completed* by advancing the cursor from
+        ``t0`` to ``t1`` — the streaming counterpart of ``finalize_row``'s
+        window block.  A window is complete once the cursor passes its end
+        (or the horizon, which completes the partial last window), so
+        concatenating the emissions of any chunk tiling of ``[0, ticks)``
+        reproduces the finalize-time raw arrays exactly: consecutive calls
+        emit ``[t0 // stride, t1 // stride)`` — adjacent, no overlap.
+
+        Returns ``{channel.key: {lo, hi, stride, util, qlen_sum, stats}}``
+        (raw int32 counts, rows ``[lo, hi)``) for every ``WindowedSeries``
+        channel; empty dict when the spec has none or no window completed."""
+        flat = np.asarray(flat)
+        assert flat.shape == (self.size,), (flat.shape, self.size)
+        views = self._views(flat)
+        out: dict = {}
+        for ch, built in self._built:
+            if not isinstance(ch, WindowedSeries):
+                continue
+            stride, nw = built["stride"], built["nw"]
+            lo = min(nw, int(t0) // stride)
+            hi = nw if int(t1) >= self.ticks else min(nw, int(t1) // stride)
+            if hi <= lo:
+                continue
+            v = views[id(ch)]
+            out[ch.key] = {
+                "lo": lo, "hi": hi, "stride": stride,
+                "util": np.asarray(v["util"][lo:hi]),
+                "qlen_sum": np.asarray(v["qlen_sum"][lo:hi]),
+                "stats": np.asarray(v["stats"][lo:hi]),
+            }
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Sketch statistics.
@@ -665,17 +698,34 @@ def sketch_percentile(
     host-side percentile — and is exact for unit-width linear bins.
     ``zeros`` counts observations below ``edges[0]`` that were never
     accumulated (the qlen channel's reconstructed zero count).
+
+    Empty sketches (no counts, no zeros) have no order statistics: the
+    result is NaN, never a fabricated 0.0 — dashboards and gates must be
+    able to tell "no data yet" from "all-zero observations".  Malformed
+    queries (``q`` outside [0, 100], negative ``zeros`` or counts) raise
+    instead of silently clipping.
     """
+    if not 0.0 <= float(q) <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q!r}")
+    if int(zeros) < 0:
+        raise ValueError(f"zeros must be >= 0, got {zeros!r}")
     counts = np.asarray(counts, np.int64)
+    if counts.size and int(counts.min()) < 0:
+        raise ValueError("histogram counts must be non-negative")
     total = int(counts.sum()) + int(zeros)
     if total == 0:
-        return float("nan")
+        return float("nan")  # empty sketch: percentile undefined
     rank = math.ceil(q / 100.0 * (total - 1))  # 0-indexed order stat
     if rank < zeros:
         return 0.0
     cum = np.cumsum(counts)
     b = int(np.searchsorted(cum, rank - zeros + 1, side="left"))
-    b = min(b, len(counts) - 1)
+    if b >= len(counts):
+        # rank beyond the accumulated mass: inconsistent zeros/counts
+        # bookkeeping upstream — unreachable for well-formed sketches
+        # (rank <= total - 1 pins b inside the array); surface it as NaN
+        # rather than silently returning the last edge.
+        return float("nan")
     return float(edges[b])
 
 

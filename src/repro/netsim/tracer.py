@@ -1,0 +1,278 @@
+"""On-device flight recorder: typed decision events in a ring-buffer carry.
+
+The telemetry sketches (repro.netsim.telemetry) answer *aggregate*
+questions; this module answers *provenance* ones — "why did this connection
+keep spraying into the degraded spine", "when exactly did the first
+re-routed delivery land".  A ``TracerProgram`` compiles a ``TraceSpec``
+into one flat ``(size,)`` int32 carry per sweep row holding a fixed-size
+ring of ``(tick, code, value)`` event triples plus a monotone push cursor,
+carried through the scanned tick loop under the exact contract the
+telemetry carry already obeys: donated, vmapped over rows, sharded by
+``shard_map``, frozen per-row past the horizon, and **bitwise no-op on
+quiescent ticks** (every push condition derives from the tick's
+``Probe``/``TickEvents``, both all-zero at a fixed point) so tracing
+composes with quiescence early exit.
+
+Event sources, per tick (engine ``step_events``):
+
+* LB decision counts from the optional ``LoadBalancer.trace`` port —
+  REPS EV-cache hit / miss / freezing-recycle / freeze-entry, and re-path
+  decisions with cause codes (ACK-ECN, RTO, flowlet gap, epoch boundary) —
+  observed as pure state diffs around the three LB call sites, threaded
+  through the ``SwitchLB`` dispatch.
+* Failure edges: schedule-window activation, the first failure drop, and
+  the first re-routed delivery after it.  The first-drop / re-delivery
+  logic mirrors ``telemetry.RecoveryTracker`` **exactly** (same
+  new-first-drop-then-compare ordering, same same-tick exclusion), so a
+  recovery span decoded from the ring has precisely the tracker's
+  ``recovery_ticks`` duration.
+* Periodic ``MARK`` heartbeat rows (total backlog) on active ticks, so
+  long quiet-but-busy stretches keep landmarks in the ring.
+
+Events are *observation-only*: ``update`` never touches simulation or
+telemetry state, and the engine stages no trace-port calls at all when
+tracing is off — carries are bit-identical to an untraced build either way.
+
+Draining is incremental: ``SoakRunner.advance`` decodes each row's ring
+segment ``[last_flushed_cursor, cursor)`` at every chunk boundary and
+appends it to atomic ``flight_*.npz`` part files (kill/resume-safe), so a
+bounded ring loses events only if more than ``ring`` pushes land within
+one chunk (the decoder reports the overwritten count as ``lost``).
+Consumers: ``tools/trace_export.py`` (Chrome/Perfetto JSON) and
+``benchmarks/soak_dashboard.py`` (live view).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.load_balancers import (
+    N_TRACE_KINDS, TR_EV_FREEZE, TR_EV_HIT, TR_EV_MISS, TR_EV_RECYCLE,
+    TR_REPATH_ACK_ECN, TR_REPATH_EPOCH, TR_REPATH_FLOWLET, TR_REPATH_RTO,
+)
+from repro.netsim.engine import BIG, ST_DELIVERED, ST_DROPS_FAIL
+
+# Ring event codes (serialized into flight part files — keep stable).
+MARK = 1  # heartbeat on active ticks; value = total queue backlog
+EV_HIT = 2  # REPS popped a valid cached EV; value = count this tick
+EV_MISS = 3  # REPS explored fresh entropy
+EV_RECYCLE = 4  # REPS freezing-mode slot reuse
+EV_FREEZE = 5  # REPS entered freezing mode
+REPATH_ACK_ECN = 6  # re-path from ECN feedback
+REPATH_RTO = 7  # re-path from a timeout
+REPATH_FLOWLET = 8  # re-path from a flowlet gap
+REPATH_EPOCH = 9  # re-path at an epoch / message boundary
+FAIL_ACTIVE = 10  # failure window opened; value = queues affected
+FAIL_FIRST_DROP = 11  # first failure drop; value = drops this tick
+FAIL_REROUTED = 12  # first delivery after it; value = recovery ticks
+
+CODE_NAMES = {
+    MARK: "mark",
+    EV_HIT: "ev_hit",
+    EV_MISS: "ev_miss",
+    EV_RECYCLE: "ev_recycle",
+    EV_FREEZE: "ev_freeze",
+    REPATH_ACK_ECN: "repath_ack_ecn",
+    REPATH_RTO: "repath_rto",
+    REPATH_FLOWLET: "repath_flowlet",
+    REPATH_EPOCH: "repath_epoch",
+    FAIL_ACTIVE: "fail_active",
+    FAIL_FIRST_DROP: "fail_first_drop",
+    FAIL_REROUTED: "fail_rerouted",
+}
+
+# (trace-port kind, ring code) in the static push order — one conditional
+# push per kind per tick, so the ring stays deterministic under any chunk
+# tiling (pushes depend only on (probe, events), never on wall time).
+_LB_CODES = (
+    (TR_EV_HIT, EV_HIT),
+    (TR_EV_MISS, EV_MISS),
+    (TR_EV_RECYCLE, EV_RECYCLE),
+    (TR_EV_FREEZE, EV_FREEZE),
+    (TR_REPATH_ACK_ECN, REPATH_ACK_ECN),
+    (TR_REPATH_RTO, REPATH_RTO),
+    (TR_REPATH_FLOWLET, REPATH_FLOWLET),
+    (TR_REPATH_EPOCH, REPATH_EPOCH),
+)
+assert len(_LB_CODES) == N_TRACE_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Declarative, hashable flight-recorder knobs.
+
+    ``ring`` bounds the carry (and the per-chunk host transfer) at
+    ``3 + 3 × ring`` int32 per row; at most 12 events push per tick, so a
+    ring of 256 absorbs ≥ 21 fully-eventful ticks before overwriting —
+    soak chunks flush far more often than that in practice, and overwrites
+    are *reported* (``lost``), never silent.  ``marker_every`` spaces the
+    heartbeat MARK rows (in ticks)."""
+
+    ring: int = 256
+    marker_every: int = 256
+
+    def build(self, sim, ticks: int) -> "TracerProgram":
+        return TracerProgram(self, sim, ticks)
+
+
+class TracerProgram:
+    """A ``TraceSpec`` compiled against one simulator program.
+
+    Flat per-row carry layout (all int32)::
+
+        [0]                cursor — total pushes ever (monotone)
+        [1]                first failure-drop tick (BIG until seen)
+        [2]                first re-routed delivery tick (BIG until seen)
+        [3        : 3+R ]  ring: event tick
+        [3 +   R  : 3+2R]  ring: event code
+        [3 + 2R   : 3+3R]  ring: event value
+
+    Event ``k`` (0-based push index) lives at ring slot ``k % R``; the
+    host-side ``decode_row`` walks ``[since, cursor)`` in push order.
+    """
+
+    def __init__(self, spec: TraceSpec, sim, ticks: int):
+        if spec.ring < 16:
+            raise ValueError(f"TraceSpec.ring must be >= 16, got {spec.ring}")
+        if spec.marker_every < 1:
+            raise ValueError(
+                f"TraceSpec.marker_every must be >= 1, got {spec.marker_every}"
+            )
+        self.spec = spec
+        self.ring = int(spec.ring)
+        self.ticks = int(ticks)
+        self.size = 3 + 3 * self.ring
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * 4
+
+    def init(self) -> jnp.ndarray:
+        flat = np.zeros((self.size,), np.int32)
+        flat[1] = BIG  # first_drop sentinel
+        flat[2] = BIG  # first_redeliver sentinel
+        return jnp.asarray(flat)
+
+    def update(self, flat: jnp.ndarray, probe, events) -> jnp.ndarray:
+        """One recorder step (pure; vmap over rows).
+
+        Every push condition is False on an all-zero (probe, events) pair,
+        so the whole update is a bitwise no-op on quiescent ticks."""
+        R = self.ring
+        cursor = flat[0]
+        first_drop = flat[1]
+        first_red = flat[2]
+        ticks = flat[3 : 3 + R]
+        codes = flat[3 + R : 3 + 2 * R]
+        vals = flat[3 + 2 * R : 3 + 3 * R]
+        now = probe.now
+        sd = probe.stats_delta
+        lane = jnp.arange(R, dtype=jnp.int32)
+
+        def push(carry, cond, code, value):
+            cursor, ticks, codes, vals = carry
+            sel = (lane == cursor % R) & cond
+            return (
+                cursor + cond.astype(jnp.int32),
+                jnp.where(sel, now, ticks),
+                jnp.where(sel, jnp.int32(code), codes),
+                jnp.where(sel, value.astype(jnp.int32), vals),
+            )
+
+        carry = (cursor, ticks, codes, vals)
+        for kind, code in _LB_CODES:
+            n = events.lb[kind]
+            carry = push(carry, n > 0, code, n)
+        carry = push(carry, events.fail_start > 0, FAIL_ACTIVE, events.fail_start)
+
+        # First-drop / re-routed-delivery edges: mirror RecoveryTracker
+        # bit-exactly (new first_drop computed first; same-tick deliveries
+        # excluded by the strict `now > first_drop`), so the decoded span
+        # duration equals the tracker's recovery_ticks.
+        drops = sd[ST_DROPS_FAIL]
+        new_first_drop = jnp.minimum(
+            first_drop, jnp.where(drops > 0, now, BIG)
+        )
+        carry = push(
+            carry, (drops > 0) & (first_drop >= BIG), FAIL_FIRST_DROP, drops
+        )
+        redeliver = (
+            (sd[ST_DELIVERED] > 0) & (now > new_first_drop) & (first_red >= BIG)
+        )
+        carry = push(carry, redeliver, FAIL_REROUTED, now - new_first_drop)
+        new_first_red = jnp.minimum(
+            first_red,
+            jnp.where(
+                (sd[ST_DELIVERED] > 0) & (now > new_first_drop), now, BIG
+            ),
+        )
+
+        # Heartbeat: only on active ticks (a quiescent tick must not push),
+        # spaced on the absolute tick so chunk tilings agree.
+        active = (
+            jnp.any(sd != 0) | jnp.any(probe.q_len > 0) | jnp.any(events.lb != 0)
+        )
+        marker = active & (now % self.spec.marker_every == 0)
+        carry = push(carry, marker, MARK, jnp.sum(probe.q_len))
+
+        cursor, ticks, codes, vals = carry
+        return jnp.concatenate([
+            cursor[None],
+            new_first_drop[None],
+            new_first_red[None],
+            ticks,
+            codes,
+            vals,
+        ])
+
+    # -- host side ----------------------------------------------------------
+    def decode_row(self, flat: np.ndarray, since: int = 0) -> dict:
+        """Decode one host-side row's events in push order.
+
+        Returns events ``[max(since, cursor - ring), cursor)`` — ``seq`` is
+        the global push index, ``lost`` counts events in ``[since, cursor)``
+        already overwritten by ring wrap-around (0 when drained at least
+        every ``ring`` pushes)."""
+        flat = np.asarray(flat)
+        assert flat.shape == (self.size,), (flat.shape, self.size)
+        R = self.ring
+        cursor = int(flat[0])
+        start = max(int(since), cursor - R)
+        lost = max(0, start - int(since))
+        seq = np.arange(start, cursor, dtype=np.int64)
+        idx = (seq % R).astype(np.int64)
+        first_drop = int(flat[1])
+        first_red = int(flat[2])
+        return {
+            "seq": seq,
+            "tick": flat[3 : 3 + R][idx],
+            "code": flat[3 + R : 3 + 2 * R][idx],
+            "value": flat[3 + 2 * R : 3 + 3 * R][idx],
+            "cursor": cursor,
+            "lost": lost,
+            "first_drop_tick": -1 if first_drop >= BIG else first_drop,
+            "first_redeliver_tick": -1 if first_red >= BIG else first_red,
+        }
+
+
+def run_serial(sim, n_ticks: int, spec: TraceSpec):
+    """Serial reference: scan one plain ``Simulator`` with the recorder
+    folded in.  Returns ``(final_state, trace_carry)`` — the carry is
+    bit-identical to the same scenario's sweep-row carry (tests pin this),
+    because pushes depend only on (probe, events) and both are pure in
+    (state, tick, key, scenario)."""
+    prog = spec.build(sim, n_ticks)
+    state0 = sim.init_state()
+
+    def body(carry, t):
+        st, trc = carry
+        new, probe, ev = sim.step_events(st, t, sim.base_key, sim.scn)
+        return (new, prog.update(trc, probe, ev)), None
+
+    (state, trc), _ = jax.lax.scan(
+        body, (state0, prog.init()), jnp.arange(n_ticks, dtype=jnp.int32)
+    )
+    return state, trc

@@ -46,7 +46,7 @@ from repro.configs.arcane_paper import FATTREE_32_CI
 from repro.core import make_lb
 from repro.netsim import (
     FailureSchedule, FleetRunner, SoakConfig, SoakRunner, SweepCase,
-    SweepEngine, Topology, failures, workloads,
+    SweepEngine, Topology, TraceSpec, failures, workloads,
 )
 
 CFG = FATTREE_32_CI
@@ -257,6 +257,122 @@ def test_inspect_reports_live_cursor_and_telemetry():
     soak.advance(TICKS)
     assert soak.inspect()["b"]["done"]
     assert soak.inspect()["b"]["cursor"] == 300  # clamped to own horizon
+
+
+# ---------------------------------------------------------------------------
+# Flight-recorder streaming (SoakConfig.trace=TraceSpec(...)).
+# ---------------------------------------------------------------------------
+
+TRACE = TraceSpec(ring=512)
+
+
+def _flight_state(res):
+    """Every cell row's decoded ring, in canonical order."""
+    out = {}
+    for name in ("a", "b", "c"):
+        n_seeds = 2 if name == "a" else 1
+        for i in range(n_seeds):
+            ev = res.flight_for(name, i)
+            out[(name, i)] = {
+                k: (np.asarray(v) if isinstance(v, np.ndarray) else v)
+                for k, v in ev.items()
+            }
+    return out
+
+
+def _flight_files(d):
+    """{part name: raw bytes} of every flushed flight part under ckpt d."""
+    fd = os.path.join(d, "flight")
+    return {
+        f: open(os.path.join(fd, f), "rb").read()
+        for f in sorted(os.listdir(fd))
+        if f.endswith(".npz")
+    }
+
+
+@pytest.fixture(scope="module")
+def golden_traced(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("traced") / "ck")
+    soak = SoakRunner(
+        _engine(), SoakConfig(chunk=CHUNK, ckpt_dir=d, trace=TRACE)
+    )
+    soak.advance(TICKS)
+    res = soak.result()
+    return {
+        "bits": _bit_state(res),
+        "flight": _flight_state(res),
+        "files": _flight_files(d),
+    }
+
+
+def test_traced_soak_is_bit_invisible(golden_summary, golden_traced):
+    """The whole-point contract: carrying the flight ring changes no
+    summary, sketch byte or final state of the soak run."""
+    _assert_bit_equal(golden_traced["bits"], golden_summary)
+    assert any(
+        ev["cursor"] > 0 for ev in golden_traced["flight"].values()
+    ), "an active grid must record events"
+
+
+@pytest.mark.parametrize("kill_at", [CHUNK, 2 * CHUNK])
+def test_traced_kill_resume_rings_and_parts_bit_exact(
+    tmp_path, golden_traced, kill_at
+):
+    """Kill/resume with tracing on: the restored rings continue bit-exactly
+    (cursor, ring contents, failure edges) and the streamed flight part
+    files are byte-identical to the uninterrupted run's — including the
+    boundary parts rewritten by the replayed window."""
+    d = str(tmp_path / "ck")
+    cfg = SoakConfig(chunk=CHUNK, ckpt_dir=d, trace=TRACE)
+    first = SoakRunner(_engine(), cfg)
+    first.advance(kill_at)
+    del first
+
+    resumed = SoakRunner(_engine(), cfg).resume()
+    assert resumed.cursor == kill_at
+    resumed.advance(TICKS)
+    res = resumed.result()
+    _assert_bit_equal(_bit_state(res), golden_traced["bits"])
+    got = _flight_state(res)
+    for key, want in golden_traced["flight"].items():
+        ev = got[key]
+        assert ev["cursor"] == want["cursor"], key
+        assert ev["lost"] == want["lost"], key
+        assert ev["first_drop_tick"] == want["first_drop_tick"], key
+        assert ev["first_redeliver_tick"] == want["first_redeliver_tick"]
+        for k in ("seq", "tick", "code", "value"):
+            np.testing.assert_array_equal(ev[k], want[k], err_msg=str(key))
+    assert _flight_files(d) == golden_traced["files"]
+
+
+def test_traced_inspect_exposes_flight_tail_mid_run(tmp_path):
+    soak = SoakRunner(
+        _engine(),
+        SoakConfig(chunk=CHUNK, ckpt_dir=str(tmp_path / "ck"), trace=TRACE),
+    )
+    soak.advance(CHUNK)
+    info = soak.inspect()
+    assert all("flight" in v for v in info.values())
+    fl = info["a"]["flight"]
+    assert fl["cursor"] > 0
+    assert np.all(np.asarray(fl["tick"]) < CHUNK)
+
+
+def test_trace_on_fingerprint_rejects_trace_off_snapshot(tmp_path):
+    """A trace-on resume must never restore a trace-off snapshot (the ring
+    carry would be missing): the fingerprint covers the TraceSpec."""
+    d = str(tmp_path / "ck")
+    SoakRunner(_engine(), SoakConfig(chunk=CHUNK, ckpt_dir=d)).advance(CHUNK)
+    cfg_on = SoakConfig(chunk=CHUNK, ckpt_dir=d, trace=TRACE)
+    with pytest.raises(ValueError, match="fingerprint"):
+        SoakRunner(_engine(), cfg_on).resume()
+
+
+def test_trace_requires_summary_collect():
+    with pytest.raises(ValueError, match="summary"):
+        SoakRunner(
+            _engine(), SoakConfig(chunk=CHUNK, collect="full", trace=TRACE)
+        )
 
 
 # ---------------------------------------------------------------------------

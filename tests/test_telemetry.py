@@ -22,6 +22,7 @@ The contract under test:
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 try:
@@ -34,9 +35,9 @@ import benchmarks.fig07_failures_macro as fig07
 from repro.configs.arcane_paper import FATTREE_32_CI
 from repro.core import make_lb
 from repro.netsim import (
-    FleetRunner, PackerConfig, SweepCase, SweepEngine, TelemetrySpec,
-    Topology, failures, sketch_bin_index, sketch_percentile, us_to_ticks,
-    workloads,
+    FleetRunner, PackerConfig, Simulator, SweepCase, SweepEngine,
+    TelemetrySpec, Topology, failures, sketch_bin_index, sketch_percentile,
+    us_to_ticks, workloads,
 )
 
 CFG = FATTREE_32_CI
@@ -407,6 +408,99 @@ def test_cohort_masks_partition_fct_sketches():
     # per-cohort histograms and scalars see disjoint mins/maxes
     assert tel["scalars_fg"]["fct_max"] <= tel["scalars"]["fct_max"]
     assert tel["scalars_bg"]["fct_max"] <= tel["scalars"]["fct_max"]
+
+
+# ---------------------------------------------------------------------------
+# sketch_percentile hardening + windowed-series streaming (stream_rows).
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_percentile_empty_is_nan_never_zero():
+    import pytest
+
+    edges = np.linspace(1.0, 10.0, 5)
+    est = sketch_percentile(np.zeros((4,), np.int64), edges, 99.0)
+    assert np.isnan(est), "empty sketch must be NaN, not a fabricated 0.0"
+    # zeros-only sketches DO have order statistics: all of them are 0
+    assert sketch_percentile(np.zeros((4,), np.int64), edges, 99.0,
+                             zeros=7) == 0.0
+    with pytest.raises(ValueError, match="q must be"):
+        sketch_percentile(np.ones((4,), np.int64), edges, 101.0)
+    with pytest.raises(ValueError, match="q must be"):
+        sketch_percentile(np.ones((4,), np.int64), edges, -0.5)
+    with pytest.raises(ValueError, match="zeros"):
+        sketch_percentile(np.ones((4,), np.int64), edges, 50.0, zeros=-1)
+    with pytest.raises(ValueError, match="non-negative"):
+        sketch_percentile(np.asarray([3, -1, 2]), edges, 50.0)
+    # q=0 / q=100 boundary queries stay legal
+    assert sketch_percentile(np.asarray([1, 0, 0, 0]), edges, 0.0) == edges[0]
+    assert sketch_percentile(np.asarray([0, 0, 0, 1]), edges,
+                             100.0) == edges[3]
+
+
+def _stream_serial(sim, ticks, stride, cuts):
+    """Scan a serial sim in windows tiled by ``cuts``, draining
+    ``stream_rows`` at each boundary (the soak flush pattern)."""
+    from repro.netsim.telemetry import TelemetrySpec as Spec
+
+    prog = Spec.default(stride=stride).build(sim, ticks)
+
+    def body(carry, t):
+        st, tel = carry
+        new, probe = sim.step_probe(st, t, sim.base_key, sim.scn)
+        return (new, prog.update(tel, probe)), None
+
+    carry = (sim.init_state(), prog.init())
+    emitted, t0 = [], 0
+    for t1 in cuts:
+        carry, _ = jax.lax.scan(
+            body, carry, jnp.arange(t0, t1, dtype=jnp.int32)
+        )
+        emitted.append(prog.stream_rows(np.asarray(carry[1]), t0, t1))
+        t0 = t1
+    return prog, np.asarray(carry[1]), emitted
+
+
+def test_stream_rows_tiling_concatenates_to_one_shot():
+    """Any chunk tiling of [0, ticks) emits adjacent, non-overlapping
+    window ranges whose concatenation equals the one-shot decode — the
+    soak runtime's streamed series are exactly the finalize arrays."""
+    wl = workloads.permutation(32, 24, seed=1)
+    sim = Simulator(CFG, wl, make_lb("reps", evs_size=CFG.evs_size))
+    ticks, stride = 360, 24
+    for cuts in ([360], [120, 240, 360], [97, 247, 360], [1, 359, 360]):
+        prog, flat, emitted = _stream_serial(sim, ticks, stride, cuts)
+        one = prog.stream_rows(flat, 0, ticks)
+        assert set(one) == {"windows"}
+        ranges = [e["windows"] for e in emitted if e]
+        # adjacency: each emission starts where the previous ended
+        lo = 0
+        for r in ranges:
+            assert r["lo"] == lo, cuts
+            lo = r["hi"]
+        assert lo == one["windows"]["hi"] == ticks // stride
+        for k in ("util", "qlen_sum", "stats"):
+            np.testing.assert_array_equal(
+                np.concatenate([r[k] for r in ranges]),
+                one["windows"][k], err_msg=f"{cuts}:{k}",
+            )
+
+
+def test_stream_rows_partial_last_window_completes_at_horizon():
+    """A horizon that is not a stride multiple still flushes the partial
+    last window once t1 reaches it — and never before."""
+    wl = workloads.permutation(32, 24, seed=1)
+    sim = Simulator(CFG, wl, make_lb("reps", evs_size=CFG.evs_size))
+    ticks, stride = 350, 24  # 15 windows, last covers [336, 350)
+    prog, flat, emitted = _stream_serial(sim, ticks, stride, [340, 350])
+    first, second = emitted[0]["windows"], emitted[1]["windows"]
+    assert first["hi"] == 340 // 24  # window 14 incomplete at t=340
+    assert second["lo"] == first["hi"]
+    assert second["hi"] == -(-ticks // stride)  # horizon completes it
+    one = prog.stream_rows(flat, 0, ticks)["windows"]
+    np.testing.assert_array_equal(
+        np.concatenate([first["util"], second["util"]]), one["util"]
+    )
 
 
 def test_cohort_mask_validation():

@@ -1,0 +1,295 @@
+"""Flight recorder (repro.netsim.tracer): on-device decision tracing.
+
+The contract under test:
+
+* **Bit-invisibility** — running with the tracer folded in
+  (``step_events`` / ``trace=TraceSpec(...)``) leaves every simulation
+  state, telemetry sketch and derived metric bit-identical to the
+  untraced run: tracing is observation-only, and the trace-port key folds
+  consume no randomness.
+* **Sweep ≡ serial** — every sweep row's ring carry is bit-identical to
+  the serial ``tracer.run_serial`` reference for the same cell, across
+  ≥2 shape buckets including a horizon-merged (frozen) row, and invariant
+  to the chunk tiling.
+* **Recovery-span parity** — the ring's first-drop / first-redelivery
+  edges mirror ``telemetry.RecoveryTracker`` bit-exactly, so a decoded
+  recovery span has precisely the tracker's duration (the acceptance
+  criterion for the Perfetto export).
+* **Ring mechanics** — wrap-around overwrites are reported (``lost``),
+  incremental ``since``-based decoding concatenates to the one-shot
+  decode, and spec validation rejects degenerate rings.
+* **Event semantics** — REPS EV-cache hit/miss/recycle/freeze counts and
+  per-LB re-path cause codes come from pure state diffs and match
+  independent expectations on crafted scenarios.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.arcane_paper import FATTREE_32_CI
+from repro.core import make_lb
+from repro.netsim import (
+    PackerConfig, Simulator, SweepCase, SweepEngine, Topology, failures,
+    tracer, workloads,
+)
+from repro.netsim.tracer import TracerProgram, TraceSpec
+
+CFG = FATTREE_32_CI
+
+
+def _case(name, wl, lb, ticks, fs=None, seeds=(0,), **lb_kwargs):
+    lb_kwargs.setdefault("evs_size", CFG.evs_size)
+    return SweepCase(
+        name=name, workload=wl, lb=lb, ticks=ticks, lb_kwargs=lb_kwargs,
+        failures=fs, seeds=tuple(seeds),
+    )
+
+
+def _fail_grid():
+    topo = Topology.build(CFG)
+    fs = failures.link_down(
+        list(topo.t0_up_queues(0)[:2]), 100, failures.FOREVER
+    )
+    wl = workloads.permutation(32, 64, seed=3)
+    return [
+        _case("perm/reps", wl, "reps", 500, seeds=(0, 5)),
+        _case("fail/reps", wl, "reps", 900, fs=fs, freezing_timeout=300),
+        _case("incast/plb", workloads.incast(16, 4, 96), "plb", 700),
+    ]
+
+
+SPEC = TraceSpec(ring=4096, marker_every=128)
+
+
+def _decode_equal(a, b, ctx=""):
+    assert a["cursor"] == b["cursor"], (ctx, a["cursor"], b["cursor"])
+    for k in ("seq", "tick", "code", "value"):
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{ctx}:{k}")
+    for k in ("first_drop_tick", "first_redeliver_tick", "lost"):
+        assert a[k] == b[k], (ctx, k, a[k], b[k])
+
+
+# ---------------------------------------------------------------------------
+# Bit-invisibility + serial reference.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lbn,kw", [
+    ("reps", {"freezing_timeout": 300}), ("plb", {}), ("flowlet", {}),
+])
+def test_tracing_is_bit_invisible_serial(lbn, kw):
+    """step_events advances the simulation bit-identically to plain run():
+    the trace port observes state diffs, never mutates, and fold_in-based
+    key derivation is untouched by the extra stages."""
+    wl = workloads.permutation(32, 48, seed=1)
+    sim = Simulator(CFG, wl, make_lb(lbn, evs_size=CFG.evs_size, **kw))
+    plain, _ = sim.run(400)
+    traced, trc = tracer.run_serial(sim, 400, SPEC)
+    for p, t in zip(
+        jax.tree_util.tree_leaves(plain), jax.tree_util.tree_leaves(traced)
+    ):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(t))
+    assert int(np.asarray(trc)[0]) > 0, "an active run must record events"
+
+
+def test_sweep_trace_off_on_bit_parity_and_serial_match():
+    """Trace-on sweeps reproduce trace-off states + telemetry bit-exactly;
+    every cell row's ring equals the serial reference; the ring is
+    invariant to the chunk tiling.  Covers ≥2 shape buckets and a
+    horizon-merged frozen row."""
+    cases = _fail_grid()
+    eng_off = SweepEngine(CFG, cases, packer=PackerConfig(merge=False))
+    res_off = eng_off.run(collect="summary", chunk=250)
+    eng_on = SweepEngine(CFG, cases, packer=PackerConfig(merge=False))
+    res_on = eng_on.run(collect="summary", chunk=250, trace=SPEC)
+    assert len(eng_on.buckets) >= 2
+
+    for bo, bn in zip(res_off.buckets, res_on.buckets):
+        for lo, ln in zip(
+            jax.tree_util.tree_leaves(bo.final_state),
+            jax.tree_util.tree_leaves(bn.final_state),
+        ):
+            np.testing.assert_array_equal(np.asarray(lo), np.asarray(ln))
+        np.testing.assert_array_equal(bo.telemetry, bn.telemetry)
+
+    for c in cases:
+        for i in range(len(c.seeds)):
+            got = res_on.flight_for(c.name, i)
+            sim = eng_on.serial_sim(c.name, seed=c.seeds[i])
+            _, trc = tracer.run_serial(sim, c.ticks, SPEC)
+            ref = SPEC.build(sim, c.ticks).decode_row(np.asarray(trc))
+            _decode_equal(got, ref, f"{c.name}[{i}]")
+
+    # different chunking, same rings
+    eng2 = SweepEngine(CFG, cases, packer=PackerConfig(merge=False))
+    res2 = eng2.run(collect="summary", chunk=97, trace=SPEC)
+    for c in cases:
+        _decode_equal(
+            res_on.flight_for(c.name), res2.flight_for(c.name), c.name
+        )
+
+
+def test_frozen_horizon_row_ring_stops_at_its_own_horizon():
+    """In a horizon-merged bucket the short cell's ring must freeze at its
+    own horizon: bit-equal to the serial run of that horizon, even though
+    the bucket scans on."""
+    wl = workloads.permutation(32, 48, seed=1)
+    cases = [
+        _case("short/ops", wl, "ops", 300),
+        _case("long/reps", wl, "reps", 900),
+    ]
+    eng = SweepEngine(CFG, cases, packer=PackerConfig(waste_budget=2.0))
+    assert len(eng.buckets) == 1 and eng.buckets[0].program.masked
+    res = eng.run(collect="summary", trace=SPEC)
+    for name, ticks in (("short/ops", 300), ("long/reps", 900)):
+        sim = eng.serial_sim(name)
+        _, trc = tracer.run_serial(sim, ticks, SPEC)
+        # decode with the bucket program (bucket horizon) — layout depends
+        # only on the ring size, so the serial carry decodes identically
+        ref = SPEC.build(sim, ticks).decode_row(np.asarray(trc))
+        _decode_equal(res.flight_for(name), ref, name)
+
+
+def test_trace_requires_summary_mode():
+    eng = SweepEngine(
+        CFG, [_case("x", workloads.permutation(32, 24, seed=0), "ops", 200)]
+    )
+    with pytest.raises(ValueError, match="summary"):
+        eng.run(collect="none", trace=SPEC)
+    with pytest.raises(ValueError, match="flight-recorder"):
+        SweepEngine(
+            CFG,
+            [_case("x", workloads.permutation(32, 24, seed=0), "ops", 200)],
+        ).run(collect="summary").flight_for("x")
+
+
+# ---------------------------------------------------------------------------
+# Recovery-span parity (the Perfetto-export acceptance criterion).
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_span_matches_recovery_tracker():
+    topo = Topology.build(CFG)
+    fs = failures.link_down(
+        list(topo.t0_up_queues(0)[:2]), 100, failures.FOREVER
+    )
+    cases = [
+        _case("f/reps", workloads.permutation(32, 64, seed=3), "reps",
+              900, fs=fs, freezing_timeout=300),
+    ]
+    eng = SweepEngine(CFG, cases)
+    res = eng.run(collect="summary", trace=SPEC)
+    rec = res.telemetry_for("f/reps")["recovery"]
+    ev = res.flight_for("f/reps")
+    assert rec["first_drop_tick"] >= 100
+    assert ev["first_drop_tick"] == rec["first_drop_tick"]
+    assert ev["first_redeliver_tick"] == rec["first_redeliver_tick"]
+    codes = list(ev["code"])
+    assert tracer.FAIL_FIRST_DROP in codes
+    ri = codes.index(tracer.FAIL_REROUTED)
+    # the FAIL_REROUTED value IS the recovery span in ticks
+    assert int(ev["value"][ri]) == rec["recovery_ticks"]
+    assert int(ev["tick"][ri]) == rec["first_redeliver_tick"]
+
+
+# ---------------------------------------------------------------------------
+# Ring mechanics + event semantics.
+# ---------------------------------------------------------------------------
+
+
+def test_ring_wraparound_reports_lost_and_incremental_decode():
+    """A ring smaller than the event count overwrites oldest-first and
+    reports exactly the overwritten count; draining incrementally (the
+    soak flush pattern) loses nothing and concatenates to the full
+    history."""
+    wl = workloads.permutation(32, 64, seed=3)
+    sim = Simulator(CFG, wl, make_lb("reps", evs_size=CFG.evs_size))
+    big = TraceSpec(ring=4096)
+    small = TraceSpec(ring=16)
+    _, trc_big = tracer.run_serial(sim, 400, big)
+    _, trc_small = tracer.run_serial(sim, 400, small)
+    full = big.build(sim, 400).decode_row(np.asarray(trc_big))
+    tail = small.build(sim, 400).decode_row(np.asarray(trc_small))
+    n = full["cursor"]
+    assert n > 16, "scenario must push more events than the small ring"
+    assert tail["cursor"] == n
+    assert tail["lost"] == n - 16
+    np.testing.assert_array_equal(tail["tick"], full["tick"][-16:])
+    np.testing.assert_array_equal(tail["code"], full["code"][-16:])
+
+    # incremental drain of the big ring: arbitrary cut points
+    prog = big.build(sim, 400)
+    cuts = [0, 3, 17, n // 2, n]
+    parts = [
+        prog.decode_row(np.asarray(trc_big), since=a) for a in cuts[:-1]
+    ]
+    got_ticks = np.concatenate([
+        p["tick"][: b - a] for p, (a, b) in zip(parts, zip(cuts, cuts[1:]))
+    ])
+    np.testing.assert_array_equal(got_ticks, full["tick"])
+    assert all(p["lost"] == 0 for p in parts)
+
+
+def test_reps_event_counts_match_state_diff_expectations():
+    """EV-cache decisions decode to sane, internally-consistent counts: on
+    a symmetric fabric REPS starts all-miss (exploring) and converges to
+    hits; with a failure + freezing timeout the freeze event appears."""
+    wl = workloads.permutation(32, 64, seed=3)
+    sim = Simulator(CFG, wl, make_lb("reps", evs_size=CFG.evs_size))
+    _, trc = tracer.run_serial(sim, 400, SPEC)
+    ev = SPEC.build(sim, 400).decode_row(np.asarray(trc))
+    codes = np.asarray(ev["code"])
+    vals = np.asarray(ev["value"])
+    hits = int(vals[codes == tracer.EV_HIT].sum())
+    misses = int(vals[codes == tracer.EV_MISS].sum())
+    assert misses > 0, "cold EV cache must explore"
+    assert hits > 0, "recycled entropy must produce cache hits"
+    # first choose-stage event of the run must be a miss (cache is cold)
+    first_choice = codes[np.isin(codes, [tracer.EV_HIT, tracer.EV_MISS])][0]
+    assert first_choice == tracer.EV_MISS
+
+    topo = Topology.build(CFG)
+    fs = failures.link_down(
+        list(topo.t0_up_queues(0)[:2]), 100, failures.FOREVER
+    )
+    sim_f = Simulator(
+        CFG, wl, make_lb("reps", evs_size=CFG.evs_size,
+                         freezing_timeout=300),
+        failures=fs,
+    )
+    _, trc_f = tracer.run_serial(sim_f, 900, SPEC)
+    ev_f = SPEC.build(sim_f, 900).decode_row(np.asarray(trc_f))
+    cnt = {
+        name: int((np.asarray(ev_f["code"]) == code).sum())
+        for code, name in tracer.CODE_NAMES.items()
+    }
+    assert cnt["fail_active"] == 1, "one window activation edge"
+    assert cnt["fail_first_drop"] == 1 and cnt["fail_rerouted"] == 1
+
+
+def test_spec_validation_and_layout():
+    with pytest.raises(ValueError, match="ring"):
+        TraceSpec(ring=4).build(None, 100)
+    with pytest.raises(ValueError, match="marker_every"):
+        TraceSpec(marker_every=0).build(None, 100)
+    prog = TracerProgram(TraceSpec(ring=32), None, 100)
+    assert prog.size == 3 + 3 * 32
+    assert prog.nbytes == prog.size * 4
+    flat = np.asarray(prog.init())
+    assert flat[0] == 0 and flat[1] >= 10**9 and flat[2] >= 10**9
+    d = prog.decode_row(flat)
+    assert d["cursor"] == 0 and len(d["seq"]) == 0
+    assert d["first_drop_tick"] == -1 and d["first_redeliver_tick"] == -1
+
+
+def test_quiescent_run_records_nothing_after_drain():
+    """Once the workload drains, no further events push (the no-op-on-
+    quiescence contract): the ring of a 400-tick run equals the ring of
+    the same scenario run far past quiescence."""
+    wl = workloads.permutation(32, 16, seed=1)  # tiny: drains early
+    sim = Simulator(CFG, wl, make_lb("ops", evs_size=CFG.evs_size))
+    _, trc_short = tracer.run_serial(sim, 400, SPEC)
+    _, trc_long = tracer.run_serial(sim, 1600, SPEC)
+    np.testing.assert_array_equal(
+        np.asarray(trc_short), np.asarray(trc_long)
+    )

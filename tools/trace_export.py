@@ -1,0 +1,205 @@
+"""Export streamed flight-recorder parts to Chrome/Perfetto trace JSON.
+
+Input: a soak run's ``<ckpt>/flight`` directory — the atomic
+``flight_b*_t*_n*.npz`` parts ``SoakRunner.advance`` drains from the
+on-device ring at every chunk boundary, plus the ``flight_meta.json``
+sidecar mapping (bucket, row) to (cell, seed) and carrying the event code
+table (see ``repro.netsim.tracer``).  No engine or JAX import is needed to
+decode: parts are plain npz, the sidecar is plain JSON.
+
+Output: the Chrome trace-event JSON format (the ``traceEvents`` array),
+loadable in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``:
+
+* one *process* per cell row (``pid``; process_name metadata records the
+  cell name and seed);
+* counter tracks (``ph: "C"``) per decision family — EV-cache
+  hit/miss/recycle, re-path causes, queue backlog heartbeat — one sample
+  per recorded tick, value = events that tick;
+* instant events (``ph: "i"``) for failure edges: window activation,
+  first failure drop, freezing entries;
+* one *duration* event (``ph: "X"``, name ``recovery``) per row that saw a
+  failure drop followed by a re-routed delivery: ``ts`` is the first-drop
+  time, ``dur`` the first-drop → first-redelivery span — by construction
+  (tracer mirrors ``telemetry.RecoveryTracker`` bit-exactly) ``dur`` in
+  microseconds equals the tracker's ``recovery_us``, the paper's <100 µs
+  re-route claim rendered as a span on the timeline.
+
+Timestamps are microseconds (tick × TICK_NS / 1000), the unit Chrome JSON
+expects.  Run::
+
+    python tools/trace_export.py --flight <ckpt>/flight --out trace.json
+    python tools/trace_export.py --flight <ckpt>/flight --cell 'fig07soak/*'
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import re
+import sys
+
+import numpy as np
+
+_PART_RE = re.compile(r"^flight_b(\d+)_t(\d{9})_n(\d+)\.npz$")
+
+# counter-track grouping: code name -> (track, series) so related causes
+# share one Perfetto counter lane
+_COUNTER_TRACKS = {
+    "ev_hit": ("ev_cache", "hit"),
+    "ev_miss": ("ev_cache", "miss"),
+    "ev_recycle": ("ev_cache", "recycle"),
+    "repath_ack_ecn": ("repath", "ack_ecn"),
+    "repath_rto": ("repath", "rto"),
+    "repath_flowlet": ("repath", "flowlet"),
+    "repath_epoch": ("repath", "epoch"),
+    "mark": ("backlog", "queued_pkts"),
+}
+_INSTANTS = {"ev_freeze", "fail_active", "fail_first_drop", "fail_rerouted"}
+
+
+def load_meta(flight_dir: str) -> dict:
+    path = os.path.join(flight_dir, "flight_meta.json")
+    with open(path) as f:
+        meta = json.load(f)
+    meta["codes"] = {int(k): v for k, v in meta["codes"].items()}
+    return meta
+
+
+def iter_parts(flight_dir: str):
+    """Yield ``(bucket_idx, t0, n, npz dict)`` in (bucket, window) order."""
+    for fname in sorted(os.listdir(flight_dir)):
+        m = _PART_RE.match(fname)
+        if m is None:
+            continue
+        with np.load(os.path.join(flight_dir, fname)) as z:
+            yield int(m.group(1)), int(m.group(2)), int(m.group(3)), {
+                k: z[k] for k in z.files
+            }
+
+
+def row_labels(meta: dict) -> dict[tuple[int, int], tuple[str, int]]:
+    """(bucket, kept-row) -> (cell name, seed)."""
+    out: dict[tuple[int, int], tuple[str, int]] = {}
+    for bi, b in enumerate(meta["buckets"]):
+        for c in b["cells"]:
+            for si, r in enumerate(c["rows"]):
+                out[(bi, int(r))] = (c["name"], int(c["seeds"][si]))
+    return out
+
+
+def export(flight_dir: str, cell_glob: str | None = None) -> dict:
+    """Build the Chrome trace dict from one flight directory."""
+    meta = load_meta(flight_dir)
+    tick_us = float(meta["tick_ns"]) / 1000.0
+    labels = row_labels(meta)
+    pids: dict[tuple[int, int], int] = {}
+    events: list[dict] = []
+    lost_total = 0
+    # per-row failure edges (min across parts; -1 = not seen)
+    edges: dict[tuple[int, int], tuple[int, int]] = {}
+
+    def pid_for(key: tuple[int, int]) -> int | None:
+        if key not in labels:
+            return None  # padded row or stale meta: skip, never mislabel
+        name, seed = labels[key]
+        if cell_glob is not None and not fnmatch.fnmatch(name, cell_glob):
+            return None
+        if key not in pids:
+            pid = len(pids) + 1
+            pids[key] = pid
+            events.append({
+                "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                "args": {"name": f"{name} seed={seed}"},
+            })
+        return pids[key]
+
+    for bi, _t0, _n, part in iter_parts(flight_dir):
+        lost_total += int(part["lost"].sum())
+        for key_row in range(part["cursor"].shape[0]):
+            key = (bi, key_row)
+            pid = pid_for(key)
+            if pid is None:
+                continue
+            fd = int(part["first_drop_tick"][key_row])
+            fr = int(part["first_redeliver_tick"][key_row])
+            prev = edges.get(key, (-1, -1))
+            edges[key] = (fd if prev[0] < 0 else prev[0],
+                          fr if prev[1] < 0 else prev[1])
+        sel_rows = part["row"]
+        for i in range(sel_rows.shape[0]):
+            key = (bi, int(sel_rows[i]))
+            pid = pid_for(key)
+            if pid is None:
+                continue
+            code = meta["codes"].get(int(part["code"][i]), "unknown")
+            ts = float(part["tick"][i]) * tick_us
+            val = int(part["value"][i])
+            if code in _COUNTER_TRACKS:
+                track, series = _COUNTER_TRACKS[code]
+                events.append({
+                    "ph": "C", "name": track, "pid": pid, "tid": 0,
+                    "ts": ts, "args": {series: val},
+                })
+            elif code in _INSTANTS:
+                events.append({
+                    "ph": "i", "name": code, "pid": pid, "tid": 0,
+                    "ts": ts, "s": "p", "args": {"value": val},
+                })
+
+    # recovery spans: one X event per row whose drop->redeliver pair closed
+    for key, (fd, fr) in sorted(edges.items()):
+        if fd < 0 or fr < 0:
+            continue
+        pid = pids.get(key)
+        if pid is None:
+            continue
+        events.append({
+            "ph": "X", "name": "recovery", "pid": pid, "tid": 0,
+            "ts": fd * tick_us, "dur": (fr - fd) * tick_us,
+            "args": {
+                "first_drop_tick": fd, "first_redeliver_tick": fr,
+                "recovery_ticks": fr - fd,
+                "recovery_us": (fr - fd) * tick_us,
+            },
+        })
+
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "source": "repro.netsim.tracer flight parts",
+            "flight_dir": os.path.abspath(flight_dir),
+            "tick_ns": meta["tick_ns"],
+            "ring": meta["ring"],
+            "rows": len(pids),
+            "lost_events": lost_total,
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--flight", required=True,
+                    help="the soak run's <ckpt>/flight directory")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: stdout)")
+    ap.add_argument("--cell", default=None,
+                    help="glob over cell names (e.g. 'fig07soak/*/reps')")
+    args = ap.parse_args(argv)
+    trace = export(args.flight, args.cell)
+    blob = json.dumps(trace, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+        spans = sum(1 for e in trace["traceEvents"] if e["ph"] == "X")
+        print(f"wrote {args.out}: {len(trace['traceEvents'])} events, "
+              f"{spans} recovery span(s), "
+              f"{trace['otherData']['lost_events']} lost")
+    else:
+        print(blob)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
