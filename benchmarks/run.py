@@ -26,6 +26,7 @@ import time
 
 MODULES = [
     "table1_footprint",
+    "scale_smoke",  # no-op unless BENCH_SCALE_CONNS is set (scale-smoke CI)
     "fig13_balls_bins",
     "fig16_evs_imbalance",
     "fig17_coalesced_bins",

@@ -1,0 +1,92 @@
+"""Scale-mode smoke: one 1e5-conn conn-sharded sweep row (ARCHITECTURE.md §10).
+
+Opt-in via ``BENCH_SCALE_CONNS`` (the default aggregate run emits
+nothing): builds a staggered-start many-conn workload at that size, runs
+it as ONE sweep row through the conn-sharded engine
+(``SimConfig.conn_sharding`` + ``SweepEngine(conn_devices=...)``), and
+asserts the scale mode's two external contracts:
+
+* the packed REPS per-conn state holds the paper's <= 25 B/conn claim
+  (``table1_footprint.measure_scale`` — measured, round-tripped);
+* the run finishes under a wall-clock ceiling (``BENCH_SCALE_WALL_S``)
+  with the lifetime-bounded packet table (NP is independent of the conn
+  count — the property that makes 1e6 conns representable at all).
+
+CI (`scale-smoke` job) runs it with 4 host devices and
+``BENCH_SCALE_CONN_DEVICES=4`` so the connection axis genuinely shards;
+rows land under ``scale/`` in BENCH_netsim.json.
+"""
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from benchmarks.table1_footprint import measure_scale
+from repro.netsim import SimConfig, SweepCase, SweepEngine
+from repro.netsim.engine import Workload
+
+
+def scale_workload(n_conns: int, n_hosts: int, stagger: int = 3) -> Workload:
+    """``n_conns`` single-packet messages spread round-robin over hosts,
+    each host starting one conn every ``stagger`` ticks — the active set
+    stays O(hosts · lifetime) while the conn *tables* carry the full
+    n_conns, which is exactly the regime the scale mode targets."""
+    i = np.arange(n_conns, dtype=np.int64)
+    src = (i % n_hosts).astype(np.int32)
+    r = (i // n_hosts).astype(np.int64)  # per-host conn rank
+    dst = ((src + 1 + r % (n_hosts - 1)) % n_hosts).astype(np.int32)
+    return Workload(
+        src=src,
+        dst=dst,
+        msg_pkts=np.ones(n_conns, np.int32),
+        start=(r * stagger).astype(np.int32),
+        dep=np.full(n_conns, -1, np.int32),
+        name=f"scale{n_conns}",
+    )
+
+
+def main(rows=None):
+    rows = rows or Rows()
+    conns = int(os.environ.get("BENCH_SCALE_CONNS", "0"))
+    if not conns:
+        return rows  # scale rows are produced only by the scale-smoke job
+    conn_devices = int(os.environ.get("BENCH_SCALE_CONN_DEVICES", "1"))
+    ticks = int(os.environ.get("BENCH_SCALE_TICKS", "300"))
+    ceiling_s = float(os.environ.get("BENCH_SCALE_WALL_S", "600"))
+
+    measure_scale(conns, rows)  # asserts <= 25 B/conn, round-trip exact
+
+    cfg = SimConfig(
+        n_hosts=128, hosts_per_tor=16, uplinks_per_tor=16,
+        conn_sharding=True,
+    )
+    wl = scale_workload(conns, cfg.n_hosts)
+    case = SweepCase(f"scale/row{conns}", wl, "reps", ticks=ticks, seeds=(0,))
+    t0 = time.time()
+    eng = SweepEngine(cfg, [case], conn_devices=conn_devices)
+    res = eng.run(collect="none")
+    wall = time.time() - t0
+    sim = eng.buckets[0].sim
+    st = res.state_for(case.name)
+    done = int(np.asarray(st.c_done).sum())
+    assert done > 0, "scale row made no progress"
+    # the lifetime bound, not the conn count, sizes the packet table
+    assert sim.NP * 11 * 4 < 64e6, f"packet table ballooned: NP={sim.NP}"
+    assert wall <= ceiling_s, (
+        f"scale smoke exceeded its wall-clock ceiling: {wall:.1f}s > "
+        f"{ceiling_s:.0f}s (compile {res.compile_wall_s:.1f}s + exec "
+        f"{res.exec_wall_s:.1f}s)"
+    )
+    rows.add(
+        f"scale/engine_conns{conns}", res.exec_wall_s * 1e6,
+        f"ticks={ticks};done={done};NP={sim.NP};"
+        f"conn_devices={conn_devices};"
+        f"ticks_per_sec={ticks / max(res.exec_wall_s, 1e-9):.1f}",
+        ticks_per_sec=ticks / max(res.exec_wall_s, 1e-9),
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

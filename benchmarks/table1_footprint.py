@@ -1,11 +1,82 @@
-"""Table 1: per-connection memory footprint of REPS."""
+"""Table 1: per-connection memory footprint of REPS.
+
+Two modes:
+
+* default — the paper's arithmetic footprint (``state_footprint_bits``)
+  for 1- and 8-deep buffers: ``table1/buffer{n}`` rows.
+* ``--conns N`` (scale mode) — *measured* end-to-end: instantiate the
+  vectorized REPS state at N connections, bit-pack it into the Table 1
+  layout (``reps.pack_state``), and report the actual packed bytes per
+  connection plus a pack/unpack round-trip check.  ``--conns 1000000``
+  completes on one CPU host and must report ≤ 25 B/conn (the paper's
+  claim; asserted).  Emits ``scale/footprint_conns{N}`` rows for
+  BENCH_netsim.json; tests/test_scale_mode.py runs the same path at 1e5
+  conns as a tier-1 regression.
+"""
+import argparse
 import time
 
+import numpy as np
+
 from benchmarks.common import Rows
-from repro.core.reps import REPSConfig, state_footprint_bits
+from repro.core.reps import (
+    REPSConfig, init_state, pack_state, state_footprint_bits, unpack_state,
+)
+
+PAPER_BYTES_PER_CONN = 25
 
 
-def main(rows=None):
+def measure_scale(n_conns: int, rows: "Rows", buffer_size: int = 8):
+    """Instantiate, perturb, bit-pack, and round-trip N conns of REPS
+    state; add a ``scale/footprint_conns{N}`` row and return the measured
+    bytes/conn."""
+    cfg = REPSConfig(buffer_size=buffer_size)
+    t0 = time.time()
+    state = init_state(cfg, n_conns)
+    # perturb every field deterministically so the round trip exercises
+    # real bit patterns, not the all-zeros init
+    rng = np.random.default_rng(0)
+    state = state.replace(
+        buf_ev=state.buf_ev + rng.integers(
+            0, cfg.evs_size, state.buf_ev.shape, dtype=np.int32
+        ),
+        buf_valid=rng.integers(0, 2, state.buf_valid.shape).astype(bool),
+        head=state.head + rng.integers(0, buffer_size, (n_conns,), dtype=np.int32),
+        num_valid=state.num_valid
+        + rng.integers(0, buffer_size + 1, (n_conns,), dtype=np.int32),
+        is_freezing=rng.integers(0, 2, (n_conns,)).astype(bool),
+        exit_freezing=state.exit_freezing
+        + rng.integers(0, 1 << 20, (n_conns,), dtype=np.int32),
+        n_cached=state.n_cached
+        + rng.integers(0, 2, (n_conns,), dtype=np.int32),
+    )
+    packed = pack_state(cfg, state)
+    bytes_per_conn = packed.nbytes / n_conns
+    # lossless on every algorithm-visible field (n_cached reconstructs as
+    # its isEmpty indicator — the only bit the algorithm reads)
+    back = unpack_state(cfg, packed)
+    for f in ("buf_ev", "buf_valid", "head", "num_valid",
+              "explore_counter", "is_freezing", "exit_freezing"):
+        assert np.array_equal(
+            np.asarray(getattr(back, f)), np.asarray(getattr(state, f))
+        ), f"round-trip mismatch: {f}"
+    assert np.array_equal(
+        np.asarray(back.n_cached), (np.asarray(state.n_cached) > 0)
+    ), "round-trip mismatch: n_cached indicator"
+    wall = time.time() - t0
+    assert bytes_per_conn <= PAPER_BYTES_PER_CONN, (
+        f"measured {bytes_per_conn:.3f} B/conn exceeds the paper's "
+        f"{PAPER_BYTES_PER_CONN} B/conn claim"
+    )
+    rows.add(
+        f"scale/footprint_conns{n_conns}", wall * 1e6,
+        f"bytes_per_conn={bytes_per_conn:.3f};"
+        f"packed_mb={packed.nbytes / 1e6:.1f};roundtrip=ok",
+    )
+    return bytes_per_conn
+
+
+def main(rows=None, conns: int | None = None):
     rows = rows or Rows()
     for n in [1, 8]:
         t0 = time.time()
@@ -14,8 +85,20 @@ def main(rows=None):
             f"table1/buffer{n}", (time.time() - t0) * 1e6,
             f"total_bits={fp['total_bits']};bytes={fp['total_bytes_ceil']}",
         )
+    if conns:
+        bpc = measure_scale(conns, rows)
+        print(
+            f"scale mode: {conns} conns packed at {bpc:.3f} B/conn "
+            f"(paper claim <= {PAPER_BYTES_PER_CONN})"
+        )
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--conns", type=int, default=None,
+        help="measured scale mode: pack N connections of live REPS state "
+        "and assert <= 25 B/conn (e.g. --conns 1000000)",
+    )
+    main(conns=ap.parse_args().conns)

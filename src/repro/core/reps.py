@@ -208,6 +208,100 @@ def state_footprint_bits(cfg: REPSConfig) -> dict[str, int]:
     }
 
 
+def pack_state(cfg: REPSConfig, state: REPSState) -> "np.ndarray":
+    """Bit-pack a REPSState into the paper's Table 1 layout: one
+    ``(N, total_bytes_ceil)`` uint8 row per connection — 25 bytes at the
+    default 8-deep buffer.  This is the *measured* counterpart of
+    ``state_footprint_bits``: ``pack_state(...).nbytes / N`` is the
+    footprint the Table 1 scale benchmark and tests/test_scale_mode.py
+    assert on, and ``unpack_state`` round-trips it losslessly, so the
+    layout provably holds the full algorithmic state.
+
+    Field widths (per conn): ``buffer_size`` × (16-bit EV + 1 validity
+    bit), 8-bit head, 8-bit num_valid, 32-bit exit_freezing, 1-bit
+    is_freezing, 8-bit explore_counter, plus ONE extra bit beyond Table 1:
+    ``ever_cached`` — the implementation's monotone ``n_cached`` counter is
+    only ever read as ``n_cached == 0`` (the Alg. 2 isEmpty check), so the
+    packed form stores that single bit and ``unpack_state`` reconstructs
+    ``n_cached`` as the indicator (0 or 1): exact on every
+    algorithm-visible field, 194 bits total, same 25-byte ceiling.
+    Requires ``evs_size <= 2**16`` and ``buffer_size``/``num_pkts_bdp``
+    < 256 (asserted).
+    """
+    import numpy as np
+
+    B = cfg.buffer_size
+    assert cfg.evs_size <= 1 << 16, "EV does not fit the 16-bit field"
+    assert B < 256 and cfg.num_pkts_bdp < 256, "8-bit counters overflow"
+    n = int(state.head.shape[0])
+
+    def bits(vals, width):  # (N,) uint -> (N, width) little-endian bits
+        v = np.asarray(vals, np.uint32)
+        return (v[:, None] >> np.arange(width, dtype=np.uint32)) & 1
+
+    cols = []
+    ev = np.asarray(state.buf_ev, np.uint32)
+    valid = np.asarray(state.buf_valid)
+    for b in range(B):
+        cols.append(bits(ev[:, b], 16))
+        cols.append(valid[:, b : b + 1].astype(np.uint32))
+    cols += [
+        bits(state.head, 8),
+        bits(state.num_valid, 8),
+        bits(np.asarray(state.exit_freezing, np.int64) & 0xFFFFFFFF, 32),
+        np.asarray(state.is_freezing).astype(np.uint32).reshape(n, 1),
+        bits(state.explore_counter, 8),
+        (np.asarray(state.n_cached) > 0).astype(np.uint32).reshape(n, 1),
+    ]
+    stream = np.concatenate(cols, axis=1).astype(np.uint8)
+    assert stream.shape[1] == state_footprint_bits(cfg)["total_bits"] + 1
+    return np.packbits(stream, axis=1, bitorder="little")
+
+
+def unpack_state(cfg: REPSConfig, packed: "np.ndarray") -> REPSState:
+    """Inverse of ``pack_state``: exact on every algorithm-visible field
+    (``n_cached`` comes back as its 0/1 isEmpty indicator — see
+    ``pack_state``)."""
+    import numpy as np
+
+    B = cfg.buffer_size
+    n = packed.shape[0]
+    total = state_footprint_bits(cfg)["total_bits"] + 1
+    stream = np.unpackbits(packed, axis=1, bitorder="little")[:, :total]
+
+    pos = 0
+
+    def take(width):
+        nonlocal pos
+        chunk = stream[:, pos : pos + width].astype(np.uint32)
+        pos += width
+        return (chunk << np.arange(width, dtype=np.uint32)).sum(
+            axis=1, dtype=np.uint32
+        )
+
+    buf_ev = np.empty((n, B), np.int32)
+    buf_valid = np.empty((n, B), bool)
+    for b in range(B):
+        buf_ev[:, b] = take(16).astype(np.int32)
+        buf_valid[:, b] = take(1).astype(bool)
+    head = take(8).astype(np.int32)
+    num_valid = take(8).astype(np.int32)
+    exit_freezing = take(32).astype(np.int32)
+    is_freezing = take(1).astype(bool)
+    explore_counter = take(8).astype(np.int32)
+    ever_cached = take(1).astype(np.int32)
+    return REPSState(
+        buf_ev=jnp.asarray(buf_ev),
+        buf_valid=jnp.asarray(buf_valid),
+        head=jnp.asarray(head),
+        num_valid=jnp.asarray(num_valid),
+        explore_counter=jnp.asarray(explore_counter),
+        is_freezing=jnp.asarray(is_freezing),
+        exit_freezing=jnp.asarray(exit_freezing),
+        n_cached=jnp.asarray(ever_cached),
+    )
+
+
 class REPSOracle:
     """Scalar pure-Python oracle transcribing the paper's pseudocode
     literally (used by tests to pin the vectorized version's semantics)."""

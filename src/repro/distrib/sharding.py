@@ -129,6 +129,10 @@ def named_sharding(*logical_axes: Optional[str], shape=None) -> Optional[NamedSh
 # with XLA_FLAGS=--xla_force_host_platform_device_count=N.
 # ---------------------------------------------------------------------------
 SWEEP_AXIS = "rows"
+# Second mesh axis for conn-sharded scale mode (SimConfig.conn_sharding):
+# the *connection* axis of per-conn state shards over it under shard_map —
+# see Simulator.step_scenario(conn_axis=...) and ARCHITECTURE.md §10.
+CONN_AXIS = "conns"
 
 
 def sweep_mesh(max_devices: Optional[int] = None) -> Optional[Mesh]:
@@ -141,6 +145,32 @@ def sweep_mesh(max_devices: Optional[int] = None) -> Optional[Mesh]:
     if n <= 1:
         return None
     return Mesh(np.asarray(devs[:n]), (SWEEP_AXIS,))
+
+
+def sweep_conn_mesh(
+    conn_devices: int, max_devices: Optional[int] = None
+) -> Mesh:
+    """2-D ``(rows, conns)`` mesh for conn-sharded sweeps: row-parallel
+    scenario rows on the major axis, the connection state axis sharded over
+    the minor ``CONN_AXIS``.  Raises when fewer than ``conn_devices``
+    devices are visible (conn sharding cannot silently degrade — results
+    would still be bit-identical, but the memory contract would not hold).
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if max_devices is None else max(1, min(max_devices, len(devs)))
+    conn_devices = int(conn_devices)
+    assert conn_devices >= 1
+    if conn_devices > n:
+        raise ValueError(
+            f"conn_devices={conn_devices} exceeds the {n} visible devices "
+            "(on CPU CI materialize more with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    rows = n // conn_devices
+    grid = np.asarray(devs[: rows * conn_devices]).reshape(rows, conn_devices)
+    return Mesh(grid, (SWEEP_AXIS, CONN_AXIS))
 
 
 def pad_rows(n_rows: int, mesh: Optional[Mesh]) -> int:

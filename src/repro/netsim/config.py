@@ -24,6 +24,41 @@ def us_to_ticks(us: float) -> int:
     return ns_to_ticks(us * 1000.0)
 
 
+INT32_MAX = 2**31 - 1
+
+
+def checked_auto_pkt_slots(
+    n_conns: int, max_cwnd_pkts: int, n_hosts: int, pin: int = 0
+) -> int:
+    """THE packet-slot auto-sizing rule (``pkt_slots = n_conns * max_cwnd
+    + slack``, rounded to a power of two), computed in python ints and
+    validated against the engine's int32 slot namespace.
+
+    The packet table, the free list and every slot index the engine
+    scatters through are int32; near 10⁶ connections the raw product
+    ``n_conns * max_cwnd_pkts`` crosses 2³¹ long before any array is
+    allocated, and an unchecked ``np.int32`` cast would wrap silently.
+    Raises ``ValueError`` naming the inputs instead.
+    """
+    raw = int(n_conns) * int(max_cwnd_pkts) + 4 * int(n_hosts) + 64
+    if pin:
+        slots = int(pin)
+    else:
+        import math
+
+        slots = 1 << max(1, math.ceil(math.log2(max(raw, 2))))
+    if slots > INT32_MAX:
+        raise ValueError(
+            f"pkt_slots auto-sizing overflows int32: n_conns={n_conns} * "
+            f"max_cwnd_pkts={max_cwnd_pkts} + slack -> {raw} pkt slots "
+            f"(pow2 {slots}), but slot indices are int32 (max {INT32_MAX}). "
+            "Pin SimConfig.pkt_slots to an explicit budget (e.g. with "
+            "conn_sharding=True, where the active-set cap bounds live "
+            "packets) or reduce n_conns/max_cwnd_pkts."
+        )
+    return slots
+
+
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     # --- topology ---------------------------------------------------------
@@ -35,6 +70,13 @@ class SimConfig:
     tors_per_pod: int = 4
     aggs_per_pod: int = 4
     agg_uplinks: int = 4  # cores per agg
+    # Generated fabric (netsim/topogen.py): empty string = the built-in
+    # arithmetic fat-tree above; otherwise a deterministic generator spec
+    # like "clos3:pods=4,tors=2,hosts=4,aggs=2,up=2", "rail:..." or
+    # "mesh:...".  The spec string (not the generated tables) lives on the
+    # config so SimConfig stays frozen/hashable and `replace()`-able; the
+    # generator is pure, so equal strings always build identical fabrics.
+    fabric: str = ""
 
     # --- timing -----------------------------------------------------------
     hop_latency_ticks: int = 12  # 500 ns link + 500 ns switch
@@ -66,6 +108,23 @@ class SimConfig:
 
     # --- engine sizing ---------------------------------------------------------
     pkt_slots: int = 0  # 0 = auto (n_conns * max_cwnd + slack)
+    # --- conn-scale mode --------------------------------------------------
+    # Opt-in million-connection mode (ARCHITECTURE.md §10).  When True the
+    # engine (a) iterates the packet table through a sparse active-slot set
+    # so per-tick cost tracks live traffic instead of pkt_slots width, and
+    # (b) accepts a conn-axis mesh (distrib.sharding.CONN_AXIS) that shards
+    # per-connection state storage across devices under shard_map.  Off by
+    # default: at figure scales every committed BENCH row and parity test
+    # runs the dense path byte-for-byte.  With the active-set cap at its
+    # auto size the sparse path is itself bit-identical to the dense path
+    # whenever the cap does not bind (tests/test_scale_mode.py locks this).
+    conn_sharding: bool = False
+    # Sparse active-set capacity (conn_sharding only): max packet slots
+    # live at once.  0 = auto — min(pkt_slots, pow2 of the slot-lifetime
+    # bound NH * (rto + drain + ack slack)); injection beyond the cap
+    # alloc-fails (counted in s_alloc_fail) exactly like free-list
+    # exhaustion, and never silently drops an allocated slot.
+    active_slots: int = 0
     # Shape pins for the sweep engine's bucketing (netsim/sweep.py): padding
     # two scenarios to one compiled shape requires the *derived* static sizes
     # (per-conn bitmap width, host conn-table width) to match too, or the

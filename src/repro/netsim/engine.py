@@ -66,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.load_balancers import LoadBalancer
-from repro.netsim.config import SimConfig
+from repro.netsim.config import INT32_MAX, SimConfig, checked_auto_pkt_slots
 from repro.netsim.topology import Topology
 
 # packet states
@@ -385,6 +385,13 @@ class SimState(NamedTuple):
     fl_count: jax.Array
     # cumulative stats, fused into one vector (N_STATS,)
     s_stats: jax.Array
+    # sparse active-slot set (conn-scale mode, ARCHITECTURE.md §10):
+    # as_idx is the ascending, NP-padded list of currently allocated packet
+    # slots and as_count the number of real entries.  Dense mode carries
+    # the empty placeholder ((0,) / scalar 0) so the pytree structure —
+    # and therefore every compiled sweep shape — is mode-independent.
+    as_idx: jax.Array  # (A,) int32, sorted, NP-padded (dense: (0,))
+    as_count: jax.Array  # () int32
 
     # ---- unpacked views (read-only compat accessors) ---------------------
     @property
@@ -561,9 +568,32 @@ class Simulator:
             self.MSG = auto_msg
         self.NQ = self.topo.n_queues
         self.NH = cfg.n_hosts
-        self.NP = cfg.pkt_slots or int(
-            2 ** np.ceil(np.log2(NC * cfg.max_cwnd_pkts + 4 * self.NH + 64))
-        )
+        if cfg.conn_sharding:
+            # Scale mode: live packet slots are bounded by slot *lifetime*
+            # (injection admits ≤ NH/tick and every slot frees within
+            # rto + drain + feedback latency of its send), not by
+            # NC * max_cwnd — so the auto size caps at the lifetime bound
+            # and a million-conn run no longer allocates a 2^28-slot table.
+            # At figure scales the conn-based size is the smaller of the
+            # two, so the auto rule (and every result) is unchanged there.
+            bound = self._active_bound()
+            conn_auto = int(
+                2 ** np.ceil(np.log2(NC * cfg.max_cwnd_pkts + 4 * self.NH + 64))
+            )
+            self.NP = int(cfg.pkt_slots) if cfg.pkt_slots else min(conn_auto, bound)
+            if self.NP > INT32_MAX:
+                raise ValueError(
+                    f"pkt_slots={self.NP} exceeds the int32 slot namespace "
+                    f"(max {INT32_MAX})"
+                )
+            self.A = min(int(cfg.active_slots) if cfg.active_slots else bound, self.NP)
+        else:
+            # dense mode: THE auto rule, python-int checked against int32
+            # (near 10**6 conns the raw product wraps silently otherwise)
+            self.NP = checked_auto_pkt_slots(
+                NC, cfg.max_cwnd_pkts, self.NH, pin=cfg.pkt_slots
+            )
+            self.A = 0
         # MAX_ARR is RNG-visible (the per-arrival RED uniform draw has
         # shape (MAX_ARR,), and jax threefry draws are not prefix-stable),
         # so it keeps the seed engine's generous bound for bit-parity.
@@ -583,11 +613,33 @@ class Simulator:
         self.MAX_EV = self.NH + (self.MAX_ARR if cfg.trimming else 0)
         self.MAX_FREE = self.MAX_EV + self.NQ + self.MAX_ARR + self.NH
 
-        # host -> local conn table
-        by_host: list[list[int]] = [[] for _ in range(self.NH)]
-        for c in range(NC):
-            by_host[int(workload.src[c])].append(c)
-        auto_cph = max(1, max(len(v) for v in by_host) if NC else 1)
+        # int32 audit: the widest flattened segment-id / sort-key spaces the
+        # tick builds (feedback (round, conn) table; seg-rank's
+        # seg * K + iota sort keys).  Computed in python ints — near 10**6
+        # conns these cross 2**31 long before any array exists, and a
+        # wrapped id would scatter into the wrong connection silently.
+        widest = max(
+            (cfg.feedback_rounds + 1) * (NC + 1),
+            (NC + 1) * (self.MAX_EV + 1),
+            (self.NQ + 1) * (self.MAX_ARR + 1),
+        )
+        if widest > INT32_MAX:
+            raise ValueError(
+                f"per-tick segment-id space overflows int32: n_conns={NC}, "
+                f"n_queues={self.NQ}, max events/tick {self.MAX_EV}, "
+                f"max arrivals/tick {self.MAX_ARR} -> widest id {widest} > "
+                f"{INT32_MAX}. Reduce the topology/connection count."
+            )
+
+        # host -> local conn table (vectorized — the per-conn python loop
+        # this replaces dominated build time near 10**6 conns)
+        src = np.asarray(workload.src, np.int64)
+        counts = (
+            np.bincount(src, minlength=self.NH)
+            if NC
+            else np.zeros(self.NH, np.int64)
+        )
+        auto_cph = int(max(1, counts.max())) if NC else 1
         if cfg.conns_per_host:
             assert cfg.conns_per_host >= auto_cph, (
                 f"conns_per_host={cfg.conns_per_host} < required {auto_cph}"
@@ -596,8 +648,14 @@ class Simulator:
         else:
             self.CPH = auto_cph
         hc = np.full((self.NH, self.CPH), -1, np.int32)
-        for h, v in enumerate(by_host):
-            hc[h, : len(v)] = v
+        if NC:
+            # stable sort by host keeps conn-id order within each host —
+            # identical fill to the per-host append loop it replaces
+            order = np.argsort(src, kind="stable")
+            starts = np.zeros(self.NH, np.int64)
+            starts[1:] = np.cumsum(counts)[:-1]
+            rank = np.arange(NC, dtype=np.int64) - starts[src[order]]
+            hc[src[order], rank] = order
         self.host_conns = jnp.asarray(hc)
 
         self.conn_src = jnp.asarray(workload.src.astype(np.int32))
@@ -635,6 +693,29 @@ class Simulator:
         self.base_key = jax.random.PRNGKey(seed)
 
     # ------------------------------------------------------------------
+    def _active_bound(self) -> int:
+        """Pow2 bound on simultaneously-allocated packet slots (conn-scale
+        mode): injection admits ≤ NH packets per tick and every slot frees
+        within one lifetime of its send — worst-case path drain
+        (diameter hops, each ≤ hop latency + a full queue at degraded
+        half-rate) plus the feedback return delay, with RTO as the hard
+        backstop for silent losses.  LOST_WAIT slots of already-completed
+        connections leak past this bound (their RTO never fires — same as
+        dense mode, where NP slack absorbs them); if a long lossy soak
+        fills the cap, injection alloc-fails *visibly* (s_alloc_fail)
+        rather than corrupting state.
+        """
+        cfg = self.cfg
+        lifetime = (
+            cfg.rto_ticks
+            + cfg.ack_delay_ticks
+            + cfg.nack_delay_ticks
+            + self.topo.diameter * (cfg.hop_latency_ticks + 2 * cfg.queue_capacity)
+        )
+        raw = self.NH * lifetime + 4 * self.NH + 64
+        return int(2 ** np.ceil(np.log2(max(raw, 2))))
+
+    # ------------------------------------------------------------------
     def init_state(self, key: jax.Array | None = None) -> SimState:
         NP, NQ, NC, NH = self.NP, self.NQ, self.wl.n_conns, self.NH
         cfg = self.cfg
@@ -664,6 +745,8 @@ class Simulator:
             fl_head=jnp.zeros((), i32),
             fl_count=jnp.asarray(NP, i32),
             s_stats=jnp.zeros((N_STATS,), i32),
+            as_idx=jnp.full((self.A,), NP, i32),
+            as_count=jnp.zeros((), i32),
         )
 
     # ------------------------------------------------------------------
@@ -772,6 +855,54 @@ class Simulator:
         ].add(vals, mode="drop")
 
     # ------------------------------------------------------------------
+    # Conn-sharded bitmap indirection (scale mode).  Under a conn-axis mesh
+    # the (NC, MSG) rtx/rcv bitmaps are the only per-conn state too large
+    # to replicate, so they stay device-local and every access goes through
+    # these four helpers: each device answers for the conn rows it owns and
+    # a psum-OR reconstructs the full-shape value the tick body expects
+    # (scatters simply drop on non-owners).  With conn_axis=None each
+    # helper IS the dense expression it replaces, byte-for-byte.
+    def _bm_local(self, bmap, conns, conn_axis):
+        NCd = bmap.shape[0]
+        off = jax.lax.axis_index(conn_axis) * NCd
+        loc = conns - off
+        inr = (loc >= 0) & (loc < NCd)
+        return jnp.where(inr, loc, NCd), inr
+
+    def _bm_get(self, bmap, conns, seqs, conn_axis):
+        """``bmap.at[conns, seqs].get(mode="fill", fill_value=True)``."""
+        if conn_axis is None:
+            return bmap.at[conns, seqs].get(mode="fill", fill_value=True)
+        loc, inr = self._bm_local(bmap, conns, conn_axis)
+        got = bmap.at[loc, seqs].get(mode="fill", fill_value=False)
+        hit = jax.lax.psum((inr & got).astype(jnp.int32), conn_axis) > 0
+        return hit | (conns >= self.wl.n_conns) | (conns < 0)
+
+    def _bm_max(self, bmap, conns, seqs, vals, conn_axis):
+        """``bmap.at[conns, seqs].max(vals, mode="drop")``."""
+        if conn_axis is None:
+            return bmap.at[conns, seqs].max(vals, mode="drop")
+        loc, _ = self._bm_local(bmap, conns, conn_axis)
+        return bmap.at[loc, seqs].max(vals, mode="drop")
+
+    def _bm_set_false(self, bmap, conns, seqs, conn_axis):
+        """``bmap.at[conns, seqs].set(False, mode="drop")``."""
+        if conn_axis is None:
+            return bmap.at[conns, seqs].set(False, mode="drop")
+        loc, _ = self._bm_local(bmap, conns, conn_axis)
+        return bmap.at[loc, seqs].set(False, mode="drop")
+
+    def _bm_rows(self, bmap, conns, conn_axis):
+        """``bmap[conns]`` — full (K, MSG) bool rows; callers pass in-range
+        conn ids only."""
+        if conn_axis is None:
+            return bmap[conns]
+        loc, inr = self._bm_local(bmap, conns, conn_axis)
+        rows = bmap.at[loc].get(mode="fill", fill_value=False)
+        rows = jnp.where(inr[:, None], rows, False)
+        return jax.lax.psum(rows.astype(jnp.int32), conn_axis) > 0
+
+    # ------------------------------------------------------------------
     def tick_fn(self, state: SimState, tick: jax.Array) -> tuple[SimState, TickTrace]:
         return self._step(state, tick, self.base_key)
 
@@ -787,6 +918,7 @@ class Simulator:
         base_key: jax.Array,
         scn: ScenarioArrays,
         emit_events: bool = False,
+        conn_axis: str | None = None,
     ) -> tuple:
         """One tick, pure in (state, tick, key, scenario arrays).
 
@@ -803,6 +935,17 @@ class Simulator:
         LB-state diffs around the three LB call sites (``fold_in`` key
         derivation consumes no randomness and the trace port draws none, so
         the (state, trace) pair is bit-identical either way).
+
+        ``conn_axis`` (static) names the mesh axis the *connection* state
+        axis is sharded over (scale mode, inside ``shard_map``): small
+        (NC,) per-conn vectors and the scn conn tables arrive as local
+        shards, are all_gathered to full shape at entry and sliced back at
+        exit — so every RNG draw keeps its full, shard-count-independent
+        shape and results stay bit-identical to the unsharded run — while
+        the (NC, MSG) rtx/rcv bitmaps (the dominant per-conn storage) stay
+        device-local behind the ``_bm_*`` psum indirection.  ``lb_state``
+        is replicated: LBs draw (NC,)-shaped randoms internally, so
+        sharding it would change draw shapes and break parity.
         """
         cfg, topo = self.cfg, self.topo
         NP, NQ, NH = self.NP, self.NQ, self.NH
@@ -812,13 +955,54 @@ class Simulator:
         key = jax.random.fold_in(base_key, tick)
 
         pkt = state.pkt
-        state_at_entry = pkt[PS]
         (
             qbuf, q_head, q_len, q_served,
             c_inflight, c_next_new, c_delivered, c_rx_pending, c_done,
             c_done_tick, c_rtx_count, c_rtx, c_rcv, c_cwnd, c_alpha,
             h_rr, lb_state, fl, fl_head, fl_count, s_stats,
+            as_idx, as_count,
         ) = state[1:]
+
+        if conn_axis is not None:
+            # conn-sharded entry: gather the small per-conn leaves to full
+            # shape (collective cost O(NC) scalars/tick; the (NC, MSG)
+            # bitmaps stay local).  NCd/coff identify this device's block.
+            NCd = c_inflight.shape[0]
+            coff = jax.lax.axis_index(conn_axis) * NCd
+
+            def cgather(x):
+                return jax.lax.all_gather(x, conn_axis, axis=0, tiled=True)
+
+            (c_inflight, c_next_new, c_delivered, c_rx_pending, c_done,
+             c_done_tick, c_rtx_count, c_cwnd, c_alpha) = (
+                cgather(c_inflight), cgather(c_next_new),
+                cgather(c_delivered), cgather(c_rx_pending),
+                cgather(c_done), cgather(c_done_tick),
+                cgather(c_rtx_count), cgather(c_cwnd), cgather(c_alpha),
+            )
+            scn = scn._replace(
+                conn_src=cgather(scn.conn_src),
+                conn_dst=cgather(scn.conn_dst),
+                conn_msg=cgather(scn.conn_msg),
+                conn_start=cgather(scn.conn_start),
+                conn_dep=cgather(scn.conn_dep),
+            )
+
+        sparse = bool(cfg.conn_sharding)
+        if sparse:
+            # scale mode: stages 1/2/4/6 iterate the packet table through
+            # the sorted active-slot set (A entries) instead of dense (NP,)
+            # masks — per-tick cost tracks live traffic, not table width.
+            # Compaction works on positions-within-as_idx, then maps back
+            # through as_idx; because as_idx is kept ascending, the
+            # compacted slot sequences are identical to the dense path's,
+            # and with A == NP the whole mode is bit-identical to dense.
+            asx = jnp.minimum(as_idx, NP - 1)
+            as_valid = as_idx < NP
+            asg = jnp.where(as_valid, as_idx, NP)  # scatter-drop form
+            entry_ps_a = jnp.where(as_valid, pkt[PS, asx], FREE)
+        else:
+            state_at_entry = pkt[PS]
 
         if emit_events:
             from repro.core.load_balancers import N_TRACE_KINDS
@@ -826,9 +1010,18 @@ class Simulator:
             lb_counts = jnp.zeros((N_TRACE_KINDS,), jnp.int32)
 
         # =============== 1. feedback (ACK / NACK) =====================
-        p_state = pkt[PS]
-        due = ((p_state == IN_ACK) | (p_state == IN_NACK)) & (pkt[PEVT] == now)
-        e_idx = self._compact(due, self.MAX_EV)
+        if sparse:
+            ps_a = entry_ps_a
+            evt_a = pkt[PEVT, asx]
+            due_a = as_valid & ((ps_a == IN_ACK) | (ps_a == IN_NACK)) & (evt_a == now)
+            e_pos = self._compact(due_a, self.MAX_EV)
+            e_idx = jnp.where(
+                e_pos < self.A, as_idx[jnp.minimum(e_pos, self.A - 1)], NP
+            )
+        else:
+            p_state = pkt[PS]
+            due = ((p_state == IN_ACK) | (p_state == IN_NACK)) & (pkt[PEVT] == now)
+            e_idx = self._compact(due, self.MAX_EV)
         e_valid = e_idx < NP
         E = pkt[:, jnp.minimum(e_idx, NP - 1)]  # (PF, MAX_EV) one gather
         e_conn = jnp.where(e_valid, E[PCONN], NC)  # NC = sentinel segment
@@ -864,10 +1057,10 @@ class Simulator:
             jnp.where(e_is_ack, e_rtt, 0),
         ]
         if cfg.trimming:
-            already = c_rcv.at[e_conn, e_seq].get(mode="fill", fill_value=True)
+            already = self._bm_get(c_rcv, e_conn, e_seq, conn_axis)
             need_rtx = e_is_nack & ~already
-            prev_rtx = c_rtx.at[e_conn, e_seq].get(mode="fill", fill_value=True)
-            c_rtx = c_rtx.at[e_conn, e_seq].max(need_rtx, mode="drop")
+            prev_rtx = self._bm_get(c_rtx, e_conn, e_seq, conn_axis)
+            c_rtx = self._bm_max(c_rtx, e_conn, e_seq, need_rtx, conn_axis)
             fields += [
                 (need_rtx & ~prev_rtx).astype(jnp.int32),
                 e_is_nack.astype(jnp.int32),
@@ -911,34 +1104,54 @@ class Simulator:
             (e_is_ack & (e_rank >= R_fb)).astype(jnp.int32)
         )
 
-        # free all feedback slots
-        p_state = jnp.where(due, FREE, p_state)
-
         # =============== 2. RTO ========================================
-        p_conn = pkt[PCONN]
-        p_orphan = pkt[PORPH] == 1
-        active_data = (p_state == FLYING) | (p_state == QUEUED) | (p_state == LOST_WAIT)
-        conn_done_of_pkt = c_done[jnp.clip(p_conn, 0, NC - 1)]
-        rto = (
-            active_data
-            & ~p_orphan
-            & ((now - pkt[PSEND]) >= cfg.rto_ticks)
-            & ~conn_done_of_pkt
-        )
         # A packet fires its RTO exactly at send_tick + rto_ticks (send_tick
         # is set once at injection and eligibility blockers — orphan, conn
         # done — are permanent), and injection admits ≤ 1 packet per host
         # per tick, so ≤ NH packets fire per tick: compact to NH rows and
         # keep every scatter narrow instead of full packet-table width.
-        r_idx = self._compact(rto, NH)
+        if sparse:
+            ps_a = jnp.where(due_a, FREE, ps_a)  # free feedback slots
+            porph_a = pkt[PORPH, asx] == 1
+            active_a = (ps_a == FLYING) | (ps_a == QUEUED) | (ps_a == LOST_WAIT)
+            cdone_a = c_done[jnp.clip(pkt[PCONN, asx], 0, NC - 1)]
+            rto_a = (
+                active_a
+                & ~porph_a
+                & ((now - pkt[PSEND, asx]) >= cfg.rto_ticks)
+                & ~cdone_a
+                & as_valid
+            )
+            r_pos = self._compact(rto_a, NH)
+            r_idx = jnp.where(
+                r_pos < self.A, as_idx[jnp.minimum(r_pos, self.A - 1)], NP
+            )
+            timeouts_d = jnp.sum(rto_a.astype(jnp.int32))
+        else:
+            # free all feedback slots
+            p_state = jnp.where(due, FREE, p_state)
+            p_conn = pkt[PCONN]
+            p_orphan = pkt[PORPH] == 1
+            active_data = (p_state == FLYING) | (p_state == QUEUED) | (p_state == LOST_WAIT)
+            conn_done_of_pkt = c_done[jnp.clip(p_conn, 0, NC - 1)]
+            rto = (
+                active_data
+                & ~p_orphan
+                & ((now - pkt[PSEND]) >= cfg.rto_ticks)
+                & ~conn_done_of_pkt
+            )
+            r_idx = self._compact(rto, NH)
+            timeouts_d = jnp.sum(rto.astype(jnp.int32))
         r_valid = r_idx < NP
         Rp = pkt[:, jnp.minimum(r_idx, NP - 1)]  # (PF, NH)
         r_conn = jnp.where(r_valid, Rp[PCONN], NC)
         r_seq = jnp.where(r_valid, Rp[PSEQ], 0)
-        rcv_already = c_rcv.at[r_conn, r_seq].get(mode="fill", fill_value=True)
+        rcv_already = self._bm_get(c_rcv, r_conn, r_seq, conn_axis)
         rto_need = r_valid & ~rcv_already
-        prev_rtx_p = c_rtx.at[r_conn, r_seq].get(mode="fill", fill_value=True)
-        c_rtx = c_rtx.at[jnp.where(rto_need, r_conn, NC), r_seq].max(rto_need, mode="drop")
+        prev_rtx_p = self._bm_get(c_rtx, r_conn, r_seq, conn_axis)
+        c_rtx = self._bm_max(
+            c_rtx, jnp.where(rto_need, r_conn, NC), r_seq, rto_need, conn_axis
+        )
         rsum_rto = self._seg_sum_b(
             r_conn,
             jnp.stack([
@@ -961,13 +1174,19 @@ class Simulator:
             lb_counts = lb_counts + self.lb.trace(
                 "timeout", prev_lb, lb_state, rto_per_conn > 0
             )
-        timeouts_d = jnp.sum(rto.astype(jnp.int32))
         # orphan in-network packets; free LOST_WAIT ones — write the two
-        # dense packet columns (state / orphan) back once
-        p_orphan = p_orphan | rto
-        p_state = jnp.where(rto & (p_state == LOST_WAIT), FREE, p_state)
-        pkt = pkt.at[PS].set(p_state)
-        pkt = pkt.at[PORPH].set(p_orphan.astype(jnp.int32))
+        # packet columns (state / orphan) back once (active rows only in
+        # sparse mode; untracked slots are FREE and untouched either way)
+        if sparse:
+            porph_a = porph_a | rto_a
+            ps_a = jnp.where(rto_a & (ps_a == LOST_WAIT), FREE, ps_a)
+            pkt = pkt.at[PS, asg].set(ps_a, mode="drop")
+            pkt = pkt.at[PORPH, asg].set(porph_a.astype(jnp.int32), mode="drop")
+        else:
+            p_orphan = p_orphan | rto
+            p_state = jnp.where(rto & (p_state == LOST_WAIT), FREE, p_state)
+            pkt = pkt.at[PS].set(p_state)
+            pkt = pkt.at[PORPH].set(p_orphan.astype(jnp.int32))
 
         # =============== 3. service / dequeue ===========================
         f_active = (now >= scn.f_start) & (now < scn.f_end)
@@ -1024,8 +1243,10 @@ class Simulator:
         # are all sentinel/False no-ops, and scatter cost is rows × K
         fin = slice(topo.t0_down_base, NQ)
         was_done = c_done.at[dconn].get(mode="fill", fill_value=True)
-        newly = is_final & ~c_rcv.at[dconn, dseq].get(mode="fill", fill_value=True)
-        c_rcv = c_rcv.at[dconn[fin], dseq[fin]].max(is_final[fin], mode="drop")
+        newly = is_final & ~self._bm_get(c_rcv, dconn, dseq, conn_axis)
+        c_rcv = self._bm_max(
+            c_rcv, dconn[fin], dseq[fin], is_final[fin], conn_axis
+        )
         delivered_d = jnp.sum(newly.astype(jnp.int32))
         deliver_ackable = is_final & ~d_orph & ~was_done
         msg_of = scn.conn_msg.at[dconn].get(mode="fill", fill_value=BIG)
@@ -1086,9 +1307,20 @@ class Simulator:
         pkt = pkt.at[:, pid].set(Dn, mode="drop")
 
         # =============== 4. arrivals / enqueue ==========================
-        p_state = pkt[PS]
-        arr = (p_state == FLYING) & (pkt[PEVT] == now)
-        a_idx = self._compact(arr, self.MAX_ARR)
+        if sparse:
+            arr_a = (
+                as_valid
+                & (pkt[PS, asx] == FLYING)
+                & (pkt[PEVT, asx] == now)
+            )
+            a_pos = self._compact(arr_a, self.MAX_ARR)
+            a_idx = jnp.where(
+                a_pos < self.A, as_idx[jnp.minimum(a_pos, self.A - 1)], NP
+            )
+        else:
+            p_state = pkt[PS]
+            arr = (p_state == FLYING) & (pkt[PEVT] == now)
+            a_idx = self._compact(arr, self.MAX_ARR)
         a_valid = a_idx < NP
         A = pkt[:, jnp.minimum(a_idx, NP - 1)]  # (PF, MAX_ARR)
         a_conn = jnp.where(a_valid, A[PCONN], 0)
@@ -1181,6 +1413,13 @@ class Simulator:
         # free-slot allocation (ring pop)
         srank = jnp.cumsum(any_pick.astype(jnp.int32)) - 1
         can_alloc = srank < fl_count
+        if sparse:
+            # active-set capacity gate.  Since every non-FREE slot is
+            # tracked, as_count + fl_count == NP always — so with A == NP
+            # this conjunct is exactly `srank < fl_count` again and the
+            # sparse path stays bit-identical to dense; when A binds, the
+            # overflow surfaces as counted alloc-fails, never lost slots.
+            can_alloc = can_alloc & (as_count + srank < self.A)
         sendh = any_pick & can_alloc
         alloc_fail_d = jnp.sum((any_pick & ~can_alloc).astype(jnp.int32))
         n_alloc = jnp.sum(sendh.astype(jnp.int32))
@@ -1195,12 +1434,12 @@ class Simulator:
         # seq selection: retransmissions first
         pick_cc = jnp.clip(pick_conn, 0, NC - 1)
         use_rtx = c_rtx_count[pick_cc] > 0
-        rtx_rows = c_rtx[pick_cc]  # (NH, MSG)
+        rtx_rows = self._bm_rows(c_rtx, pick_cc, conn_axis)  # (NH, MSG)
         rtx_seq = jnp.argmax(rtx_rows, axis=1).astype(jnp.int32)
         new_seq = c_next_new[pick_cc]
         seq = jnp.where(use_rtx, rtx_seq, new_seq)
-        c_rtx = c_rtx.at[jnp.where(sendh & use_rtx, pick_conn, NC), rtx_seq].set(
-            False, mode="drop"
+        c_rtx = self._bm_set_false(
+            c_rtx, jnp.where(sendh & use_rtx, pick_conn, NC), rtx_seq, conn_axis
         )
         # each host picks <= 1 conn and a conn lives on one host, so
         # per-conn injection counts are 0/1: one stacked segment-sum covers
@@ -1248,13 +1487,21 @@ class Simulator:
         pkt = pkt.at[:, wslot].set(W, mode="drop")
 
         # =============== 6. free-list push ==============================
-        freed = (pkt[PS] == FREE) & (state_at_entry != FREE)
         # slots popped and re-used this tick are FLYING now, not FREE — no
         # conflict with the push below.
-        f_idx2 = self._compact(freed, self.MAX_FREE)
+        if sparse:
+            fs_a = jnp.where(as_valid, pkt[PS, asx], FREE)  # post-tick states
+            freed_a = as_valid & (fs_a == FREE) & (entry_ps_a != FREE)
+            f_pos = self._compact(freed_a, self.MAX_FREE)
+            f_idx2 = jnp.where(
+                f_pos < self.A, as_idx[jnp.minimum(f_pos, self.A - 1)], NP
+            )
+        else:
+            freed = (pkt[PS] == FREE) & (state_at_entry != FREE)
+            f_idx2 = self._compact(freed, self.MAX_FREE)
         f_val = f_idx2 < NP
         n_freed = jnp.sum(f_val.astype(jnp.int32))
-        if self.MAX_FREE <= NP:
+        if self.MAX_FREE <= NP and not sparse:
             # the push targets a contiguous (mod NP) ring segment, so it is
             # a rotate + static-slice blend + rotate back — a scatter here
             # would serialize over MAX_FREE rows per sweep lane on CPU/TPU
@@ -1266,11 +1513,24 @@ class Simulator:
                 rot[: self.MAX_FREE],
             )
             fl = jnp.roll(rot.at[: self.MAX_FREE].set(head), start)
-        else:  # tiny pkt_slots pin: fall back to the positional scatter
+        else:
+            # positional scatter: O(MAX_FREE) instead of the O(NP) roll —
+            # always in sparse mode (that roll is exactly the dense cost
+            # the active set removes), or under a tiny pkt_slots pin.
+            # Both branches write identical fl contents.
             frank = jnp.cumsum(f_val.astype(jnp.int32)) - 1
             fpos = (fl_head + fl_count + frank) % NP
             fl = fl.at[jnp.where(f_val, fpos, NP)].set(f_idx2, mode="drop")
         fl_count = fl_count + n_freed
+
+        if sparse:
+            # active-set maintenance: drop freed slots, add this tick's
+            # allocations (wslot), re-sort ascending.  Real entries ≤ A by
+            # the injection gate; NP sentinels sort to the tail.
+            alive = as_valid & (fs_a != FREE)
+            cand = jnp.concatenate([jnp.where(alive, as_idx, NP), wslot])
+            as_idx = jnp.sort(cand)[: self.A]
+            as_count = jnp.sum(alive.astype(jnp.int32)) + n_alloc
 
         # =============== 7. fused stats update ==========================
         s_stats = s_stats + jnp.stack([
@@ -1278,12 +1538,28 @@ class Simulator:
             ecn_marks_d, injected_d, unprocessed, alloc_fail_d,
         ])
 
+        if conn_axis is not None:
+            # conn-sharded exit: hand back only this device's block of the
+            # gathered per-conn vectors (inverse of the entry all_gather —
+            # every device computed the identical full-shape values).
+            def cslice(x):
+                return jax.lax.dynamic_slice_in_dim(x, coff, NCd, axis=0)
+
+            (c_inflight, c_next_new, c_delivered, c_rx_pending, c_done,
+             c_done_tick, c_rtx_count, c_cwnd, c_alpha) = (
+                cslice(c_inflight), cslice(c_next_new),
+                cslice(c_delivered), cslice(c_rx_pending),
+                cslice(c_done), cslice(c_done_tick),
+                cslice(c_rtx_count), cslice(c_cwnd), cslice(c_alpha),
+            )
+
         new_state = SimState(
             pkt,
             qbuf, q_head, q_len, q_served,
             c_inflight, c_next_new, c_delivered, c_rx_pending, c_done,
             c_done_tick, c_rtx_count, c_rtx, c_rcv, c_cwnd, c_alpha,
             h_rr, lb_state, fl, fl_head, fl_count, s_stats,
+            as_idx, as_count,
         )
         trace = TickTrace(
             max_qlen=jnp.max(q_len),
@@ -1347,11 +1623,14 @@ class Simulator:
         tick: jax.Array,
         base_key: jax.Array,
         scn: ScenarioArrays,
+        conn_axis: str | None = None,
     ) -> tuple[SimState, Probe]:
         """One tick that emits a ``Probe`` instead of a host-bound trace —
         the summary-collection analogue of ``step_scenario`` (the unused
-        ``TickTrace`` is dead code XLA eliminates)."""
-        new, _ = self.step_scenario(state, tick, base_key, scn)
+        ``TickTrace`` is dead code XLA eliminates).  Under a conn mesh the
+        probe's (NC,) fields (done_now / fct) are per-device conn shards,
+        consistent with the sharded carry."""
+        new, _ = self.step_scenario(state, tick, base_key, scn, conn_axis=conn_axis)
         return new, self.probe(state, new, tick, scn)
 
     def step_events(
@@ -1360,11 +1639,12 @@ class Simulator:
         tick: jax.Array,
         base_key: jax.Array,
         scn: ScenarioArrays,
+        conn_axis: str | None = None,
     ) -> tuple[SimState, Probe, "TickEvents"]:
         """``step_probe`` plus the flight recorder's ``TickEvents`` — the
         tick body the sweep engine scans when a ``TraceSpec`` is active."""
         new, _, events = self.step_scenario(
-            state, tick, base_key, scn, emit_events=True
+            state, tick, base_key, scn, emit_events=True, conn_axis=conn_axis
         )
         return new, self.probe(state, new, tick, scn), events
 

@@ -91,7 +91,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.load_balancers import SwitchLB, make_lb
 from repro.distrib.sharding import (
-    SWEEP_AXIS, resolve_kernels_backend, sweep_mesh,
+    CONN_AXIS, SWEEP_AXIS, resolve_kernels_backend, sweep_conn_mesh,
+    sweep_mesh,
 )
 from repro.netsim.config import SimConfig
 from repro.netsim.engine import (
@@ -901,6 +902,7 @@ class SweepEngine:
         kernels_backend: str | None = None,
         measured_costs: dict | None = None,
         min_failure_slots: int = 0,
+        conn_devices: int = 1,
     ):
         # ``min_failure_slots`` floors every cell's quantized failure-row
         # count (pow2-rounded like the natural size): headroom for the soak
@@ -908,11 +910,29 @@ class SweepEngine:
         # padded schedule into the reserved inert rows without a shape
         # change), and the knob that makes an injected run and its
         # statically-scheduled equivalent plan identical buckets.
+        #
+        # ``conn_devices`` > 1 (scale mode) shards the *connection* state
+        # axis over the minor axis of a 2-D (rows, conns) mesh — requires
+        # the cfg to opt in via ``conn_sharding=True``; ``devices`` then
+        # bounds the total device count and rows take the rest.  Bit-parity
+        # contract: a conn-sharded row is bit-identical to its unsharded
+        # ``serial_sim`` reference (tests/test_scale_mode.py).
         self.min_failure_slots = int(min_failure_slots)
         self.cfg = cfg
         self.cases = list(cases)
         assert self.cases, "need at least one case"
-        if devices == "auto":
+        self.conn_devices = max(1, int(conn_devices))
+        if self.conn_devices > 1:
+            if not cfg.conn_sharding:
+                raise ValueError(
+                    "conn_devices > 1 requires SimConfig.conn_sharding=True "
+                    "(the scale mode is opt-in; see ARCHITECTURE.md §10)"
+                )
+            self.mesh = sweep_conn_mesh(
+                self.conn_devices,
+                None if devices in ("auto", None) else int(devices),
+            )
+        elif devices == "auto":
             self.mesh = sweep_mesh()
         elif devices in (None, 1):
             self.mesh = None
@@ -966,6 +986,10 @@ class SweepEngine:
         variant = make_lb(case.lb, **_canon_lb_kwargs(case, cfg))
         wl = case.workload
         msg_max = int(wl.msg_pkts.max()) if wl.n_conns else 1
+        # conn-sharded buckets need conn counts divisible by the conn mesh
+        # axis, so the shrink-to-fit exact size rounds up to it (inert pad
+        # conns, same neutral-padding contract as bucket-size padding)
+        nc_exact = _pad_to(max(wl.n_conns, 1), self.conn_devices)
         return CellShape(
             name=case.name,
             ticks=case.ticks,
@@ -977,7 +1001,7 @@ class SweepEngine:
             ),
             w=_pow2(max(len(self._watch_for(case)), 1)),
             rows=len(case.seeds),
-            nc_exact=max(wl.n_conns, 1),
+            nc_exact=nc_exact,
         )
 
     # ------------------------------------------------------------------
@@ -1169,15 +1193,32 @@ class SweepEngine:
         full = collect == "full"
         summary = collect == "summary"
         masked = prog.masked
+        ca = CONN_AXIS if self.conn_devices > 1 else None
+        if ca is not None and summary:
+            raise ValueError(
+                "collect='summary' is incompatible with conn_devices > 1: "
+                "telemetry reducers consume full-width per-conn probe "
+                "vectors (done_now, fct), which are shard-local under conn "
+                "sharding.  Use collect='none' or 'full'."
+            )
         if summary and trace is not None:
-            vstep = jax.vmap(sim.step_events, in_axes=(0, None, 0, 0))
+            vstep = jax.vmap(
+                lambda st, t, k, sc: sim.step_events(st, t, k, sc, conn_axis=ca),
+                in_axes=(0, None, 0, 0),
+            )
             tel_update = jax.vmap(self._tel_prog(prog, spec).update)
             trc_update = jax.vmap(self._trc_prog(prog, trace).update)
         elif summary:
-            vstep = jax.vmap(sim.step_probe, in_axes=(0, None, 0, 0))
+            vstep = jax.vmap(
+                lambda st, t, k, sc: sim.step_probe(st, t, k, sc, conn_axis=ca),
+                in_axes=(0, None, 0, 0),
+            )
             tel_update = jax.vmap(self._tel_prog(prog, spec).update)
         else:
-            vstep = jax.vmap(sim.step_scenario, in_axes=(0, None, 0, 0))
+            vstep = jax.vmap(
+                lambda st, t, k, sc: sim.step_scenario(st, t, k, sc, conn_axis=ca),
+                in_axes=(0, None, 0, 0),
+            )
 
         def freeze(live, new, old):
             # freeze rows past their own horizon: bit-identical to stopping
@@ -1216,17 +1257,49 @@ class SweepEngine:
             return jax.lax.scan(tick, carry, ticks)
 
         if self.mesh is not None:
+            if ca is None:
+                carry_spec = P(SWEEP_AXIS)
+                scn_spec = P(SWEEP_AXIS)
+            else:
+                # per-leaf specs: per-conn leaves shard (rows, conns), the
+                # rest (packet table, queues, LB state, stats) replicate
+                # over the conn axis — matching step_scenario's conn_axis
+                # contract (gather at entry / slice at exit keeps them
+                # device-invariant along CONN_AXIS).
+                carry_spec = self._conn_state_specs()
+                scn_spec = self._conn_scn_specs()
             body = compat.shard_map(
                 body,
                 self.mesh,
                 in_specs=(
-                    P(SWEEP_AXIS), P(SWEEP_AXIS), P(SWEEP_AXIS),
+                    carry_spec, P(SWEEP_AXIS), scn_spec,
                     P(SWEEP_AXIS), P(),
                 ),
-                out_specs=(P(SWEEP_AXIS), P(None, SWEEP_AXIS) if full else P()),
+                out_specs=(
+                    carry_spec, P(None, SWEEP_AXIS) if full else P()
+                ),
                 check_vma=False,
             )
         return jax.jit(body, donate_argnums=(0,))
+
+    def _conn_state_specs(self) -> SimState:
+        row, conn = P(SWEEP_AXIS), P(SWEEP_AXIS, CONN_AXIS)
+        return SimState(
+            pkt=row, qbuf=row, q_head=row, q_len=row, q_served=row,
+            c_inflight=conn, c_next_new=conn, c_delivered=conn,
+            c_rx_pending=conn, c_done=conn, c_done_tick=conn,
+            c_rtx_count=conn, c_rtx=conn, c_rcv=conn, c_cwnd=conn,
+            c_alpha=conn, h_rr=row, lb_state=row, fl=row, fl_head=row,
+            fl_count=row, s_stats=row, as_idx=row, as_count=row,
+        )
+
+    def _conn_scn_specs(self) -> ScenarioArrays:
+        row, conn = P(SWEEP_AXIS), P(SWEEP_AXIS, CONN_AXIS)
+        return ScenarioArrays(
+            conn_src=conn, conn_dst=conn, conn_msg=conn, conn_start=conn,
+            conn_dep=conn, host_conns=row, watch=row, f_queue=row,
+            f_start=row, f_end=row, f_kind=row, f_param=row,
+        )
 
     def _make_quiescent_fn(self, prog: _Program):
         """Per-row fixed-point detector.  A row is quiescent when no packet

@@ -49,7 +49,27 @@ def ecmp_hash(flow_id: jax.Array, ev: jax.Array, salt: jax.Array, nports) -> jax
         ^ ev.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
         ^ salt.astype(jnp.uint32) * jnp.uint32(0xC2B2AE3D)
     )
-    return (h % jnp.uint32(nports)).astype(jnp.int32)
+    return (h % jnp.asarray(nports, jnp.uint32)).astype(jnp.int32)
+
+
+def _mix32_np(x: int) -> int:
+    x &= 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & 0xFFFFFFFF
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+def ecmp_hash_np(flow_id: int, ev: int, salt: int, nports: int) -> int:
+    """Bit-exact numpy/python mirror of ``ecmp_hash`` — the reference the
+    topogen property tests and ``TopologySpec.walk`` use off-device."""
+    h = _mix32_np(
+        ((flow_id * 0x9E3779B1) ^ (ev * 0x85EBCA77) ^ (salt * 0xC2B2AE3D))
+        & 0xFFFFFFFF
+    )
+    return int(h % max(int(nports), 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +85,11 @@ class Topology:
 
     @staticmethod
     def build(cfg: SimConfig) -> "Topology":
+        if cfg.fabric:
+            # generated fabric (netsim/topogen.py): same interface, ONE
+            # table-driven router for every fabric kind — the engine never
+            # branches on what kind of fabric it is running.
+            return TableTopology.build(cfg)
         T, H = cfg.n_tors, cfg.hosts_per_tor
         if cfg.tiers == 2:
             U = cfg.uplinks_per_tor
@@ -98,6 +123,11 @@ class Topology:
             agg_down_base=agg_down,
             t0_down_base=t0_down,
         )
+
+    @property
+    def diameter(self) -> int:
+        """Max queue hops on any src->dst path (host downlink included)."""
+        return 3 if self.cfg.tiers == 2 else 5
 
     # -- helpers for benchmarks / tests (numpy, not jitted) ----------------
     def t0_up_queues(self, tor: int) -> np.ndarray:
@@ -209,4 +239,104 @@ class Topology:
                 ),
             ),
         )
+        return nxt.astype(jnp.int32)
+
+
+class TableTopology:
+    """Table-driven topology built from a generated ``TopologySpec``
+    (netsim/topogen.py) — the SAME consumer interface as the arithmetic
+    ``Topology`` (``n_queues`` / ``t0_down_base`` / ``next_queue`` /
+    ``t0_up_queues`` / ``t0_down_queue`` / ``is_final_hop``), so the
+    engine and sweep run generated fabrics with zero special-casing.
+
+    Routing is one uniform up/down rule over the spec's tables: route down
+    via ``down_next[sw, dst]`` when defined, else spray over the
+    ``up_deg[sw]``-wide candidate block ``up_base[sw, dst] + choice`` with
+    the choice hashed from (flow, EV, per-switch salt plane) — or picked
+    adaptively by least queue length when the LB is switch-adaptive.
+    """
+
+    def __init__(self, cfg: SimConfig, spec):
+        if spec.n_hosts != cfg.n_hosts:
+            raise ValueError(
+                f"fabric {cfg.fabric!r} has {spec.n_hosts} hosts but "
+                f"SimConfig.n_hosts={cfg.n_hosts}; they must agree"
+            )
+        self.cfg = cfg
+        self.spec = spec
+        self.n_queues = spec.n_queues
+        self.t0_down_base = spec.t0_down_base
+        # region bases kept for interface parity (unused by the router)
+        self.t0_up_base = 0
+        self.agg_up_base = -1
+        self.core_down_base = -1
+        self.agg_down_base = -1
+        self._host_sw = jnp.asarray(spec.host_sw)
+        self._q_sw = jnp.asarray(spec.q_sw)
+        self._up_base = jnp.asarray(spec.up_base)
+        self._up_deg = jnp.asarray(spec.up_deg)
+        self._down_next = jnp.asarray(spec.down_next)
+        self._salt = jnp.asarray(spec.salt)
+
+    @staticmethod
+    def build(cfg: SimConfig) -> "TableTopology":
+        from repro.netsim.topogen import build_spec
+
+        return TableTopology(cfg, build_spec(cfg.fabric))
+
+    @property
+    def diameter(self) -> int:
+        """Max queue hops on any src->dst path (host downlink included)."""
+        return self.spec.diameter
+
+    # -- helpers for benchmarks / tests (numpy, not jitted) ----------------
+    def t0_up_queues(self, tor: int) -> np.ndarray:
+        base, size = (int(v) for v in self.spec.sw_up_span[tor])
+        return np.arange(size) + base
+
+    def t0_down_queue(self, host: int) -> int:
+        return self.t0_down_base + host
+
+    def is_final_hop(self, q: jax.Array) -> jax.Array:
+        return q >= self.t0_down_base
+
+    # -- the hop-transition function (jit-traceable) ------------------------
+    def next_queue(
+        self,
+        at_injection: jax.Array,
+        cur_queue: jax.Array,
+        flow_id: jax.Array,
+        ev: jax.Array,
+        src: jax.Array,
+        dst: jax.Array,
+        q_len: jax.Array,
+        adaptive: bool,
+    ) -> jax.Array:
+        NH, NQ, NS = self.cfg.n_hosts, self.n_queues, self.spec.n_switches
+        sw = jnp.where(
+            at_injection,
+            self._host_sw[jnp.clip(src, 0, NH - 1)],
+            self._q_sw[jnp.clip(cur_queue, 0, NQ - 1)],
+        )
+        # garbage lanes (padded arrivals, final-hop queues) clip to a real
+        # switch; their outputs are masked off by the caller's a_valid
+        sw = jnp.clip(sw, 0, NS - 1)
+        dstc = jnp.clip(dst, 0, NH - 1)
+        down_q = self._down_next[sw, dstc]
+        base = self._up_base[sw, dstc]
+        deg = self._up_deg[sw]
+        choice = ecmp_hash(
+            flow_id, ev, self._salt[sw], jnp.maximum(deg, 1)
+        )
+        if adaptive:
+            maxd = max(self.spec.max_up_deg, 1)
+            cand = base[:, None] + jnp.arange(maxd, dtype=jnp.int32)
+            lens = q_len[jnp.clip(cand, 0, NQ - 1)]
+            lens = jnp.where(
+                jnp.arange(maxd, dtype=jnp.int32)[None, :] < deg[:, None],
+                lens,
+                jnp.int32(2**30),
+            )
+            choice = jnp.argmin(lens, axis=1).astype(jnp.int32)
+        nxt = jnp.where(down_q >= 0, down_q, base + choice)
         return nxt.astype(jnp.int32)

@@ -1,0 +1,197 @@
+"""Scale-mode lock: conn-sharded sweeps, the sparse active set, footprint.
+
+The million-connection scale mode (ARCHITECTURE.md §10) is opt-in via
+``SimConfig.conn_sharding`` and must be *bit-invisible* at figure scales:
+
+* a conn-sharded sweep row (2-D (rows, conns) mesh, ``conn_devices > 1``)
+  is bit-identical to its unsharded ``serial_sim`` reference — verified in
+  a 4-device subprocess across >= 2 buckets, including a frozen-horizon
+  row and a failure schedule;
+* the sparse active set tracks exactly the non-FREE packet slots, and
+  post-quiescent ticks do zero packet-table work (the final state is a
+  bit-exact fixed point with an empty active set);
+* REPS per-conn state bit-packs at <= 25 B/conn, measured end-to-end at
+  1e5 connections (the 1e6 point stays in benchmarks/table1_footprint.py);
+* the auto packet-table sizing raises a clear ValueError instead of
+  silently overflowing int32 near 1e6 conns.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.netsim.config import SimConfig, checked_auto_pkt_slots
+
+
+SUBPROCESS_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, numpy as np
+    from repro.netsim.config import SimConfig
+    from repro.netsim.sweep import SweepCase, SweepEngine
+    from repro.netsim import workloads
+    from repro.netsim.failures import FailureSchedule
+
+    nh = 16
+    cfg = SimConfig(n_hosts=nh, hosts_per_tor=4, uplinks_per_tor=4,
+                    rto_ticks=120, conn_sharding=True)
+    fs = FailureSchedule(
+        queue=np.array([16, 17], np.int32),
+        start=np.array([50, 80], np.int32),
+        end=np.array([150, 200], np.int32),
+        kind=np.array([0, 1], np.int32),
+        param=np.array([0, 0], np.int32),
+    )
+    cases = [
+        # merges with b -> b becomes the frozen-horizon row of the bucket
+        SweepCase("a/reps", workloads.permutation(nh, msg_pkts=24, seed=3),
+                  "reps", ticks=400, failures=fs, seeds=(0, 1)),
+        SweepCase("b/ecmp", workloads.permutation(nh, msg_pkts=16, seed=5),
+                  "ecmp", ticks=300, seeds=(7,)),
+        # switch-adaptive routing is a static property -> second bucket
+        SweepCase("c/adaptive",
+                  workloads.permutation(nh, msg_pkts=12, seed=9),
+                  "adaptive_roce", ticks=250, seeds=(1,)),
+    ]
+    eng = SweepEngine(cfg, cases, conn_devices=2)
+    assert len(eng.plan.buckets) >= 2, eng.plan.describe()
+    res = eng.run(collect="full")
+    checked = 0
+    for case in cases:
+        for si, seed in enumerate(case.seeds):
+            st = res.state_for(case.name, si)
+            tr = res.trace_for(case.name, si)
+            ref = eng.serial_sim(case.name, seed=seed)
+            rs, rt = jax.block_until_ready(ref.run(case.ticks))
+            for f in rs._fields:
+                if f == "lb_state":
+                    continue
+                assert np.array_equal(
+                    np.asarray(getattr(st, f)), np.asarray(getattr(rs, f))
+                ), (case.name, si, f)
+            for f in rt._fields:
+                assert np.array_equal(
+                    np.asarray(getattr(tr, f)), np.asarray(getattr(rt, f))
+                ), (case.name, si, "trace", f)
+            checked += 1
+
+    # guard rails: opt-in enforcement and the summary-mode restriction
+    try:
+        SweepEngine(cfg.replace(conn_sharding=False), cases, conn_devices=2)
+        raise AssertionError("conn_devices>1 without conn_sharding must raise")
+    except ValueError as e:
+        assert "conn_sharding" in str(e)
+    try:
+        eng.run(collect="summary")
+        raise AssertionError("summary collect under conn sharding must raise")
+    except ValueError as e:
+        assert "conn_devices" in str(e)
+    print(json.dumps({"buckets": len(eng.plan.buckets), "rows_checked": checked}))
+    """
+)
+
+
+def test_conn_sharded_sweep_bit_parity_subprocess():
+    """>= 2 buckets of a conn-sharded (rows=2, conns=2) sweep — with a
+    failure schedule and a frozen-horizon row — are bit-identical to their
+    serial references, and the opt-in/summary guard rails hold."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", SUBPROCESS_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["buckets"] >= 2
+    assert out["rows_checked"] == 4
+
+
+def test_active_set_empty_and_fixed_point_after_quiescence():
+    """Once every message completes, the sparse active set is empty, the
+    free list holds every slot, and further ticks are a bit-exact no-op —
+    post-quiescent ticks do zero packet-table work."""
+    from repro.core.load_balancers import make_lb
+    from repro.netsim import workloads
+    from repro.netsim.engine import Simulator
+
+    cfg = SimConfig(n_hosts=16, hosts_per_tor=4, uplinks_per_tor=4,
+                    rto_ticks=120, conn_sharding=True)
+    wl = workloads.permutation(16, msg_pkts=24, seed=3)
+    sim = Simulator(cfg, wl, make_lb("reps", evs_size=cfg.evs_size), seed=7)
+    s1, _ = jax.block_until_ready(sim.run(550))
+    assert bool(np.asarray(s1.c_done).all()), "workload must finish by t=550"
+    assert int(s1.as_count) == 0
+    assert int(s1.fl_count) == sim.NP
+    assert (np.asarray(s1.as_idx) == sim.NP).all()  # all sentinel-padded
+    s2, _ = jax.block_until_ready(sim.run(600))
+    for f in s1._fields:
+        if f == "lb_state":
+            continue
+        assert np.array_equal(
+            np.asarray(getattr(s1, f)), np.asarray(getattr(s2, f))
+        ), f"post-quiescent tick mutated {f}"
+    for a, b in zip(
+        jax.tree_util.tree_leaves(s1.lb_state),
+        jax.tree_util.tree_leaves(s2.lb_state),
+    ):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_active_set_tracks_non_free_slots_mid_flight():
+    """Mid-run (traffic still flying), as_idx is exactly the ascending set
+    of non-FREE packet slots and as_count + fl_count == NP."""
+    from repro.core.load_balancers import make_lb
+    from repro.netsim import workloads
+    from repro.netsim.engine import Simulator
+
+    cfg = SimConfig(n_hosts=16, hosts_per_tor=4, uplinks_per_tor=4,
+                    rto_ticks=120, conn_sharding=True)
+    wl = workloads.permutation(16, msg_pkts=24, seed=3)
+    sim = Simulator(cfg, wl, make_lb("reps", evs_size=cfg.evs_size), seed=7)
+    st, _ = jax.block_until_ready(sim.run(40))
+    as_idx = np.asarray(st.as_idx)
+    live = as_idx[as_idx < sim.NP]
+    assert len(live) > 0, "expected in-flight packets at t=40"
+    assert (np.diff(live) > 0).all(), "as_idx must stay ascending"
+    nonfree = np.nonzero(np.asarray(st.pkt[0]) != 0)[0]
+    assert np.array_equal(live, nonfree)
+    assert int(st.as_count) == len(live) == sim.NP - int(st.fl_count)
+
+
+def test_footprint_1e5_conns_under_25_bytes():
+    """Measured end-to-end: 1e5 conns of live REPS state bit-pack at
+    <= 25 B/conn with a lossless round trip (asserted inside
+    measure_scale; the 1e6 point runs as a benchmark, not in tier 1)."""
+    from benchmarks.common import Rows
+    from benchmarks.table1_footprint import measure_scale
+
+    rows = Rows()
+    bpc = measure_scale(100_000, rows)
+    assert bpc <= 25.0
+    assert any("scale/footprint_conns100000" in str(r) for r in rows.records)
+
+
+def test_auto_pkt_slots_int32_overflow_raises():
+    """The auto packet-table sizing near 1e6 conns must raise a clear
+    ValueError naming its inputs, never silently wrap int32 (the dense
+    Simulator path funnels through this rule; the conn-sharded scale mode
+    sizes NP = min(conn-auto, lifetime bound) instead, which is what makes
+    10^6 conns representable at all)."""
+    # figure scale: fine and exact
+    assert checked_auto_pkt_slots(1024, 170, 128) < 2**31
+    # a pinned size is respected but still validated
+    assert checked_auto_pkt_slots(1024, 170, 128, pin=4096) == 4096
+    with pytest.raises(ValueError, match="int32") as e:
+        checked_auto_pkt_slots(2**26, 170, 128)
+    assert "n_conns" in str(e.value)  # names its inputs
+    with pytest.raises(ValueError, match="int32"):
+        checked_auto_pkt_slots(1024, 170, 128, pin=2**40)

@@ -1,0 +1,192 @@
+"""Property tests for the fabric generator (netsim/topogen.py).
+
+Every generated fabric must satisfy the structural contract the engine
+relies on — queue regions partition the id space exactly once, up blocks
+respect declared port degrees, and every (src, dst, flow, EV) routes to
+the destination's host downlink within the fabric diameter — including
+the degenerate 1-pod / 1-uplink / 1-ToR corners.  The clos3 generator is
+additionally pinned bit-exactly against the built-in arithmetic 3-tier
+fat-tree through a full engine run.
+"""
+import jax
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis; shim keeps tests live
+    from _hypothesis_fallback import given, settings, st
+
+from repro.netsim.topogen import (
+    GENERATORS, RAIL_SALT, build_spec, fabric_str, parse_fabric,
+)
+
+# small random fabrics of every kind (kept tiny: the walk test is
+# exhaustive over (src, dst) pairs)
+CLOS3 = st.tuples(
+    st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+    st.integers(1, 3), st.integers(1, 3),
+)
+RAIL = st.tuples(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4))
+MESH = st.tuples(st.integers(1, 4), st.integers(1, 3), st.integers(1, 3))
+
+
+def _specs(clos, rail, mesh):
+    p, t, h, a, u = clos
+    return [
+        build_spec(fabric_str("clos3", pods=p, tors=t, hosts=h, aggs=a, up=u)),
+        build_spec(fabric_str("rail", tors=rail[0], hosts=rail[1], rails=rail[2])),
+        build_spec(fabric_str("mesh", tors=mesh[0], hosts=mesh[1], planes=mesh[2])),
+    ]
+
+
+@settings(max_examples=25, deadline=None)
+@given(CLOS3, RAIL, MESH)
+def test_regions_partition_queue_space(clos, rail, mesh):
+    """Queue-id regions cover [0, NQ) exactly once; host downlinks are the
+    final region with one queue per host (independent re-check of what
+    validate() enforces, so a validator regression cannot hide one)."""
+    for spec in _specs(clos, rail, mesh):
+        covered = np.zeros(spec.n_queues, np.int64)
+        for r in spec.regions:
+            assert 0 <= r.base and r.base + r.size <= spec.n_queues
+            covered[r.base : r.base + r.size] += 1
+        assert (covered == 1).all(), spec.name
+        tail = max(spec.regions, key=lambda r: r.base)
+        assert tail.base == spec.t0_down_base
+        assert tail.size == spec.n_hosts
+        assert tail.base + tail.size == spec.n_queues
+        assert (spec.q_sw[spec.t0_down_base :] == -1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(CLOS3, RAIL, MESH)
+def test_port_degrees_respected(clos, rail, mesh):
+    """Up blocks stay inside their switch's declared span and match the
+    declared degree; every up candidate feeds a *different* switch than
+    the one spraying (no self-loops)."""
+    for spec in _specs(clos, rail, mesh):
+        for sw in range(spec.n_switches):
+            deg = int(spec.up_deg[sw])
+            base, size = (int(v) for v in spec.sw_up_span[sw])
+            needs_up = spec.down_next[sw] < 0
+            if not needs_up.any():
+                continue
+            assert deg >= 1, (spec.name, sw)
+            for dst in np.nonzero(needs_up)[0][:8]:
+                b = int(spec.up_base[sw, dst])
+                assert base <= b and b + deg <= base + size
+                feeds = spec.q_sw[b : b + deg]
+                assert (feeds != sw).all(), (spec.name, sw, int(dst))
+                assert (feeds >= 0).all() and (feeds < spec.n_switches).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(CLOS3, RAIL, MESH, st.integers(0, 2**30))
+def test_every_pair_routes_to_destination(clos, rail, mesh, seed):
+    """walk() reaches dst's host downlink for every (src, dst) pair and a
+    sampled (flow, EV), visiting only valid queues, within the declared
+    diameter (walk raises beyond it)."""
+    rng = np.random.default_rng(seed)
+    for spec in _specs(clos, rail, mesh):
+        for src in range(spec.n_hosts):
+            for dst in range(spec.n_hosts):
+                flow = int(rng.integers(0, 1 << 16))
+                ev = int(rng.integers(0, 1 << 16))
+                path = spec.walk(src, dst, flow, ev)
+                assert path[-1] == spec.t0_down_base + dst
+                assert len(path) <= spec.diameter + 1
+                for q in path:
+                    assert 0 <= q < spec.n_queues
+
+
+def test_degenerate_corners():
+    """1-pod / 1-uplink / 1-ToR fabrics build, validate, and route."""
+    corners = [
+        fabric_str("clos3", pods=1, tors=1, hosts=1, aggs=1, up=1),
+        fabric_str("clos3", pods=1, tors=2, hosts=2, aggs=1, up=1),
+        fabric_str("rail", tors=1, hosts=1, rails=1),
+        fabric_str("rail", tors=2, hosts=1, rails=1),
+        fabric_str("mesh", tors=1, hosts=2, planes=1),  # no mesh links at all
+        fabric_str("mesh", tors=2, hosts=1, planes=1),
+    ]
+    for s in corners:
+        spec = build_spec(s)
+        spec.validate()
+        for src in range(spec.n_hosts):
+            for dst in range(spec.n_hosts):
+                path = spec.walk(src, dst, 7, 11)
+                assert path[-1] == spec.t0_down_base + dst, s
+
+
+def test_rail_shares_one_salt_plane():
+    """All ToRs of a rail fabric share the RAIL_SALT plane, so one
+    (flow, EV) lands on the same rail at every ToR (the rail-affinity
+    property); clos3 salts per switch instead."""
+    spec = build_spec(fabric_str("rail", tors=4, hosts=2, rails=4))
+    assert (spec.salt[: spec.n_tors] == RAIL_SALT).all()
+    for flow, ev in [(3, 9), (12, 101), (77, 4096)]:
+        rails = set()
+        for src in range(spec.n_hosts):
+            dst = (src + spec.params["hosts"]) % spec.n_hosts  # cross-tor
+            q = spec.walk(src, dst, flow, ev)[0]
+            rails.add(int(spec.q_sw[q]))
+        assert len(rails) == 1, "same (flow, EV) must pick one rail fabric-wide"
+    clos = build_spec(fabric_str("clos3", pods=2, tors=2, hosts=2, aggs=2, up=2))
+    assert len(set(int(s) for s in clos.salt[: clos.n_tors])) == clos.n_tors
+
+
+def test_parse_fabric_errors_and_roundtrip():
+    import pytest
+
+    for kind, want in GENERATORS.items():
+        s = fabric_str(kind, **{k: 2 for k in want})
+        assert parse_fabric(s) == (kind, {k: 2 for k in want})
+    with pytest.raises(ValueError, match="unknown fabric kind"):
+        parse_fabric("torus:x=2")
+    with pytest.raises(ValueError, match="malformed"):
+        parse_fabric("rail:tors=two")
+    with pytest.raises(ValueError, match="missing"):
+        parse_fabric("rail:tors=2")
+    with pytest.raises(ValueError, match="unexpected"):
+        parse_fabric("mesh:tors=2,hosts=2,planes=1,extra=3")
+    with pytest.raises(ValueError, match="divide evenly|>= 1"):
+        build_spec("rail:tors=0,hosts=2,rails=1")
+
+
+def test_clos3_bit_matches_arithmetic_three_tier():
+    """An engine run on the generated clos3 tables is bit-identical to the
+    built-in arithmetic 3-tier fat-tree with matching parameters — the
+    'no special-casing' contract made executable."""
+    from repro.core.load_balancers import make_lb
+    from repro.netsim import workloads
+    from repro.netsim.config import SimConfig
+    from repro.netsim.engine import Simulator
+
+    base = dict(
+        n_hosts=16, hosts_per_tor=2, rto_ticks=120, evs_size=256,
+        tors_per_pod=2, aggs_per_pod=2, agg_uplinks=2,
+    )
+    cfg_a = SimConfig(tiers=3, **base)
+    cfg_t = SimConfig(
+        tiers=3, fabric=fabric_str(
+            "clos3", pods=4, tors=2, hosts=2, aggs=2, up=2
+        ), **base,
+    )
+    wl = workloads.permutation(16, msg_pkts=12, seed=2)
+    out = []
+    for cfg in (cfg_a, cfg_t):
+        sim = Simulator(
+            cfg, wl, make_lb("reps", evs_size=cfg.evs_size), seed=5
+        )
+        out.append(jax.block_until_ready(sim.run(300)))
+    (sa, ta), (st_, tt) = out
+    for f in sa._fields:
+        if f == "lb_state":
+            continue
+        assert np.array_equal(
+            np.asarray(getattr(sa, f)), np.asarray(getattr(st_, f))
+        ), f
+    for f in ta._fields:
+        assert np.array_equal(
+            np.asarray(getattr(ta, f)), np.asarray(getattr(tt, f))
+        ), f
